@@ -1,0 +1,76 @@
+//! Cross-DPU comparison: run the full microbenchmark suite (compute /
+//! memory / storage / network) on all four platforms through the
+//! framework and print the §5–§6 summary matrix.
+//!
+//! ```sh
+//! cargo run --release --offline --example dpu_compare
+//! ```
+
+use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
+use dpbento::util::bench::fmt_sig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BoxConfig::parse(
+        r#"{
+          "name": "dpu_compare",
+          "platforms": ["host", "bf2", "bf3", "octeon"],
+          "tasks": [
+            {"task": "compute",
+             "params": {"data_type": ["int8", "fp64"], "operation": ["add", "mul", "div"]},
+             "metrics": ["ops_per_sec"]},
+            {"task": "memory",
+             "params": {"operation": ["read"], "pattern": ["random", "sequential"],
+                        "object_size": [16384, 1073741824], "threads": [1]},
+             "metrics": ["throughput_ops"]},
+            {"task": "storage",
+             "params": {"io_type": ["read"], "pattern": ["sequential"],
+                        "access_size": [4194304], "depth": [64], "threads": [4]},
+             "metrics": ["throughput_mbps", "avg_lat_us"]},
+            {"task": "network",
+             "params": {"message_size": [32768], "depth": [128], "threads": [4]},
+             "metrics": ["median_lat_us", "throughput_gbps"]}
+          ]
+        }"#,
+    )?;
+
+    let report = run_box(&Registry::builtin(), &cfg, &ExecOptions::default())?;
+    print!("{}", report.render());
+
+    // condensed "who wins" matrix (the paper's findings boxes)
+    println!("=== summary: DPU vs host (paper §5–§6 findings) ===");
+    let find = |task: &str, platform: &str, pred: &dyn Fn(&str) -> bool, metric: &str| -> f64 {
+        report
+            .tasks
+            .iter()
+            .filter(|t| t.task == task && t.platform.name() == platform)
+            .flat_map(|t| &t.records)
+            .find(|r| pred(&format!("{:?}", r.spec)))
+            .map(|r| r.result[metric])
+            .unwrap_or(f64::NAN)
+    };
+    let fp64_host = find("compute", "host", &|s| s.contains("fp64") && s.contains("\"add\""), "ops_per_sec");
+    let fp64_bf3 = find("compute", "bf3", &|s| s.contains("fp64") && s.contains("\"add\""), "ops_per_sec");
+    println!(
+        "  fp64 add: bf3 {} vs host {} -> DPU wins: {}",
+        fmt_sig(fp64_bf3),
+        fmt_sig(fp64_host),
+        fp64_bf3 > fp64_host
+    );
+    let st_host = find("storage", "host", &|_| true, "throughput_mbps");
+    let st_bf2 = find("storage", "bf2", &|_| true, "throughput_mbps");
+    println!(
+        "  4 MB seq read: host {} MB/s vs bf2 eMMC {} MB/s -> {}x gap",
+        fmt_sig(st_host),
+        fmt_sig(st_bf2),
+        fmt_sig(st_host / st_bf2)
+    );
+    let net_host = find("network", "host", &|_| true, "throughput_gbps");
+    let net_bf2 = find("network", "bf2", &|_| true, "throughput_gbps");
+    println!(
+        "  TCP 4 threads: host {} Gbps vs bf2 {} Gbps (wimpy-core stack)",
+        fmt_sig(net_host),
+        fmt_sig(net_bf2)
+    );
+    anyhow::ensure!(report.failure_count() == 0);
+    Ok(())
+}

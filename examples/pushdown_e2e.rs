@@ -1,0 +1,125 @@
+//! End-to-end driver (DESIGN.md §6): the full three-layer stack on a real
+//! small workload — proving L1 (Pallas kernel) + L2 (JAX pipeline) +
+//! L3 (Rust coordinator) compose.
+//!
+//! Generates a TPC-H-like lineitem table, loads the AOT-compiled
+//! `pushdown_scan` / `q6_agg` / `q1_groupby` artifacts through PJRT, runs
+//! the real scans, cross-checks every number against the native Rust
+//! oracle, and reports the paper's headline Fig. 13 metric (Mtuples/s and
+//! speedup-over-baseline per platform).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example pushdown_e2e
+//! ```
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use dpbento::db::exec;
+use dpbento::db::Gen;
+use dpbento::platform::PlatformId;
+use dpbento::runtime::{artifact, Runtime};
+use dpbento::tasks::pred_pushdown::{pushdown_mtps, scan_native, scan_pjrt, BASELINE_MTPS};
+use dpbento::util::bench::BenchTable;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== dpBento end-to-end: disaggregated-storage predicate pushdown ===\n");
+
+    // L3: generate the workload (SF2 → 120k materialized rows, 1/100 scale;
+    // at least one full 65536-row kernel block plus a padded tail)
+    let gen = Gen::new(7, 100);
+    let li = gen.lineitem(2.0);
+    let qty = li.col("l_quantity").as_f32().unwrap();
+    let price = li.col("l_extendedprice").as_f32().unwrap();
+    let disc = li.col("l_discount").as_f32().unwrap();
+    println!("workload: lineitem SF2, {} rows materialized", li.rows());
+
+    // L1+L2: load the AOT JAX/Pallas artifacts and compile on PJRT
+    let rt = Runtime::load(artifact::default_dir()).map_err(|e| {
+        anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first")
+    })?;
+    println!(
+        "runtime: PJRT {} — {} rows/invocation\n",
+        rt.platform_name(),
+        rt.rows()
+    );
+
+    // --- pushdown scan: PJRT vs native oracle over several selectivities
+    let mut table = BenchTable::new("pushdown scan: PJRT vs native oracle", "count / MTPS")
+        .columns(&["qualified", "native_q", "pjrt_MTPS", "native_MTPS"]);
+    for sel in [0.001, 0.01, 0.1, 0.5] {
+        let lo = 25.0f32;
+        let hi = lo + (49.0 * sel) as f32;
+        let pjrt = scan_pjrt(&rt, qty, price, disc, lo, hi)?;
+        let native = scan_native(qty, price, disc, lo, hi);
+        anyhow::ensure!(
+            pjrt.qualified == native.qualified,
+            "count mismatch at sel={sel}: pjrt {} vs native {}",
+            pjrt.qualified,
+            native.qualified
+        );
+        anyhow::ensure!(
+            (pjrt.revenue - native.revenue).abs() <= 1e-4 * native.revenue.abs().max(1.0),
+            "revenue mismatch at sel={sel}"
+        );
+        table.row_f(
+            format!("sel={sel}"),
+            &[
+                pjrt.qualified as f64,
+                native.qualified as f64,
+                pjrt.rows as f64 / pjrt.seconds / 1e6,
+                native.rows as f64 / native.seconds / 1e6,
+            ],
+        );
+    }
+    table.finish("e2e_scan_check");
+    println!("scan counts + revenue agree between the Pallas kernel and the Rust oracle\n");
+
+    // --- q6 fused aggregate through the kernel vs oracle
+    let n = rt.rows();
+    let (q, p, d) = (&qty[..n], &price[..n], &disc[..n]);
+    let kernel_rev = rt.q6_agg(q, p, d, [24.0, 0.05, 0.07])?;
+    let (m1, _) = exec::filter_range_f32(q, f32::MIN, 24.0);
+    let (m2, _) = exec::filter_range_f32(d, 0.05, 0.0700001);
+    let mask = exec::mask_and(&m1, &m2);
+    let (oracle_rev, _) = exec::sum_product_masked(p, d, &mask);
+    let rel = (kernel_rev as f64 - oracle_rev).abs() / oracle_rev.max(1.0);
+    println!("q6 revenue: kernel {kernel_rev:.2} vs oracle {oracle_rev:.2} (rel err {rel:.2e})");
+    anyhow::ensure!(rel < 1e-4, "q6 kernel disagrees with oracle");
+
+    // --- q1 group-by through the MXU-shaped kernel vs oracle
+    let li_fs = li.col("l_flagstatus").as_i32().unwrap();
+    let keys: Vec<i32> = li_fs[..n].to_vec();
+    let measures = rt.manifest.q1_measures;
+    let mut vals = vec![0.0f32; n * measures];
+    for i in 0..n {
+        vals[i * measures] = qty[i];
+        vals[i * measures + 1] = price[i];
+        vals[i * measures + 2] = disc[i];
+        vals[i * measures + 3] = 1.0;
+    }
+    let out = rt.q1_groupby(&keys, &vals)?;
+    let total_rows: f32 = out.counts.iter().sum();
+    anyhow::ensure!(total_rows as usize == n, "q1 counts must cover all rows");
+    println!(
+        "q1 groupby: {} groups, counts sum {} == rows {} ✓\n",
+        out.groups, total_rows, n
+    );
+
+    // --- the paper's headline: Fig. 13 per-platform speedups
+    let mut fig13 = BenchTable::new(
+        "Fig. 13 headline: pushdown throughput (SF10, sel 1%)",
+        "Mtuples/s",
+    )
+    .columns(&["1 core", "all cores", "speedup"]);
+    fig13.row_f("baseline", &[BASELINE_MTPS, BASELINE_MTPS, 1.0]);
+    for p in [PlatformId::Bf2, PlatformId::Bf3, PlatformId::OcteonTx2] {
+        let full = pushdown_mtps(p, p.spec().cores);
+        fig13.row_f(
+            p.name(),
+            &[pushdown_mtps(p, 1), full, full / BASELINE_MTPS],
+        );
+    }
+    fig13.finish("e2e_fig13_headline");
+
+    println!("\nend-to-end OK: all three layers composed and cross-checked");
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""dpBento build-time Python package: Pallas kernels (L1), JAX pipelines
+(L2), and AOT lowering to HLO-text artifacts for the Rust coordinator."""

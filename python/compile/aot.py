@@ -1,0 +1,104 @@
+"""AOT lowering: JAX pipelines -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids, so text round-trips cleanly.  Lowering goes through
+stablehlo -> XlaComputation with ``return_tuple=True``; the Rust side
+unwraps the tuple (see rust/src/runtime/).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).  Usage:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+N = model.ROWS
+
+#: entry point name -> (fn, example args).  Shapes here are the binary
+#: contract with rust/src/runtime/artifact.rs — keep in sync with the
+#: manifest written below.
+ENTRY_POINTS = {
+    "pushdown_scan": (
+        model.pushdown_pipeline,
+        (f32(N), f32(N), f32(N), f32(1), f32(1)),
+    ),
+    # §Perf: mask-free aggregate variant of the pushdown scan
+    "pushdown_agg": (
+        model.pushdown_agg_pipeline,
+        (f32(N), f32(N), f32(N), f32(1), f32(1)),
+    ),
+    "q6_agg": (model.q6_pipeline, (f32(N), f32(N), f32(N), f32(3))),
+    "q1_groupby": (
+        model.q1_pipeline,
+        (i32(N), f32(N, model.Q1_MEASURES)),
+    ),
+}
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "rows": model.ROWS,
+        "block_rows": model.BLOCK_ROWS,
+        "q1_groups": model.Q1_GROUPS,
+        "q1_measures": model.Q1_MEASURES,
+        "entry_points": {},
+    }
+    for name, (fn, args) in ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entry_points"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+            "hlo_chars": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for dpBento's data-processing hot paths.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO contains plain XLA ops that the
+CPU PJRT client (the ``xla`` crate, xla_extension 0.5.1) can execute.  Real
+TPU lowering would emit Mosaic custom-calls that the CPU plugin cannot run;
+see DESIGN.md "Hardware adaptation" for the VMEM/MXU mapping story.
+
+Kernels:
+  - :mod:`scan_filter` -- predicate evaluation over lineitem-style columns
+    (the predicate-pushdown hot spot, paper section 3.5.1 / Fig. 13).
+  - :mod:`agg` -- fused masked aggregation (TPC-H Q6-style revenue) and
+    one-hot-matmul group-by aggregation (TPC-H Q1-style), the DBMS task's
+    compute core (paper section 3.6 / Fig. 15).
+
+Correctness oracle: :mod:`ref` (pure jnp), exercised by
+``python/tests/test_kernels.py`` with hypothesis sweeps.
+"""
+
+from . import agg, ref, scan_filter  # noqa: F401

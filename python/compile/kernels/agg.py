@@ -1,0 +1,104 @@
+"""Pallas aggregation kernels (Layer 1).
+
+Two kernels back the DBMS task's query pipelines (paper section 3.6):
+
+  - :func:`q6_fused` — TPC-H Q6-style *fused* predicate + multiply + reduce.
+    One pass over the columns, one partial sum per VMEM block; no
+    intermediate mask is ever materialized in HBM.
+  - :func:`q1_groupby` — TPC-H Q1-style group-by via one-hot contraction.
+    The [block_rows, G] one-hot times [block_rows, K] measure matrix is an
+    MXU-shaped matmul on real TPU hardware; on the CPU PJRT client it runs
+    through interpret-mode lowering.
+
+Both tile rows into VMEM blocks with ``BlockSpec`` and leave the tiny
+cross-block reduction to the L2 jnp caller (XLA fuses it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8192
+
+
+def _q6_kernel(params_ref, qty_ref, price_ref, disc_ref, psum_ref):
+    """params = [qty_hi, disc_lo, disc_hi]; one partial revenue per block."""
+    qty = qty_ref[...]
+    disc = disc_ref[...]
+    m = (qty < params_ref[0]) & (disc >= params_ref[1]) & (disc <= params_ref[2])
+    psum_ref[0] = jnp.sum(
+        price_ref[...] * disc * m.astype(jnp.float32), dtype=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def q6_fused(qty, price, disc, params, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused Q6 predicate+aggregate.  params = f32[3] = [qty_hi, disc_lo, disc_hi].
+
+    Returns partial sums f32[num_blocks]; total revenue = their sum.
+    """
+    (n,) = qty.shape
+    assert n % block_rows == 0, (n, block_rows)
+    num_blocks = n // block_rows
+
+    col_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+    params_spec = pl.BlockSpec((3,), lambda i: (0,))
+    slot_spec = pl.BlockSpec((1,), lambda i: (i,))
+
+    return pl.pallas_call(
+        _q6_kernel,
+        grid=(num_blocks,),
+        in_specs=[params_spec, col_spec, col_spec, col_spec],
+        out_specs=slot_spec,
+        out_shape=jax.ShapeDtypeStruct((num_blocks,), jnp.float32),
+        interpret=True,
+    )(params, qty, price, disc)
+
+
+def _q1_kernel(key_ref, vals_ref, sums_ref, counts_ref, *, num_groups: int):
+    """One-hot contraction over one row-block.
+
+    sums[g, k]  += sum_n onehot[n, g] * vals[n, k]   (an MXU matmul on TPU)
+    counts[g]   += sum_n onehot[n, g]
+    """
+    key = key_ref[...]
+    onehot = (key[:, None] == jnp.arange(num_groups, dtype=key.dtype)[None, :]).astype(
+        jnp.float32
+    )  # [B, G]
+    sums_ref[0, ...] = jnp.dot(onehot.T, vals_ref[...])  # [G, K]
+    counts_ref[0, ...] = jnp.sum(onehot, axis=0)  # [G]
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "block_rows"))
+def q1_groupby(key, vals, *, num_groups: int, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Group-by aggregate.  key int32[N] in [0,G); vals f32[N, K].
+
+    Returns (partial_sums f32[num_blocks, G, K], partial_counts f32[num_blocks, G]);
+    final result = sum over the block axis.
+    """
+    (n,) = key.shape
+    _, k = vals.shape
+    assert n % block_rows == 0, (n, block_rows)
+    num_blocks = n // block_rows
+
+    key_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+    vals_spec = pl.BlockSpec((block_rows, k), lambda i: (i, 0))
+    sums_spec = pl.BlockSpec((1, num_groups, k), lambda i: (i, 0, 0))
+    counts_spec = pl.BlockSpec((1, num_groups), lambda i: (i, 0))
+
+    kernel = functools.partial(_q1_kernel, num_groups=num_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[key_spec, vals_spec],
+        out_specs=[sums_spec, counts_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_blocks, num_groups, k), jnp.float32),
+            jax.ShapeDtypeStruct((num_blocks, num_groups), jnp.float32),
+        ],
+        interpret=True,
+    )(key, vals)

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+These are the semantics the L1 kernels must match bit-for-bit (float32
+accumulation order may differ across block boundaries, so tests use
+``assert_allclose`` with a tight tolerance rather than exact equality).
+
+The predicate mirrors the paper's predicate-pushdown task (section 3.5.1):
+a range predicate over ``l_quantity``-style numeric columns, selectivity
+controlled by the ``[lo, hi)`` bounds.  The aggregations mirror TPC-H Q6
+(masked revenue sum) and Q1 (group-by aggregate over a small key domain).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def predicate_mask(qty: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Range predicate ``lo <= qty < hi`` -> int32 {0,1} mask."""
+    return ((qty >= lo) & (qty < hi)).astype(jnp.int32)
+
+
+def pushdown_scan(qty, price, disc, lo, hi):
+    """Predicate-pushdown scan: mask + qualified count + qualified revenue.
+
+    Returns ``(mask int32[N], count int32[], revenue f32[])`` where revenue
+    is ``sum(price * disc)`` over qualifying rows — the quantity a storage-
+    side DPU would return to the compute server instead of the full table.
+    """
+    mask = predicate_mask(qty, lo, hi)
+    fmask = mask.astype(jnp.float32)
+    count = jnp.sum(mask, dtype=jnp.int32)
+    revenue = jnp.sum(price * disc * fmask, dtype=jnp.float32)
+    return mask, count, revenue
+
+
+def q6_revenue(qty, price, disc, qty_hi, disc_lo, disc_hi):
+    """TPC-H Q6-style fused predicate + aggregate.
+
+    revenue = sum(price * disc) where qty < qty_hi and disc in [disc_lo, disc_hi].
+    """
+    m = (qty < qty_hi) & (disc >= disc_lo) & (disc <= disc_hi)
+    return jnp.sum(price * disc * m.astype(jnp.float32), dtype=jnp.float32)
+
+
+def q1_groupby(key, vals, num_groups: int):
+    """TPC-H Q1-style group-by aggregation via one-hot contraction.
+
+    ``key``: int32[N] in [0, num_groups); ``vals``: f32[N, K] measure
+    columns.  Returns ``(sums f32[G, K], counts f32[G])``.
+    """
+    onehot = (key[:, None] == jnp.arange(num_groups, dtype=key.dtype)[None, :]).astype(
+        jnp.float32
+    )  # [N, G]
+    sums = jnp.einsum("ng,nk->gk", onehot, vals)
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts

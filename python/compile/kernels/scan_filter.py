@@ -1,0 +1,102 @@
+"""Pallas predicate-scan kernel (Layer 1).
+
+The predicate-pushdown hot spot (paper section 3.5.1, Fig. 13): evaluate a
+range predicate over a block of ``lineitem``-style columns and emit the
+selection mask plus per-block partial aggregates, so the Rust coordinator
+can stream row-blocks through one compiled executable and only materialize
+qualifying tuples.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): the row dimension is tiled
+into ``block_rows``-sized VMEM blocks via ``BlockSpec``; each grid step
+streams one block HBM->VMEM, does compare+select+reduce on the VPU, and
+writes one partial-sum slot.  ``interpret=True`` keeps the lowered HLO
+executable on the CPU PJRT client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8192
+
+
+def _scan_kernel(lo_ref, hi_ref, qty_ref, price_ref, disc_ref, mask_ref, psum_ref, pcnt_ref):
+    """One grid step: predicate over one row-block.
+
+    Outputs: per-row int32 mask, plus this block's partial revenue sum and
+    partial qualifying count (one slot per grid step).
+    """
+    qty = qty_ref[...]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    m = (qty >= lo) & (qty < hi)
+    fm = m.astype(jnp.float32)
+    mask_ref[...] = m.astype(jnp.int32)
+    psum_ref[0] = jnp.sum(price_ref[...] * disc_ref[...] * fm, dtype=jnp.float32)
+    pcnt_ref[0] = jnp.sum(m.astype(jnp.int32), dtype=jnp.int32)
+
+
+def _scan_agg_kernel(lo_ref, hi_ref, qty_ref, price_ref, disc_ref, psum_ref, pcnt_ref):
+    """Mask-free variant (§Perf): same predicate + partial aggregates, but
+    the per-row mask never leaves VMEM — no int32[N] HBM write-back."""
+    qty = qty_ref[...]
+    m = (qty >= lo_ref[0]) & (qty < hi_ref[0])
+    fm = m.astype(jnp.float32)
+    psum_ref[0] = jnp.sum(price_ref[...] * disc_ref[...] * fm, dtype=jnp.float32)
+    pcnt_ref[0] = jnp.sum(m.astype(jnp.int32), dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "emit_mask"))
+def scan_filter(
+    qty, price, disc, lo, hi, *, block_rows: int = DEFAULT_BLOCK_ROWS, emit_mask: bool = True
+):
+    """Predicate scan over N rows (N must be a multiple of ``block_rows``).
+
+    Args:
+      qty, price, disc: f32[N] columns.
+      lo, hi: f32[1] predicate bounds (``lo <= qty < hi``).
+      block_rows: VMEM tile height.
+      emit_mask: when False, skip the per-row mask output entirely (the
+        §Perf mask-free aggregate path); the first return value is None.
+
+    Returns:
+      (mask int32[N] | None, partial_sums f32[num_blocks],
+       partial_counts int32[num_blocks]).
+    """
+    (n,) = qty.shape
+    assert n % block_rows == 0, (n, block_rows)
+    num_blocks = n // block_rows
+
+    col_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    slot_spec = pl.BlockSpec((1,), lambda i: (i,))
+
+    if emit_mask:
+        return pl.pallas_call(
+            _scan_kernel,
+            grid=(num_blocks,),
+            in_specs=[scalar_spec, scalar_spec, col_spec, col_spec, col_spec],
+            out_specs=[col_spec, slot_spec, slot_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((n,), jnp.int32),
+                jax.ShapeDtypeStruct((num_blocks,), jnp.float32),
+                jax.ShapeDtypeStruct((num_blocks,), jnp.int32),
+            ],
+            interpret=True,
+        )(lo, hi, qty, price, disc)
+    psums, pcnts = pl.pallas_call(
+        _scan_agg_kernel,
+        grid=(num_blocks,),
+        in_specs=[scalar_spec, scalar_spec, col_spec, col_spec, col_spec],
+        out_specs=[slot_spec, slot_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_blocks,), jnp.float32),
+            jax.ShapeDtypeStruct((num_blocks,), jnp.int32),
+        ],
+        interpret=True,
+    )(lo, hi, qty, price, disc)
+    return None, psums, pcnts

@@ -1,0 +1,89 @@
+"""Layer-2 JAX pipelines for dpBento's offloaded database modules.
+
+Each function here is an AOT entry point: ``aot.py`` lowers it once to HLO
+text; the Rust coordinator (`rust/src/runtime/`) loads + compiles the
+artifact through PJRT and drives it on the benchmark hot path.  Python never
+runs at benchmark time.
+
+The pipelines call the Layer-1 Pallas kernels and do only the tiny
+cross-block reductions in jnp (XLA fuses them into the same module).
+
+Entry points (all over a fixed row-block batch ``N = ROWS``):
+  - :func:`pushdown_pipeline`  — predicate scan -> (mask, count, revenue).
+    Backs the predicate-pushdown task (Fig. 13) and the end-to-end example.
+  - :func:`q6_pipeline`        — fused Q6 revenue scalar.  Backs the DBMS
+    task's scan-heavy query (Fig. 15).
+  - :func:`q1_pipeline`        — group-by sums/counts.  Backs the DBMS
+    task's aggregation query (Fig. 15).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from compile.kernels import agg, scan_filter
+
+#: Rows per compiled artifact invocation.  The Rust side streams tables
+#: through the executable in ROWS-sized batches (padding the tail).
+#: Overridable at AOT time for perf experiments (EXPERIMENTS.md §Perf).
+ROWS = int(os.environ.get("DPBENTO_ROWS", 65536))
+#: VMEM tile height inside the kernels.  §Perf block-shape sweep
+#: (EXPERIMENTS.md): on the CPU PJRT client, interpret-mode Pallas pays a
+#: fixed cost per grid step, so grid=1 (BLOCK_ROWS == ROWS) is fastest —
+#: +78% scan throughput over the original 8192.  The full 65536-row block
+#: is still VMEM-clean on a real TPU (3 f32 columns + mask ≈ 1 MiB of the
+#: 16 MiB VMEM); re-tile with DPBENTO_BLOCK_ROWS=8192 when targeting
+#: hardware pipelining/double-buffering.
+BLOCK_ROWS = int(os.environ.get("DPBENTO_BLOCK_ROWS", ROWS))
+#: TPC-H Q1 has 4 (returnflag, linestatus) groups; we keep 8 slots so the
+#: one-hot matmul is MXU-lane aligned.
+Q1_GROUPS = 8
+#: Measure columns aggregated by Q1 (qty, price, disc, tax-like).
+Q1_MEASURES = 4
+
+
+def pushdown_pipeline(qty, price, disc, lo, hi):
+    """Predicate-pushdown scan over one row-block.
+
+    Args:  qty/price/disc f32[ROWS]; lo/hi f32[1] bounds.
+    Returns (mask int32[ROWS], count int32[], revenue f32[]).
+    """
+    mask, psums, pcnts = scan_filter.scan_filter(
+        qty, price, disc, lo, hi, block_rows=BLOCK_ROWS
+    )
+    return mask, jnp.sum(pcnts, dtype=jnp.int32), jnp.sum(psums, dtype=jnp.float32)
+
+
+def pushdown_agg_pipeline(qty, price, disc, lo, hi):
+    """Mask-free pushdown aggregate (§Perf optimization): when the DPU
+    returns only aggregates (count + revenue), materializing the int32
+    mask in HBM and copying it host-side is pure overhead — this variant
+    reuses the fused Q6 kernel shape with the range predicate instead.
+
+    Returns (count int32[], revenue f32[]).
+    """
+    mask, psums, pcnts = scan_filter.scan_filter(
+        qty, price, disc, lo, hi, block_rows=BLOCK_ROWS, emit_mask=False
+    )
+    del mask
+    return jnp.sum(pcnts, dtype=jnp.int32), jnp.sum(psums, dtype=jnp.float32)
+
+
+def q6_pipeline(qty, price, disc, params):
+    """Fused TPC-H Q6 revenue over one row-block.  params = f32[3]."""
+    psums = agg.q6_fused(qty, price, disc, params, block_rows=BLOCK_ROWS)
+    return (jnp.sum(psums, dtype=jnp.float32),)
+
+
+def q1_pipeline(key, vals):
+    """TPC-H Q1 group-by over one row-block.
+
+    Args: key int32[ROWS] in [0, Q1_GROUPS); vals f32[ROWS, Q1_MEASURES].
+    Returns (sums f32[Q1_GROUPS, Q1_MEASURES], counts f32[Q1_GROUPS]).
+    """
+    psums, pcnts = agg.q1_groupby(
+        key, vals, num_groups=Q1_GROUPS, block_rows=BLOCK_ROWS
+    )
+    return jnp.sum(psums, axis=0), jnp.sum(pcnts, axis=0)

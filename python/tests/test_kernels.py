@@ -1,0 +1,213 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the repo.
+
+Each Pallas kernel (interpret=True) is checked against the pure-jnp oracle
+in ``compile.kernels.ref`` — exact for integer outputs, allclose for f32
+reductions (block-wise accumulation reorders float adds).  hypothesis
+sweeps shapes, dtypes-in-range, predicate bounds, and block sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import agg, ref, scan_filter
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cols(rng: np.random.Generator, n: int):
+    qty = rng.uniform(0.0, 100.0, n).astype(np.float32)
+    price = rng.uniform(1.0, 1000.0, n).astype(np.float32)
+    disc = rng.uniform(0.0, 0.1, n).astype(np.float32)
+    return qty, price, disc
+
+
+# ---------------------------------------------------------------- scan_filter
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 6),
+    block_rows=st.sampled_from([128, 512, 1024]),
+    lo=st.floats(0.0, 60.0, width=32),
+    width=st.floats(0.5, 60.0, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scan_filter_matches_ref(blocks, block_rows, lo, width, seed):
+    n = blocks * block_rows
+    rng = np.random.default_rng(seed)
+    qty, price, disc = _cols(rng, n)
+    lo_a = np.array([lo], np.float32)
+    hi_a = np.array([lo + width], np.float32)
+
+    mask, psums, pcnts = scan_filter.scan_filter(
+        qty, price, disc, lo_a, hi_a, block_rows=block_rows
+    )
+    ref_mask, ref_count, ref_rev = ref.pushdown_scan(qty, price, disc, lo_a, hi_a)
+
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref_mask))
+    assert int(jnp.sum(pcnts)) == int(ref_count)
+    np.testing.assert_allclose(
+        float(jnp.sum(psums)), float(ref_rev), rtol=1e-5, atol=1e-3
+    )
+
+
+def test_scan_filter_empty_and_full_selectivity():
+    n = 4 * 1024
+    rng = np.random.default_rng(7)
+    qty, price, disc = _cols(rng, n)
+    # empty: lo == hi
+    mask, _, pcnts = scan_filter.scan_filter(
+        qty, price, disc, np.float32([50.0]), np.float32([50.0]), block_rows=1024
+    )
+    assert int(jnp.sum(pcnts)) == 0 and int(jnp.sum(mask)) == 0
+    # full: covers the whole domain
+    mask, _, pcnts = scan_filter.scan_filter(
+        qty, price, disc, np.float32([-1.0]), np.float32([101.0]), block_rows=1024
+    )
+    assert int(jnp.sum(pcnts)) == n and int(jnp.sum(mask)) == n
+
+
+def test_scan_filter_rejects_ragged_n():
+    rng = np.random.default_rng(0)
+    qty, price, disc = _cols(rng, 1000)  # not a multiple of 512
+    with pytest.raises(AssertionError):
+        scan_filter.scan_filter(
+            qty, price, disc, np.float32([0.0]), np.float32([1.0]), block_rows=512
+        )
+
+
+# ------------------------------------------------------------------- q6_fused
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 5),
+    block_rows=st.sampled_from([256, 1024]),
+    qty_hi=st.floats(1.0, 99.0, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_q6_fused_matches_ref(blocks, block_rows, qty_hi, seed):
+    n = blocks * block_rows
+    rng = np.random.default_rng(seed)
+    qty, price, disc = _cols(rng, n)
+    params = np.array([qty_hi, 0.02, 0.08], np.float32)
+
+    psums = agg.q6_fused(qty, price, disc, params, block_rows=block_rows)
+    got = float(jnp.sum(psums))
+    want = float(ref.q6_revenue(qty, price, disc, params[0], params[1], params[2]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+# ----------------------------------------------------------------- q1_groupby
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_rows=st.sampled_from([256, 512]),
+    num_groups=st.sampled_from([4, 8]),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_q1_groupby_matches_ref(blocks, block_rows, num_groups, k, seed):
+    n = blocks * block_rows
+    rng = np.random.default_rng(seed)
+    key = rng.integers(0, num_groups, n).astype(np.int32)
+    vals = rng.uniform(0.0, 100.0, (n, k)).astype(np.float32)
+
+    psums, pcnts = agg.q1_groupby(
+        key, vals, num_groups=num_groups, block_rows=block_rows
+    )
+    sums = np.asarray(jnp.sum(psums, axis=0))
+    counts = np.asarray(jnp.sum(pcnts, axis=0))
+    ref_sums, ref_counts = ref.q1_groupby(key, vals, num_groups)
+
+    np.testing.assert_allclose(sums, np.asarray(ref_sums), rtol=1e-4, atol=1e-2)
+    np.testing.assert_array_equal(counts, np.asarray(ref_counts))
+    assert counts.sum() == n  # every row lands in exactly one group
+
+
+def test_q1_groupby_empty_group():
+    # a group id that never occurs must produce zero sum and count
+    n, g, k = 1024, 8, 2
+    key = np.zeros(n, np.int32)  # everything in group 0
+    vals = np.ones((n, k), np.float32)
+    psums, pcnts = agg.q1_groupby(key, vals, num_groups=g, block_rows=256)
+    sums = np.asarray(jnp.sum(psums, axis=0))
+    counts = np.asarray(jnp.sum(pcnts, axis=0))
+    assert counts[0] == n and (counts[1:] == 0).all()
+    assert (sums[0] == n).all() and (sums[1:] == 0).all()
+
+
+# ----------------------------------------------------------- model pipelines
+
+
+def test_pushdown_pipeline_shapes_and_values():
+    n = model.ROWS
+    rng = np.random.default_rng(3)
+    qty, price, disc = _cols(rng, n)
+    lo, hi = np.float32([20.0]), np.float32([30.0])
+    mask, count, revenue = model.pushdown_pipeline(qty, price, disc, lo, hi)
+    assert mask.shape == (n,) and mask.dtype == jnp.int32
+    ref_mask, ref_count, ref_rev = ref.pushdown_scan(qty, price, disc, lo, hi)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref_mask))
+    assert int(count) == int(ref_count)
+    np.testing.assert_allclose(float(revenue), float(ref_rev), rtol=1e-5, atol=1e-2)
+
+
+def test_q1_pipeline_shapes():
+    n = model.ROWS
+    rng = np.random.default_rng(4)
+    key = rng.integers(0, model.Q1_GROUPS, n).astype(np.int32)
+    vals = rng.uniform(0, 10, (n, model.Q1_MEASURES)).astype(np.float32)
+    sums, counts = model.q1_pipeline(key, vals)
+    assert sums.shape == (model.Q1_GROUPS, model.Q1_MEASURES)
+    assert counts.shape == (model.Q1_GROUPS,)
+    assert float(jnp.sum(counts)) == n
+
+
+# ------------------------------------------------------- mask-free variant
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_rows=st.sampled_from([256, 1024]),
+    lo=st.floats(0.0, 60.0, width=32),
+    width=st.floats(0.5, 60.0, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scan_filter_maskfree_matches_masked(blocks, block_rows, lo, width, seed):
+    """The §Perf mask-free variant must agree with the mask-emitting one."""
+    n = blocks * block_rows
+    rng = np.random.default_rng(seed)
+    qty, price, disc = _cols(rng, n)
+    lo_a = np.array([lo], np.float32)
+    hi_a = np.array([lo + width], np.float32)
+
+    mask, psums, pcnts = scan_filter.scan_filter(
+        qty, price, disc, lo_a, hi_a, block_rows=block_rows
+    )
+    nomask, psums2, pcnts2 = scan_filter.scan_filter(
+        qty, price, disc, lo_a, hi_a, block_rows=block_rows, emit_mask=False
+    )
+    assert nomask is None
+    np.testing.assert_array_equal(np.asarray(pcnts), np.asarray(pcnts2))
+    np.testing.assert_allclose(np.asarray(psums), np.asarray(psums2), rtol=1e-6)
+
+
+def test_pushdown_agg_pipeline_matches_full_pipeline():
+    n = model.ROWS
+    rng = np.random.default_rng(8)
+    qty, price, disc = _cols(rng, n)
+    lo, hi = np.float32([20.0]), np.float32([30.0])
+    _, count, revenue = model.pushdown_pipeline(qty, price, disc, lo, hi)
+    count2, revenue2 = model.pushdown_agg_pipeline(qty, price, disc, lo, hi)
+    assert int(count) == int(count2)
+    np.testing.assert_allclose(float(revenue), float(revenue2), rtol=1e-6)

@@ -1,0 +1,78 @@
+//! Fig. 4 reproduction: single-core arithmetic throughput — int8 (a),
+//! int128 (b), fp64 (c) × {add, sub, mul, div} on the four platforms.
+//! Prints the paper's series and asserts its headline shape checks.
+//! Pass `--measured` to additionally run the real host instruction loops.
+
+use dpbento::platform::cpu::{arith_ops_per_sec, ArithOp, DataType};
+use dpbento::platform::PlatformId;
+use dpbento::util::bench::BenchTable;
+
+fn main() {
+    let measured = std::env::args().any(|a| a == "--measured");
+    for dt in DataType::ALL {
+        let mut t = BenchTable::new(
+            format!("Fig. 4{} — {} arithmetic (single core)", fig_letter(dt), dt.name()),
+            "ops/s",
+        )
+        .columns(&["host", "bf2", "bf3", "octeon"]);
+        for op in ArithOp::ALL {
+            let row: Vec<f64> = [
+                PlatformId::HostEpyc,
+                PlatformId::Bf2,
+                PlatformId::Bf3,
+                PlatformId::OcteonTx2,
+            ]
+            .iter()
+            .map(|&p| arith_ops_per_sec(p, dt, op))
+            .collect();
+            t.row_f(op.name(), &row);
+        }
+        t.finish(&format!("fig04_{}", dt.name()));
+    }
+
+    if measured {
+        measured_host_pass();
+    }
+
+    // paper shape checks (§5.1)
+    let host_int8_add = arith_ops_per_sec(PlatformId::HostEpyc, DataType::Int8, ArithOp::Add);
+    assert!((host_int8_add - 6.5e9).abs() < 1e6, "host int8 add = 6.5 Gops/s");
+    let fp64_bf3 = arith_ops_per_sec(PlatformId::Bf3, DataType::Fp64, ArithOp::Add);
+    let fp64_host = arith_ops_per_sec(PlatformId::HostEpyc, DataType::Fp64, ArithOp::Add);
+    assert!(fp64_bf3 > fp64_host, "BlueFields beat the host on fp64 add");
+    println!("\nfig04 shape checks passed: host dominates integers, DPUs win fp64 add/sub/mul");
+}
+
+fn fig_letter(dt: DataType) -> &'static str {
+    match dt {
+        DataType::Int8 => "a",
+        DataType::Int128 => "b",
+        DataType::Fp64 => "c",
+    }
+}
+
+/// Optional: run the real instruction loops on the build host and print
+/// them next to the modeled host column (sanity anchor, not a DPU claim).
+fn measured_host_pass() {
+    use dpbento::coordinator::{Task as _, TaskContext};
+    use dpbento::tasks::compute::ComputeTask;
+    use dpbento::util::json::Value;
+
+    let task = ComputeTask;
+    let mut ctx = TaskContext::new(PlatformId::HostEpyc, 4);
+    let mut t = BenchTable::new("Fig. 4 measured host loops", "ops/s").columns(&["measured"]);
+    for dt in ["int8", "fp64"] {
+        for op in ["add", "mul", "div"] {
+            let spec = [
+                ("data_type".to_string(), Value::str(dt)),
+                ("operation".to_string(), Value::str(op)),
+                ("mode".to_string(), Value::str("measured")),
+            ]
+            .into_iter()
+            .collect();
+            let r = task.run(&mut ctx, &spec).expect("measured run");
+            t.row_f(format!("{dt} {op}"), &[r["ops_per_sec"]]);
+        }
+    }
+    t.finish("fig04_measured_host");
+}

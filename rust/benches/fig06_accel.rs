@@ -1,0 +1,124 @@
+//! Fig. 6 reproduction: "optimizable" tasks — DEFLATE compression (a),
+//! decompression (b), and RegEx matching (c) across execution techniques:
+//! single core, SIMD, all-core threads, and the DPU hardware engines.
+//! The software anchor rate is the *real* flate2/regex measurement when
+//! run with `--measured`; modeled otherwise.
+
+use dpbento::coordinator::{Task as _, TaskContext, TestSpec};
+use dpbento::platform::PlatformId;
+use dpbento::plugins::compression::CompressionTask;
+use dpbento::plugins::regex_match::RegexTask;
+use dpbento::util::bench::BenchTable;
+use dpbento::util::json::Value;
+
+const SIZES: [u64; 7] = [
+    64 * 1024,
+    1 << 20,
+    8 << 20,
+    32 << 20,
+    128 << 20,
+    256 << 20,
+    512 << 20,
+];
+
+fn spec(size: u64, variant: &str, rate_source: &str) -> TestSpec {
+    [
+        ("size".to_string(), Value::Num(size as f64)),
+        ("variant".to_string(), Value::str(variant)),
+        ("rate_source".to_string(), Value::str(rate_source)),
+    ]
+    .into_iter()
+    .collect()
+}
+
+fn run_table(
+    title: &str,
+    csv: &str,
+    task: &dyn dpbento::coordinator::Task,
+    columns: &[(&str, PlatformId, &str)], // (label, platform, variant)
+    rate_source: &str,
+) {
+    let mut ctxs: Vec<TaskContext> = columns
+        .iter()
+        .map(|(_, p, _)| {
+            let mut c = TaskContext::new(*p, 6);
+            task.prepare(&mut c).expect("prepare");
+            c
+        })
+        .collect();
+    let mut t = BenchTable::new(title, "MB/s")
+        .columns(&columns.iter().map(|(l, _, _)| *l).collect::<Vec<_>>());
+    for size in SIZES {
+        let row: Vec<Option<f64>> = columns
+            .iter()
+            .zip(&mut ctxs)
+            .map(|((_, _, variant), ctx)| {
+                task.run(ctx, &spec(size, variant, rate_source))
+                    .ok()
+                    .map(|r| r["throughput_mbps"])
+            })
+            .collect();
+        t.row(dpbento::util::fmt_bytes(size), row);
+    }
+    t.finish(csv);
+}
+
+fn main() {
+    let rate_source = if std::env::args().any(|a| a == "--measured") {
+        "measured"
+    } else {
+        "modeled"
+    };
+
+    // Fig. 6a: compression — BF-2 engine vs host/BF-2 software
+    let comp = CompressionTask::compress();
+    run_table(
+        "Fig. 6a — DEFLATE compression",
+        "fig06a_compression",
+        &comp,
+        &[
+            ("host-1core", PlatformId::HostEpyc, "1core"),
+            ("host-simd", PlatformId::HostEpyc, "simd"),
+            ("host-threads", PlatformId::HostEpyc, "threads"),
+            ("bf2-1core", PlatformId::Bf2, "1core"),
+            ("bf2-threads", PlatformId::Bf2, "threads"),
+            ("bf2-accel", PlatformId::Bf2, "accel"),
+        ],
+        rate_source,
+    );
+
+    // Fig. 6b: decompression — BF-2 + BF-3 engines
+    let decomp = CompressionTask::decompress();
+    run_table(
+        "Fig. 6b — DEFLATE decompression",
+        "fig06b_decompression",
+        &decomp,
+        &[
+            ("host-threads", PlatformId::HostEpyc, "threads"),
+            ("bf2-threads", PlatformId::Bf2, "threads"),
+            ("bf2-accel", PlatformId::Bf2, "accel"),
+            ("bf3-accel", PlatformId::Bf3, "accel"),
+        ],
+        rate_source,
+    );
+
+    // Fig. 6c: RegEx — engines identical on BF-2/BF-3
+    let regex = RegexTask;
+    run_table(
+        "Fig. 6c — RegEx '%special%requests%'",
+        "fig06c_regex",
+        &regex,
+        &[
+            ("host-simd", PlatformId::HostEpyc, "simd"),
+            ("host-threads", PlatformId::HostEpyc, "threads"),
+            ("bf3-threads", PlatformId::Bf3, "threads"),
+            ("bf3-accel", PlatformId::Bf3, "accel"),
+        ],
+        rate_source,
+    );
+
+    println!(
+        "\nfig06 shape notes: engines lose below ~1 MB (startup), dominate compression/\n\
+         decompression at 100s of MB; all-core RegEx overtakes the engine at 256 MB."
+    );
+}

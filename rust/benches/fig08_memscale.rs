@@ -1,0 +1,36 @@
+//! Fig. 8 reproduction: memory-access thread scaling (16 KB random reads,
+//! 1 → max threads per platform; linear until each platform's cap).
+
+use dpbento::platform::memory::{ops_per_sec, scaling_cap_ops, AccessOp, Pattern};
+use dpbento::platform::PlatformId;
+use dpbento::util::bench::BenchTable;
+
+fn main() {
+    let threads = [1u32, 2, 4, 8, 16, 24, 32, 48, 64, 96];
+    let mut t = BenchTable::new("Fig. 8 — 16 KB random-read thread scaling", "ops/s")
+        .columns(&["host", "bf2", "bf3", "octeon"]);
+    for &n in &threads {
+        let row: Vec<f64> = [
+            PlatformId::HostEpyc,
+            PlatformId::Bf2,
+            PlatformId::Bf3,
+            PlatformId::OcteonTx2,
+        ]
+        .iter()
+        .map(|&p| ops_per_sec(p, AccessOp::Read, Pattern::Random, 16 * 1024, n))
+        .collect();
+        t.row_f(format!("{n}t"), &row);
+    }
+    t.finish("fig08_memscale");
+
+    // §5.3 / Fig. 8 anchors: per-platform saturation points
+    assert_eq!(scaling_cap_ops(PlatformId::Bf2), 1.3e9);
+    assert_eq!(scaling_cap_ops(PlatformId::Bf3), 4.3e9);
+    assert_eq!(scaling_cap_ops(PlatformId::OcteonTx2), 2.7e9);
+    assert_eq!(scaling_cap_ops(PlatformId::HostEpyc), 11.3e9);
+    // host reaches its cap by 32 threads and stays flat to 96
+    let h32 = ops_per_sec(PlatformId::HostEpyc, AccessOp::Read, Pattern::Random, 16384, 32);
+    let h96 = ops_per_sec(PlatformId::HostEpyc, AccessOp::Read, Pattern::Random, 16384, 96);
+    assert_eq!(h32, h96);
+    println!("\nfig08 shape checks passed: linear scaling to per-platform caps (1.3/2.7/4.3/11.3 Gops)");
+}

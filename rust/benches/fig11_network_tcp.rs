@@ -1,0 +1,46 @@
+//! Fig. 11 reproduction: TCP between the remote server and the DPU/host —
+//! (a) ping-pong latency across message sizes, (b) throughput vs
+//! connections (32 KB messages, QD 128).
+
+use dpbento::net::tcp;
+use dpbento::platform::PlatformId;
+use dpbento::util::bench::BenchTable;
+
+fn main() {
+    // Fig. 11a: latency sweep 32 B – 32 KB
+    let mut a = BenchTable::new("Fig. 11a — TCP ping-pong latency", "µs")
+        .columns(&["dpu-avg", "dpu-p99", "host-avg", "host-p99"]);
+    let mut size = 32usize;
+    while size <= 32 * 1024 {
+        let d = tcp::latency_summary(PlatformId::Bf2, size, 3000, 11);
+        let h = tcp::latency_summary(PlatformId::HostEpyc, size, 3000, 11);
+        a.row_f(dpbento::util::fmt_bytes(size as u64), &[d.mean, d.p99, h.mean, h.p99]);
+        size *= 4;
+    }
+    a.finish("fig11a_tcp_latency");
+
+    // Fig. 11b: throughput vs threads
+    let mut b = BenchTable::new("Fig. 11b — TCP throughput (32 KB, QD128)", "Gbps")
+        .columns(&["dpu", "host"]);
+    for threads in [1u32, 2, 4, 8] {
+        b.row_f(
+            format!("{threads}t"),
+            &[
+                tcp::throughput_gbps(PlatformId::Bf2, 32 << 10, threads, 128),
+                tcp::throughput_gbps(PlatformId::HostEpyc, 32 << 10, threads, 128),
+            ],
+        );
+    }
+    b.finish("fig11b_tcp_throughput");
+
+    // §6.2 shape checks
+    let d1 = tcp::throughput_gbps(PlatformId::Bf2, 32 << 10, 1, 128);
+    let h1 = tcp::throughput_gbps(PlatformId::HostEpyc, 32 << 10, 1, 128);
+    assert!((4.2..5.4).contains(&(h1 / d1)), "host ~4.8x single-thread");
+    let d8 = tcp::throughput_gbps(PlatformId::Bf2, 32 << 10, 8, 128);
+    assert!(h1 > 1.5 * d8, "host single-thread beats DPU all-core by ~1.7x");
+    let lat_ratio =
+        tcp::pingpong_rtt_us(PlatformId::Bf2, 32) / tcp::pingpong_rtt_us(PlatformId::HostEpyc, 32);
+    assert!(lat_ratio > 1.2, "DPU TCP latency ~30% higher");
+    println!("\nfig11 shape checks passed: wimpy-core TCP stack costs latency and especially throughput");
+}

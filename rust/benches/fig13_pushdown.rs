@@ -1,0 +1,72 @@
+//! Fig. 13 reproduction: predicate pushdown on the disaggregated-storage
+//! setup — TPC-H SF10, 1% selectivity, scan cores 1 → max per DPU,
+//! against the fetch-everything baseline (33 MTPS).
+//!
+//! The scan itself *really executes* through the AOT JAX/Pallas artifact
+//! on the PJRT CPU client when `artifacts/` is present (the measured host
+//! scan rate is printed alongside the modeled per-platform series).
+
+use dpbento::platform::PlatformId;
+use dpbento::tasks::pred_pushdown::{pushdown_mtps, scan_native, scan_pjrt, BASELINE_MTPS};
+use dpbento::util::bench::BenchTable;
+
+fn main() {
+    let mut t = BenchTable::new(
+        "Fig. 13 — predicate pushdown (SF10, sel 1%)",
+        "Mtuples/s",
+    )
+    .columns(&["baseline", "bf2", "bf3", "octeon"]);
+    for cores in [1u32, 2, 4, 8, 16, 24] {
+        t.row(
+            format!("{cores}c"),
+            vec![
+                Some(BASELINE_MTPS),
+                (cores <= 8).then(|| pushdown_mtps(PlatformId::Bf2, cores)),
+                (cores <= 16).then(|| pushdown_mtps(PlatformId::Bf3, cores)),
+                Some(pushdown_mtps(PlatformId::OcteonTx2, cores)),
+            ],
+        );
+    }
+    t.finish("fig13_pushdown");
+
+    // real scan execution through the PJRT artifact (if built)
+    let gen = dpbento::db::Gen::new(13, 100);
+    let li = gen.lineitem(10.0);
+    let qty = li.col("l_quantity").as_f32().unwrap();
+    let price = li.col("l_extendedprice").as_f32().unwrap();
+    let disc = li.col("l_discount").as_f32().unwrap();
+    let (lo, hi) = (25.0f32, 25.0 + 0.49);
+
+    let native = scan_native(qty, price, disc, lo, hi);
+    println!(
+        "\nreal scan (native rust): {} rows in {:.3}s = {:.1} MTPS, {} qualified",
+        native.rows,
+        native.seconds,
+        native.rows as f64 / native.seconds / 1e6,
+        native.qualified
+    );
+    match dpbento::runtime::Runtime::load(dpbento::runtime::artifact::default_dir()) {
+        Ok(rt) => {
+            let m = scan_pjrt(&rt, qty, price, disc, lo, hi).expect("pjrt scan");
+            println!(
+                "real scan (PJRT/Pallas):  {} rows in {:.3}s = {:.1} MTPS, {} qualified",
+                m.rows,
+                m.seconds,
+                m.rows as f64 / m.seconds / 1e6,
+                m.qualified
+            );
+            assert_eq!(m.qualified, native.qualified, "PJRT and native scans agree");
+        }
+        Err(e) => println!("(PJRT artifacts not available: {e:#} — run `make artifacts`)"),
+    }
+
+    // Fig. 13 shape checks
+    assert!((1.7..1.9).contains(&(pushdown_mtps(PlatformId::Bf3, 1) / BASELINE_MTPS)));
+    assert!((11.0..13.0).contains(&(pushdown_mtps(PlatformId::Bf3, 16) / BASELINE_MTPS)));
+    for p in [PlatformId::Bf2, PlatformId::OcteonTx2] {
+        assert!(pushdown_mtps(p, 2) > BASELINE_MTPS, "{p} crosses baseline at 2 cores");
+        let full = pushdown_mtps(p, p.spec().cores) / BASELINE_MTPS;
+        assert!((4.2..4.8).contains(&full), "{p} ~4.5x with all cores");
+    }
+    println!("\nfig13 shape checks passed: 1.8x/12x BF-3, 4.5x BF-2/OCTEON over the 33 MTPS baseline");
+}

@@ -1,0 +1,60 @@
+//! Fig. 14 reproduction: index offloading — a 50 M × 1 KB B+-tree split
+//! 10:1 between host and DPU, uniform reads; combined throughput vs the
+//! host-only baseline. Routing and tree operations really execute against
+//! the in-memory B+-trees.
+
+use dpbento::index::partition::{index_rate_mops, offloaded_throughput_mops, PartitionedIndex};
+use dpbento::index::ycsb::{AccessPattern, Workload};
+use dpbento::platform::PlatformId;
+use dpbento::util::bench::BenchTable;
+
+fn main() {
+    let base = index_rate_mops(PlatformId::HostEpyc, 96);
+    let mut t = BenchTable::new(
+        "Fig. 14 — index offloading (50M x 1KB, 10:1 split, uniform reads)",
+        "Mops/s",
+    )
+    .columns(&["throughput", "gain_pct"]);
+    t.row_f("host-only", &[base, 0.0]);
+    for (p, threads) in [
+        (PlatformId::OcteonTx2, 24u32),
+        (PlatformId::Bf2, 8),
+        (PlatformId::Bf3, 16),
+    ] {
+        let combined = offloaded_throughput_mops(p, 96, threads);
+        t.row_f(
+            format!("host+{p}"),
+            &[combined, (combined / base - 1.0) * 100.0],
+        );
+    }
+    t.finish("fig14_index");
+
+    // real partitioned-tree execution: route 50k uniform reads
+    let w = Workload {
+        record_count: 50_000_000,
+        record_bytes: 1024,
+        read_fraction: 1.0,
+        pattern: AccessPattern::Uniform,
+        seed: 14,
+    };
+    let mut idx = PartitionedIndex::build(&w, 10, 110_000);
+    let ops = w.ops(50_000);
+    let t0 = std::time::Instant::now();
+    let (h, d, _) = idx.execute(&ops, 1);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nreal B+-tree execution: {} ops in {:.3}s ({:.2} Mops/s on this host); \
+         routed host/dpu = {h}/{d} ({:.1}% to DPU)",
+        ops.len(),
+        dt,
+        ops.len() as f64 / dt / 1e6,
+        100.0 * d as f64 / (h + d) as f64
+    );
+
+    // Fig. 14 anchors: +10.5% / +19% / +26%
+    let gain = |p, t| offloaded_throughput_mops(p, 96, t) / base - 1.0;
+    assert!((0.09..0.12).contains(&gain(PlatformId::Bf2, 8)));
+    assert!((0.17..0.21).contains(&gain(PlatformId::OcteonTx2, 24)));
+    assert!((0.24..0.28).contains(&gain(PlatformId::Bf3, 16)));
+    println!("\nfig14 shape checks passed: +10.5%/+19%/+26% for BF-2/OCTEON/BF-3");
+}

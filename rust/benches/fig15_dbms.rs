@@ -1,0 +1,63 @@
+//! Fig. 15 reproduction: end-to-end DBMS (the embedded engine as the
+//! DuckDB stand-in) — per-query running times at SF10 with all cores,
+//! cold (a) and hot (b). Queries really execute; platform times come from
+//! the calibrated cost model.
+
+use dpbento::db::engine::{run_suite, suite_speedup, Database, ExecMode};
+use dpbento::db::Gen;
+use dpbento::platform::PlatformId;
+use dpbento::util::bench::BenchTable;
+
+fn main() {
+    let db = Database::generate(10.0, &Gen::new(15, 1000));
+    for (mode, fig) in [(ExecMode::Cold, "15a"), (ExecMode::Hot, "15b")] {
+        let mut t = BenchTable::new(
+            format!("Fig. {fig} — DuckDB-style TPC-H SF10, {} runs", mode.name()),
+            "seconds/query",
+        )
+        .columns(&["host", "bf2", "bf3", "octeon"]);
+        let per_platform: Vec<Vec<f64>> = [
+            PlatformId::HostEpyc,
+            PlatformId::Bf2,
+            PlatformId::Bf3,
+            PlatformId::OcteonTx2,
+        ]
+        .iter()
+        .map(|&p| {
+            run_suite(&db, p, p.spec().max_threads, mode)
+                .iter()
+                .map(|(_, priced)| priced.seconds)
+                .collect()
+        })
+        .collect();
+        let queries = run_suite(&db, PlatformId::HostEpyc, 96, mode);
+        for (i, (q, _)) in queries.iter().enumerate() {
+            t.row_f(
+                q.name(),
+                &[
+                    per_platform[0][i],
+                    per_platform[1][i],
+                    per_platform[2][i],
+                    per_platform[3][i],
+                ],
+            );
+        }
+        t.finish(&format!("fig{fig}_dbms_{}", mode.name()));
+    }
+
+    // Fig. 15 shape checks
+    let cold_bf3 = suite_speedup(&db, PlatformId::HostEpyc, PlatformId::Bf3, ExecMode::Cold);
+    let cold_oct = suite_speedup(&db, PlatformId::HostEpyc, PlatformId::OcteonTx2, ExecMode::Cold);
+    let hot_bf3 = suite_speedup(&db, PlatformId::HostEpyc, PlatformId::Bf3, ExecMode::Hot);
+    let flip_cold = suite_speedup(&db, PlatformId::OcteonTx2, PlatformId::Bf2, ExecMode::Cold);
+    let flip_hot = suite_speedup(&db, PlatformId::OcteonTx2, PlatformId::Bf2, ExecMode::Hot);
+    println!(
+        "\ncold: host/bf3 = {cold_bf3:.1}x, host/octeon = {cold_oct:.0}x; \
+         hot: host/bf3 = {hot_bf3:.1}x; octeon-vs-bf2 flips {flip_cold:.2} -> {flip_hot:.2}"
+    );
+    assert!(cold_oct > 20.0, "eMMC platforms 1-2 orders behind cold");
+    assert!((1.5..4.5).contains(&cold_bf3), "BF-3 within small factor cold");
+    assert!((2.7..3.3).contains(&hot_bf3), "host 3x BF-3 hot");
+    assert!(flip_cold < 1.0 && flip_hot > 1.0, "OCTEON/BF-2 cold->hot inversion");
+    println!("fig15 shape checks passed: storage dominates cold, cores dominate hot");
+}

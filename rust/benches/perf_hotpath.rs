@@ -1,0 +1,141 @@
+//! §Perf hot-path bench: the L3 coordinator driving the AOT JAX/Pallas
+//! scan through PJRT. Measures end-to-end scan throughput, per-invocation
+//! overhead, and the native-Rust ceiling — the numbers tracked in
+//! EXPERIMENTS.md §Perf across optimization iterations.
+
+use std::time::Instant;
+
+use dpbento::db::Gen;
+use dpbento::runtime::{artifact, Runtime};
+use dpbento::tasks::pred_pushdown::{scan_native, scan_pjrt, scan_pjrt_parallel};
+use dpbento::util::bench::BenchTable;
+use dpbento::util::stats::Summary;
+
+fn main() {
+    let gen = Gen::new(99, 100);
+    let li = gen.lineitem(10.0); // 600k rows
+    let qty = li.col("l_quantity").as_f32().unwrap();
+    let price = li.col("l_extendedprice").as_f32().unwrap();
+    let disc = li.col("l_discount").as_f32().unwrap();
+    let (lo, hi) = (25.0f32, 25.49f32);
+
+    // native ceiling
+    let mut native_samples = Vec::new();
+    for _ in 0..10 {
+        let m = scan_native(qty, price, disc, lo, hi);
+        native_samples.push(m.rows as f64 / m.seconds / 1e6);
+    }
+    let native = Summary::from_samples(&native_samples);
+
+    let rt = match Runtime::load(artifact::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("perf_hotpath: artifacts unavailable ({e:#}); native ceiling only");
+            println!("native scan: p50 {:.1} MTPS", native.p50);
+            return;
+        }
+    };
+
+    // end-to-end PJRT scan throughput (full 600k-row table, repeated)
+    let mut pjrt_samples = Vec::new();
+    let mut qualified = 0;
+    for _ in 0..10 {
+        let m = scan_pjrt(&rt, qty, price, disc, lo, hi).expect("scan");
+        pjrt_samples.push(m.rows as f64 / m.seconds / 1e6);
+        qualified = m.qualified;
+    }
+    let pjrt = Summary::from_samples(&pjrt_samples);
+
+    // per-invocation overhead: one block, timed tightly
+    let n = rt.rows();
+    let (q1, p1, d1) = (&qty[..n], &price[..n], &disc[..n]);
+    let mut block_us = Vec::new();
+    for _ in 0..30 {
+        let t0 = Instant::now();
+        let out = rt.pushdown_scan(q1, p1, d1, lo, hi).expect("block scan");
+        block_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        dpbento::util::bench::black_box(out.count);
+    }
+    let block = Summary::from_samples(&block_us);
+
+    // §Perf optimization 1: mask-free aggregate variant (no int32[N]
+    // mask materialization or host copy-back)
+    let mut agg_us = Vec::new();
+    let mut agg_count = 0;
+    for _ in 0..30 {
+        let t0 = Instant::now();
+        let (c, r) = rt.pushdown_agg(q1, p1, d1, lo, hi).expect("agg scan");
+        agg_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        dpbento::util::bench::black_box(r);
+        agg_count = c;
+    }
+    let agg = Summary::from_samples(&agg_us);
+    // correctness: same qualified count as the mask-emitting variant
+    let full = rt.pushdown_scan(q1, p1, d1, lo, hi).expect("scan");
+    assert_eq!(agg_count, full.count, "mask-free variant must agree");
+
+    // §Perf optimization 3: parallel scan workers (one PJRT client each)
+    let mut par_rows = Vec::new();
+    for threads in [2usize, 4, 8] {
+        let mut samples = Vec::new();
+        for _ in 0..3 {
+            let m = scan_pjrt_parallel(
+                &artifact::default_dir(),
+                qty,
+                price,
+                disc,
+                lo,
+                hi,
+                threads,
+            )
+            .expect("parallel scan");
+            assert_eq!(m.qualified, qualified, "parallel scan must agree");
+            samples.push(m.rows as f64 / m.seconds / 1e6);
+        }
+        let s = Summary::from_samples(&samples);
+        par_rows.push((threads, s));
+    }
+
+    // q6 fused-aggregate kernel rate
+    let mut q6_us = Vec::new();
+    for _ in 0..30 {
+        let t0 = Instant::now();
+        let r = rt.q6_agg(q1, p1, d1, [24.0, 0.05, 0.07]).expect("q6");
+        q6_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        dpbento::util::bench::black_box(r);
+    }
+    let q6 = Summary::from_samples(&q6_us);
+
+    // q1 group-by kernel rate
+    let keys: Vec<i32> = (0..n as i32).map(|i| i & 7).collect();
+    let vals: Vec<f32> = (0..n * rt.manifest.q1_measures).map(|i| (i % 97) as f32).collect();
+    let mut q1_us = Vec::new();
+    for _ in 0..30 {
+        let t0 = Instant::now();
+        let r = rt.q1_groupby(&keys, &vals).expect("q1");
+        q1_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        dpbento::util::bench::black_box(r.sums[0]);
+    }
+    let q1s = Summary::from_samples(&q1_us);
+
+    let mut t = BenchTable::new("Perf — PJRT hot path (65536-row blocks)", "value")
+        .columns(&["p50", "mean", "p99"]);
+    t.row_f("pjrt scan MTPS", &[pjrt.p50, pjrt.mean, pjrt.p99]);
+    t.row_f("native scan MTPS", &[native.p50, native.mean, native.p99]);
+    t.row_f("scan block µs", &[block.p50, block.mean, block.p99]);
+    t.row_f("agg block µs (mask-free)", &[agg.p50, agg.mean, agg.p99]);
+    for (threads, s) in &par_rows {
+        t.row_f(format!("pjrt scan MTPS ({threads}w)"), &[s.p50, s.mean, s.p99]);
+    }
+    t.row_f("q6 block µs", &[q6.p50, q6.mean, q6.p99]);
+    t.row_f("q1 block µs", &[q1s.p50, q1s.mean, q1s.p99]);
+    t.finish("perf_hotpath");
+
+    println!(
+        "\nscan block p50 {:.0} µs -> {:.1} MTPS/block; qualified={qualified}; \
+         pjrt/native ratio {:.2}",
+        block.p50,
+        n as f64 / block.p50,
+        pjrt.p50 / native.p50
+    );
+}

@@ -1,0 +1,231 @@
+//! Measurement *box* configuration (paper §3.2, Fig. 2).
+//!
+//! A box is a JSON file declaring a measurement job: which tasks to run,
+//! the parameter lists for each (cross-producted into tests), the metrics
+//! of interest, and the platforms to measure. Example:
+//!
+//! ```json
+//! {
+//!   "name": "network_and_pushdown",
+//!   "platforms": ["bf2", "host"],
+//!   "seed": 42,
+//!   "tasks": [
+//!     {
+//!       "task": "network",
+//!       "params": {"message_size": [1024, 32768], "threads": [1, 2, 4]},
+//!       "metrics": ["median", "p99", "throughput_gbps"]
+//!     },
+//!     {
+//!       "task": "pred_pushdown",
+//!       "params": {"scale": [10], "selectivity": [0.01], "threads": [8]},
+//!       "metrics": ["tuples_per_sec"]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::platform::PlatformId;
+use crate::util::json::{self, Value};
+
+use super::crossproduct::ParamSpace;
+
+/// One task entry in a box.
+#[derive(Debug, Clone)]
+pub struct TaskEntry {
+    pub task: String,
+    pub params: ParamSpace,
+    pub metrics: Vec<String>,
+}
+
+/// A parsed measurement box.
+#[derive(Debug, Clone)]
+pub struct BoxConfig {
+    pub name: String,
+    pub platforms: Vec<PlatformId>,
+    pub seed: u64,
+    pub tasks: Vec<TaskEntry>,
+}
+
+impl BoxConfig {
+    /// Parse a box from JSON text.
+    pub fn parse(text: &str) -> Result<BoxConfig> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("box config: {e}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Load a box from a file path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<BoxConfig> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading box {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing box {}", path.display()))
+    }
+
+    pub fn from_value(v: &Value) -> Result<BoxConfig> {
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("unnamed")
+            .to_string();
+
+        let platforms = match v.get("platforms") {
+            None => vec![PlatformId::HostEpyc],
+            Some(arr) => arr
+                .as_arr()
+                .context("'platforms' must be an array")?
+                .iter()
+                .map(|p| -> Result<PlatformId> {
+                    let s = p.as_str().context("platform must be a string")?;
+                    PlatformId::from_name(s)
+                        .with_context(|| format!("unknown platform '{s}' (host/bf2/bf3/octeon)"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        if platforms.is_empty() {
+            bail!("box declares an empty 'platforms' list");
+        }
+
+        let seed = v.get("seed").and_then(Value::as_i64).unwrap_or(42) as u64;
+
+        let tasks_v = v
+            .get("tasks")
+            .and_then(Value::as_arr)
+            .context("box missing 'tasks' array")?;
+        if tasks_v.is_empty() {
+            bail!("box declares no tasks");
+        }
+        let mut tasks = Vec::with_capacity(tasks_v.len());
+        for t in tasks_v {
+            let task = t
+                .get("task")
+                .or_else(|| t.get("name"))
+                .and_then(Value::as_str)
+                .context("task entry missing 'task' name")?
+                .to_string();
+            let mut params = ParamSpace::new();
+            if let Some(ps) = t.get("params") {
+                let obj = ps.as_obj().context("'params' must be an object")?;
+                for (k, vv) in obj {
+                    let list = match vv {
+                        // single scalars are promoted to one-element lists
+                        Value::Arr(a) => a.clone(),
+                        scalar => vec![scalar.clone()],
+                    };
+                    if list.is_empty() {
+                        bail!("task '{task}' parameter '{k}' has an empty list");
+                    }
+                    params.insert(k.clone(), list);
+                }
+            }
+            let metrics = match t.get("metrics") {
+                None => Vec::new(),
+                Some(m) => m
+                    .as_arr()
+                    .context("'metrics' must be an array")?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .context("metric names must be strings")
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            tasks.push(TaskEntry {
+                task,
+                params,
+                metrics,
+            });
+        }
+
+        Ok(BoxConfig {
+            name,
+            platforms,
+            seed,
+            tasks,
+        })
+    }
+
+    /// The paper's Fig. 2 example box: network microbenchmark + predicate
+    /// pushdown (used by the quickstart example and tests).
+    pub fn fig2_example() -> BoxConfig {
+        BoxConfig::parse(
+            r#"{
+              "name": "fig2",
+              "platforms": ["bf2"],
+              "tasks": [
+                {"task": "network",
+                 "params": {"message_size": [1024], "depth": [16], "threads": [1, 2, 4]},
+                 "metrics": ["median_lat_us", "p99_lat_us", "throughput_gbps"]},
+                {"task": "pred_pushdown",
+                 "params": {"scale": [1], "selectivity": [0.01], "threads": [4]},
+                 "metrics": ["tuples_per_sec"]}
+              ]
+            }"#,
+        )
+        .expect("fig2 example box is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_box() {
+        let b = BoxConfig::parse(
+            r#"{"name":"m","platforms":["host","bf3"],"seed":7,
+                "tasks":[{"task":"memory","params":{"object_size":[16384],"threads":[1,2]},
+                          "metrics":["throughput"]}]}"#,
+        )
+        .unwrap();
+        assert_eq!(b.name, "m");
+        assert_eq!(b.platforms, vec![PlatformId::HostEpyc, PlatformId::Bf3]);
+        assert_eq!(b.seed, 7);
+        assert_eq!(b.tasks.len(), 1);
+        assert_eq!(b.tasks[0].params["threads"].len(), 2);
+        assert_eq!(b.tasks[0].metrics, vec!["throughput"]);
+    }
+
+    #[test]
+    fn defaults_platform_and_seed() {
+        let b = BoxConfig::parse(r#"{"tasks":[{"task":"compute"}]}"#).unwrap();
+        assert_eq!(b.platforms, vec![PlatformId::HostEpyc]);
+        assert_eq!(b.seed, 42);
+        assert_eq!(b.name, "unnamed");
+        assert!(b.tasks[0].params.is_empty());
+    }
+
+    #[test]
+    fn scalar_params_promoted_to_lists() {
+        let b = BoxConfig::parse(
+            r#"{"tasks":[{"task":"storage","params":{"depth": 8, "pattern": "random"}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(b.tasks[0].params["depth"], vec![Value::Num(8.0)]);
+        assert_eq!(b.tasks[0].params["pattern"], vec![Value::str("random")]);
+    }
+
+    #[test]
+    fn rejects_bad_boxes() {
+        assert!(BoxConfig::parse("{}").is_err()); // no tasks
+        assert!(BoxConfig::parse(r#"{"tasks":[]}"#).is_err());
+        assert!(BoxConfig::parse(r#"{"tasks":[{"params":{}}]}"#).is_err()); // no name
+        assert!(
+            BoxConfig::parse(r#"{"platforms":["vax"],"tasks":[{"task":"t"}]}"#).is_err()
+        );
+        assert!(
+            BoxConfig::parse(r#"{"platforms":[],"tasks":[{"task":"t"}]}"#).is_err()
+        );
+        assert!(BoxConfig::parse(r#"{"tasks":[{"task":"t","params":{"x":[]}}]}"#).is_err());
+    }
+
+    #[test]
+    fn fig2_box_parses() {
+        let b = BoxConfig::fig2_example();
+        assert_eq!(b.tasks.len(), 2);
+        assert_eq!(b.tasks[0].task, "network");
+        assert_eq!(b.tasks[1].task, "pred_pushdown");
+    }
+}

@@ -1,0 +1,122 @@
+//! Test generation: cross-product of parameter value lists (paper §3.3 —
+//! "for each task, it performs cross-product joins between parameters to
+//! generate all possible combinations, i.e., tests". Metrics are *not*
+//! joined: one test can report several metrics).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+
+use super::task::TestSpec;
+
+/// Parameter space: name → list of candidate values.
+pub type ParamSpace = BTreeMap<String, Vec<Value>>;
+
+/// Expand the cross-product of all parameter lists into concrete tests.
+/// An empty space yields one empty test (a task with no parameters still
+/// runs once). Order is deterministic: parameters iterate in name order,
+/// the last-named parameter varies fastest.
+pub fn expand(space: &ParamSpace) -> Vec<TestSpec> {
+    let mut tests: Vec<TestSpec> = vec![BTreeMap::new()];
+    for (name, values) in space {
+        assert!(!values.is_empty(), "parameter '{name}' has no values");
+        let mut next = Vec::with_capacity(tests.len() * values.len());
+        for t in &tests {
+            for v in values {
+                let mut t2 = t.clone();
+                t2.insert(name.clone(), v.clone());
+                next.push(t2);
+            }
+        }
+        tests = next;
+    }
+    tests
+}
+
+/// Number of tests `expand` would produce (cheap pre-check so the
+/// executor can refuse absurd boxes before allocating).
+pub fn cardinality(space: &ParamSpace) -> usize {
+    space.values().map(Vec::len).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn space(pairs: &[(&str, &[i64])]) -> ParamSpace {
+        pairs
+            .iter()
+            .map(|(k, vs)| {
+                (
+                    k.to_string(),
+                    vs.iter().map(|&v| Value::Num(v as f64)).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_space_runs_once() {
+        let tests = expand(&ParamSpace::new());
+        assert_eq!(tests.len(), 1);
+        assert!(tests[0].is_empty());
+        assert_eq!(cardinality(&ParamSpace::new()), 1);
+    }
+
+    #[test]
+    fn two_by_three() {
+        let s = space(&[("a", &[1, 2]), ("b", &[10, 20, 30])]);
+        let tests = expand(&s);
+        assert_eq!(tests.len(), 6);
+        assert_eq!(cardinality(&s), 6);
+        // deterministic order: a varies slower than b
+        assert_eq!(tests[0]["a"], Value::Num(1.0));
+        assert_eq!(tests[0]["b"], Value::Num(10.0));
+        assert_eq!(tests[1]["b"], Value::Num(20.0));
+        assert_eq!(tests[3]["a"], Value::Num(2.0));
+    }
+
+    #[test]
+    fn mixed_types() {
+        let mut s = ParamSpace::new();
+        s.insert("pattern".into(), vec![Value::str("random"), Value::str("seq")]);
+        s.insert("threads".into(), vec![Value::Num(1.0)]);
+        let tests = expand(&s);
+        assert_eq!(tests.len(), 2);
+        assert!(tests.iter().all(|t| t.len() == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "has no values")]
+    fn empty_value_list_rejected() {
+        let mut s = ParamSpace::new();
+        s.insert("x".into(), vec![]);
+        expand(&s);
+    }
+
+    #[test]
+    fn property_cardinality_and_uniqueness() {
+        prop::check(40, |g| {
+            let nparams = 1 + g.usize(4);
+            let mut s = ParamSpace::new();
+            for p in 0..nparams {
+                let nvals = 1 + g.usize(4);
+                s.insert(
+                    format!("p{p}"),
+                    (0..nvals).map(|v| Value::Num(v as f64)).collect(),
+                );
+            }
+            let tests = expand(&s);
+            prop::expect(tests.len() == cardinality(&s), "cardinality")?;
+            // every test is a full assignment and all tests are distinct
+            let mut keys: Vec<String> = tests.iter().map(|t| {
+                t.iter().map(|(k, v)| format!("{k}={}", v.to_compact())).collect::<Vec<_>>().join(";")
+            }).collect();
+            keys.sort();
+            keys.dedup();
+            prop::expect(keys.len() == tests.len(), "distinct tests")?;
+            prop::expect(tests.iter().all(|t| t.len() == nparams), "full assignment")
+        });
+    }
+}

@@ -1,0 +1,299 @@
+//! The box execution engine (paper §3.3, Fig. 3): parse → generate tests
+//! (cross-product) → ① prepare once per task → ② run tests sequentially,
+//! caching logs → ③ report. Clean (④) is deferred to an explicit command,
+//! mirroring the paper ("we do not invoke the clean script immediately
+//! after each task ... a command line is provided for users to explicitly
+//! clean up").
+
+use anyhow::Result;
+
+use crate::platform::PlatformId;
+
+use super::box_config::{BoxConfig, TaskEntry};
+use super::crossproduct::{cardinality, expand};
+use super::registry::Registry;
+use super::report::{BoxReport, TaskReport};
+use super::task::{TaskContext, TestRecord};
+
+/// Guard against combinatorially absurd boxes: the cross-product of one
+/// task entry may not exceed this many tests.
+pub const MAX_TESTS_PER_TASK: usize = 100_000;
+
+/// Execution engine options.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Filter the metrics in reports to those the box requested (the
+    /// paper's "metrics of interest"). When false, report everything.
+    pub filter_metrics: bool,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            filter_metrics: true,
+            verbose: false,
+        }
+    }
+}
+
+/// Execute a box against a registry. Per-test failures are recorded in the
+/// report, not fatal; configuration errors (unknown task, absurd
+/// cross-products, unknown metric names) fail fast.
+pub fn run_box(registry: &Registry, cfg: &BoxConfig, opts: &ExecOptions) -> Result<BoxReport> {
+    // validate everything before running anything
+    for entry in &cfg.tasks {
+        let task = registry.get(&entry.task)?;
+        let n = cardinality(&entry.params);
+        anyhow::ensure!(
+            n <= MAX_TESTS_PER_TASK,
+            "task '{}' expands to {n} tests (limit {MAX_TESTS_PER_TASK})",
+            entry.task
+        );
+        let known = task.metrics();
+        for m in &entry.metrics {
+            anyhow::ensure!(
+                known.contains(&m.as_str()),
+                "task '{}' has no metric '{m}' (has: {})",
+                entry.task,
+                known.join(", ")
+            );
+        }
+    }
+
+    let mut reports = Vec::new();
+    for platform in &cfg.platforms {
+        for entry in &cfg.tasks {
+            reports.push(run_task_on(registry, cfg, entry, *platform, opts)?);
+        }
+    }
+    Ok(BoxReport {
+        box_name: cfg.name.clone(),
+        tasks: reports,
+    })
+}
+
+fn run_task_on(
+    registry: &Registry,
+    cfg: &BoxConfig,
+    entry: &TaskEntry,
+    platform: PlatformId,
+    opts: &ExecOptions,
+) -> Result<TaskReport> {
+    let task = registry.get(&entry.task)?;
+    let mut ctx = TaskContext::new(platform, cfg.seed);
+
+    if !task.supports(platform) {
+        // §3.2: plugins may not be portable; report the skip instead of
+        // failing the box.
+        return Ok(TaskReport {
+            task: entry.task.clone(),
+            platform,
+            records: Vec::new(),
+            rendered: format!(
+                "## task {} on {platform}: skipped (unsupported on this platform)\n",
+                entry.task
+            ),
+            logs: Vec::new(),
+            failures: Vec::new(),
+        });
+    }
+
+    // ① prepare once for all tests of this task
+    if opts.verbose {
+        eprintln!("[dpbento] prepare {} on {platform}", entry.task);
+    }
+    task.prepare(&mut ctx)?;
+    ctx.mark_prepared();
+
+    // ② run every generated test
+    let tests = expand(&entry.params);
+    let mut records = Vec::with_capacity(tests.len());
+    let mut failures = Vec::new();
+    for (i, spec) in tests.iter().enumerate() {
+        if opts.verbose {
+            eprintln!(
+                "[dpbento]   test {}/{} {}",
+                i + 1,
+                tests.len(),
+                spec_string(spec)
+            );
+        }
+        match task.run(&mut ctx, spec) {
+            Ok(mut result) => {
+                if opts.filter_metrics && !entry.metrics.is_empty() {
+                    result.retain(|k, _| entry.metrics.iter().any(|m| m == k));
+                }
+                records.push(TestRecord {
+                    spec: spec.clone(),
+                    result,
+                });
+            }
+            Err(e) => failures.push((spec_string(spec), format!("{e:#}"))),
+        }
+    }
+
+    // ③ report
+    let rendered = task.report(&ctx, &records);
+    Ok(TaskReport {
+        task: entry.task.clone(),
+        platform,
+        records,
+        rendered,
+        logs: ctx.logs().to_vec(),
+        failures,
+    })
+}
+
+/// Explicit cleanup (§3.3 step ④): run every task's clean step.
+pub fn clean_all(registry: &Registry, platform: PlatformId) -> Result<Vec<&'static str>> {
+    let mut cleaned = Vec::new();
+    for task in registry.iter() {
+        let mut ctx = TaskContext::new(platform, 0);
+        task.clean(&mut ctx)?;
+        cleaned.push(task.name());
+    }
+    Ok(cleaned)
+}
+
+fn spec_string(spec: &super::task::TestSpec) -> String {
+    spec.iter()
+        .map(|(k, v)| format!("{k}={}", v.to_compact()))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{ParamDef, Task, TestResult, TestSpec};
+    use crate::util::json::Value;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    static PREPARES: AtomicUsize = AtomicUsize::new(0);
+
+    struct Probe;
+    impl Task for Probe {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn description(&self) -> &'static str {
+            "test double"
+        }
+        fn params(&self) -> Vec<ParamDef> {
+            vec![ParamDef::new("x", "value", "[1,2]")]
+        }
+        fn metrics(&self) -> Vec<&'static str> {
+            vec!["doubled", "tripled"]
+        }
+        fn prepare(&self, ctx: &mut crate::coordinator::task::TaskContext) -> anyhow::Result<()> {
+            PREPARES.fetch_add(1, Ordering::SeqCst);
+            ctx.log("prepared");
+            Ok(())
+        }
+        fn run(
+            &self,
+            _ctx: &mut crate::coordinator::task::TaskContext,
+            test: &TestSpec,
+        ) -> anyhow::Result<TestResult> {
+            let x = test.get("x").and_then(Value::as_f64).unwrap_or(0.0);
+            if x < 0.0 {
+                anyhow::bail!("negative x");
+            }
+            Ok(BTreeMap::from([
+                ("doubled".to_string(), 2.0 * x),
+                ("tripled".to_string(), 3.0 * x),
+            ]))
+        }
+    }
+
+    fn registry() -> Registry {
+        let mut r = Registry::empty();
+        r.register(Arc::new(Probe));
+        r
+    }
+
+    fn cfg(json: &str) -> BoxConfig {
+        BoxConfig::parse(json).unwrap()
+    }
+
+    #[test]
+    fn prepare_once_tests_crossproducted() {
+        PREPARES.store(0, Ordering::SeqCst);
+        let c = cfg(
+            r#"{"name":"t","tasks":[{"task":"probe","params":{"x":[1,2,3]},
+                "metrics":["doubled"]}]}"#,
+        );
+        let rep = run_box(&registry(), &c, &ExecOptions::default()).unwrap();
+        assert_eq!(PREPARES.load(Ordering::SeqCst), 1);
+        assert_eq!(rep.tasks.len(), 1);
+        assert_eq!(rep.tasks[0].records.len(), 3);
+        // metric filtering keeps only the requested metric
+        assert!(rep.tasks[0].records[0].result.contains_key("doubled"));
+        assert!(!rep.tasks[0].records[0].result.contains_key("tripled"));
+        assert_eq!(rep.tasks[0].logs, vec!["prepared"]);
+    }
+
+    #[test]
+    fn per_test_failures_recorded_not_fatal() {
+        let c = cfg(r#"{"tasks":[{"task":"probe","params":{"x":[-1,5]}}]}"#);
+        let rep = run_box(&registry(), &c, &ExecOptions::default()).unwrap();
+        assert_eq!(rep.tasks[0].records.len(), 1);
+        assert_eq!(rep.tasks[0].failures.len(), 1);
+        assert!(rep.tasks[0].failures[0].1.contains("negative x"));
+        assert_eq!(rep.failure_count(), 1);
+    }
+
+    #[test]
+    fn unknown_metric_fails_fast() {
+        let c = cfg(r#"{"tasks":[{"task":"probe","metrics":["latency"]}]}"#);
+        let err = run_box(&registry(), &c, &ExecOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no metric 'latency'"), "{err}");
+    }
+
+    #[test]
+    fn unknown_task_fails_fast() {
+        let c = cfg(r#"{"tasks":[{"task":"ghost"}]}"#);
+        assert!(run_box(&registry(), &c, &ExecOptions::default()).is_err());
+    }
+
+    #[test]
+    fn multi_platform_runs_task_per_platform() {
+        let c = cfg(
+            r#"{"platforms":["host","bf2","bf3"],
+                "tasks":[{"task":"probe","params":{"x":[1]}}]}"#,
+        );
+        let rep = run_box(&registry(), &c, &ExecOptions::default()).unwrap();
+        assert_eq!(rep.tasks.len(), 3);
+        let platforms: Vec<_> = rep.tasks.iter().map(|t| t.platform).collect();
+        assert_eq!(
+            platforms,
+            vec![PlatformId::HostEpyc, PlatformId::Bf2, PlatformId::Bf3]
+        );
+    }
+
+    #[test]
+    fn absurd_crossproduct_rejected() {
+        // 100^3 = 1e6 > limit
+        let values: Vec<String> = (0..100).map(|i| i.to_string()).collect();
+        let arr = format!("[{}]", values.join(","));
+        let c = cfg(&format!(
+            r#"{{"tasks":[{{"task":"probe","params":{{"a":{arr},"b":{arr},"c":{arr}}}}}]}}"#
+        ));
+        let err = run_box(&registry(), &c, &ExecOptions::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expands to"), "{err}");
+    }
+
+    #[test]
+    fn clean_all_reports_cleaned_tasks() {
+        let cleaned = clean_all(&registry(), PlatformId::HostEpyc).unwrap();
+        assert_eq!(cleaned, vec!["probe"]);
+    }
+}

@@ -1,0 +1,17 @@
+//! The dpBento framework core (the paper's contribution, §3): task
+//! abstraction, measurement boxes, cross-product test generation, the
+//! execution engine, report assembly, and the external-plugin adapter.
+
+pub mod box_config;
+pub mod crossproduct;
+pub mod executor;
+pub mod plugin;
+pub mod registry;
+pub mod report;
+pub mod task;
+
+pub use box_config::BoxConfig;
+pub use executor::{clean_all, run_box, ExecOptions};
+pub use registry::Registry;
+pub use report::{BoxReport, TaskReport};
+pub use task::{ParamDef, SpecExt, Task, TaskContext, TestRecord, TestResult, TestSpec};

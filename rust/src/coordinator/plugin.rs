@@ -1,0 +1,288 @@
+//! Ad-hoc plugin tasks (paper §3.2): a user drops a directory into the
+//! repository containing a `plugin.json` manifest plus executable scripts
+//! for the four task steps, "the shells of arbitrary performance test
+//! implementations (i.e., in arbitrary language with arbitrary
+//! dependencies)". [`ShellTask`] adapts such a directory to the [`Task`]
+//! trait.
+//!
+//! Manifest format (`plugin.json`):
+//! ```json
+//! {
+//!   "name": "my_accel",
+//!   "description": "measures my accelerator",
+//!   "metrics": ["throughput_mbps"],
+//!   "platforms": ["bf2", "bf3"],
+//!   "steps": {
+//!     "prepare": "./prepare.sh",
+//!     "run": "./run.sh",
+//!     "clean": "./clean.sh"
+//!   }
+//! }
+//! ```
+//! The run step receives the test parameters as `DPBENTO_PARAM_<NAME>`
+//! environment variables plus `DPBENTO_PLATFORM`/`DPBENTO_SEED`, and must
+//! print one `metric=value` pair per line on stdout.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use anyhow::{bail, Context, Result};
+
+use crate::platform::PlatformId;
+use crate::util::json::{self, Value};
+
+use super::task::{ParamDef, Task, TaskContext, TestResult, TestSpec};
+
+/// A plugin task backed by external executables.
+pub struct ShellTask {
+    name: &'static str,
+    description: &'static str,
+    metrics: Vec<&'static str>,
+    platforms: Option<Vec<PlatformId>>,
+    dir: PathBuf,
+    prepare_cmd: Option<String>,
+    run_cmd: String,
+    clean_cmd: Option<String>,
+}
+
+impl ShellTask {
+    /// Load a plugin directory containing `plugin.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ShellTask> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("plugin.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", manifest_path.display()))?;
+
+        // Task::name returns &'static str: plugin names live for the
+        // process lifetime once loaded.
+        let name: &'static str =
+            Box::leak(req_str(&v, "name")?.to_string().into_boxed_str());
+        let description: &'static str = Box::leak(
+            v.get("description")
+                .and_then(Value::as_str)
+                .unwrap_or("external plugin task")
+                .to_string()
+                .into_boxed_str(),
+        );
+        let metrics: Vec<&'static str> = v
+            .get("metrics")
+            .and_then(Value::as_arr)
+            .context("plugin.json missing 'metrics'")?
+            .iter()
+            .map(|m| -> Result<&'static str> {
+                Ok(Box::leak(
+                    m.as_str().context("metric must be string")?.to_string().into_boxed_str(),
+                ))
+            })
+            .collect::<Result<_>>()?;
+        if metrics.is_empty() {
+            bail!("plugin '{name}' declares no metrics");
+        }
+
+        let platforms = match v.get("platforms") {
+            None => None,
+            Some(arr) => Some(
+                arr.as_arr()
+                    .context("'platforms' must be an array")?
+                    .iter()
+                    .map(|p| -> Result<PlatformId> {
+                        let s = p.as_str().context("platform must be string")?;
+                        PlatformId::from_name(s).with_context(|| format!("unknown platform {s}"))
+                    })
+                    .collect::<Result<_>>()?,
+            ),
+        };
+
+        let steps = v.get("steps").context("plugin.json missing 'steps'")?;
+        let run_cmd = steps
+            .get("run")
+            .and_then(Value::as_str)
+            .context("steps.run is required")?
+            .to_string();
+        let prepare_cmd = steps.get("prepare").and_then(Value::as_str).map(String::from);
+        let clean_cmd = steps.get("clean").and_then(Value::as_str).map(String::from);
+
+        Ok(ShellTask {
+            name,
+            description,
+            metrics,
+            platforms,
+            dir,
+            prepare_cmd,
+            run_cmd,
+            clean_cmd,
+        })
+    }
+
+    fn exec(&self, cmd: &str, ctx: &TaskContext, test: Option<&TestSpec>) -> Result<String> {
+        let mut c = Command::new("sh");
+        c.arg("-c").arg(cmd).current_dir(&self.dir);
+        c.env("DPBENTO_PLATFORM", ctx.platform.name());
+        c.env("DPBENTO_SEED", ctx.seed.to_string());
+        if let Some(spec) = test {
+            for (k, v) in spec {
+                let val = match v {
+                    Value::Str(s) => s.clone(),
+                    other => other.to_compact(),
+                };
+                c.env(format!("DPBENTO_PARAM_{}", k.to_uppercase()), val);
+            }
+        }
+        let out = c
+            .output()
+            .with_context(|| format!("spawning plugin step: {cmd}"))?;
+        if !out.status.success() {
+            bail!(
+                "plugin step failed ({}): {}",
+                out.status,
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        Ok(String::from_utf8_lossy(&out.stdout).into_owned())
+    }
+}
+
+impl Task for ShellTask {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn description(&self) -> &'static str {
+        self.description
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        // external plugins declare their parameter space in their own docs;
+        // the framework passes through whatever the box provides.
+        vec![ParamDef::new(
+            "*",
+            "passed through as DPBENTO_PARAM_* environment variables",
+            "any",
+        )]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        self.metrics.clone()
+    }
+    fn supports(&self, platform: PlatformId) -> bool {
+        self.platforms
+            .as_ref()
+            .map_or(true, |ps| ps.contains(&platform))
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        if let Some(cmd) = &self.prepare_cmd {
+            let out = self.exec(cmd, ctx, None)?;
+            for line in out.lines() {
+                ctx.log(format!("prepare: {line}"));
+            }
+        }
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let out = self.exec(&self.run_cmd, ctx, Some(test))?;
+        let mut result = BTreeMap::new();
+        for line in out.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                if let Ok(num) = v.trim().parse::<f64>() {
+                    result.insert(k.trim().to_string(), num);
+                }
+            }
+        }
+        if result.is_empty() {
+            bail!("plugin run step produced no 'metric=value' lines: {out:?}");
+        }
+        Ok(result)
+    }
+    fn clean(&self, ctx: &mut TaskContext) -> Result<()> {
+        if let Some(cmd) = &self.clean_cmd {
+            self.exec(cmd, ctx, None)?;
+        }
+        ctx.clear();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn plugin_dir(name: &str, manifest: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dpbento_plugin_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("plugin.json"), manifest).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_runs_shell_plugin() {
+        let dir = plugin_dir(
+            "echo",
+            r#"{"name":"shellecho","description":"d","metrics":["value","twice"],
+               "steps":{"run":"echo value=$DPBENTO_PARAM_X; echo twice=$((DPBENTO_PARAM_X * 2))"}}"#,
+        );
+        let t = ShellTask::load(&dir).unwrap();
+        assert_eq!(t.name(), "shellecho");
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 3);
+        t.prepare(&mut ctx).unwrap();
+        let spec: TestSpec = BTreeMap::from([("x".to_string(), Value::Num(21.0))]);
+        let r = t.run(&mut ctx, &spec).unwrap();
+        assert_eq!(r["value"], 21.0);
+        assert_eq!(r["twice"], 42.0);
+    }
+
+    #[test]
+    fn platform_restriction_respected() {
+        let dir = plugin_dir(
+            "bf_only",
+            r#"{"name":"bfonly","metrics":["m"],"platforms":["bf2","bf3"],
+               "steps":{"run":"echo m=1"}}"#,
+        );
+        let t = ShellTask::load(&dir).unwrap();
+        assert!(t.supports(PlatformId::Bf2));
+        assert!(!t.supports(PlatformId::HostEpyc));
+    }
+
+    #[test]
+    fn failing_step_is_error() {
+        let dir = plugin_dir(
+            "fail",
+            r#"{"name":"failing","metrics":["m"],"steps":{"run":"echo oops >&2; exit 3"}}"#,
+        );
+        let t = ShellTask::load(&dir).unwrap();
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        let err = t.run(&mut ctx, &BTreeMap::new()).unwrap_err().to_string();
+        assert!(err.contains("oops"), "{err}");
+    }
+
+    #[test]
+    fn no_metrics_output_is_error() {
+        let dir = plugin_dir(
+            "silent",
+            r#"{"name":"silent","metrics":["m"],"steps":{"run":"true"}}"#,
+        );
+        let t = ShellTask::load(&dir).unwrap();
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        assert!(t.run(&mut ctx, &BTreeMap::new()).is_err());
+    }
+
+    #[test]
+    fn bad_manifests_rejected() {
+        for m in [
+            r#"{"metrics":["m"],"steps":{"run":"true"}}"#,      // no name
+            r#"{"name":"x","steps":{"run":"true"}}"#,            // no metrics
+            r#"{"name":"x","metrics":[],"steps":{"run":"true"}}"#, // empty metrics
+            r#"{"name":"x","metrics":["m"],"steps":{}}"#,        // no run
+        ] {
+            let dir = plugin_dir("bad", m);
+            assert!(ShellTask::load(&dir).is_err(), "{m}");
+        }
+    }
+}
+
+fn req_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .with_context(|| format!("plugin.json missing '{key}'"))
+}

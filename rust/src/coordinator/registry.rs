@@ -1,0 +1,123 @@
+//! Task registry: name → implementation, covering the built-in tasks
+//! (Table 1) and any registered plugins (§3.2).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::task::Task;
+
+/// A registry of available tasks. `Registry::builtin()` loads every task
+/// the paper ships (micro + module + full-system) plus the accelerator and
+/// RDMA plugin tasks; users add ad-hoc plugins with `register`.
+#[derive(Default, Clone)]
+pub struct Registry {
+    tasks: BTreeMap<&'static str, Arc<dyn Task>>,
+}
+
+impl Registry {
+    pub fn empty() -> Registry {
+        Registry::default()
+    }
+
+    /// All built-in tasks + bundled plugins (Table 1 and §5.2/§6.2).
+    pub fn builtin() -> Registry {
+        let mut r = Registry::empty();
+        // microbenchmarks (§3.4)
+        r.register(Arc::new(crate::tasks::compute::ComputeTask));
+        r.register(Arc::new(crate::tasks::memory::MemoryTask));
+        r.register(Arc::new(crate::tasks::storage::StorageTask));
+        r.register(Arc::new(crate::tasks::network::NetworkTask));
+        // cloud database modules (§3.5)
+        r.register(Arc::new(crate::tasks::pred_pushdown::PredPushdownTask::default()));
+        r.register(Arc::new(crate::tasks::index_offload::IndexOffloadTask));
+        // full DBMS (§3.6)
+        r.register(Arc::new(crate::tasks::dbms::DbmsTask));
+        // plugins (§3.2 / §5.2 / §6.2)
+        r.register(Arc::new(crate::plugins::compression::CompressionTask::compress()));
+        r.register(Arc::new(crate::plugins::compression::CompressionTask::decompress()));
+        r.register(Arc::new(crate::plugins::regex_match::RegexTask));
+        r.register(Arc::new(crate::plugins::rdma::RdmaTask));
+        r
+    }
+
+    /// Register (or replace) a task implementation.
+    pub fn register(&mut self, task: Arc<dyn Task>) {
+        self.tasks.insert(task.name(), task);
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Task>> {
+        self.tasks
+            .get(name)
+            .cloned()
+            .with_context(|| {
+                format!(
+                    "unknown task '{name}' (available: {})",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.tasks.keys().copied().collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn Task>> {
+        self.tasks.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_covers_table1_and_plugins() {
+        let r = Registry::builtin();
+        // Table 1: micro (4) + modules (2) + full system (1)
+        for name in [
+            "compute",
+            "memory",
+            "storage",
+            "network",
+            "pred_pushdown",
+            "index_offload",
+            "dbms",
+        ] {
+            assert!(r.get(name).is_ok(), "missing builtin {name}");
+        }
+        // bundled plugins
+        for name in ["compression", "decompression", "regex", "rdma"] {
+            assert!(r.get(name).is_ok(), "missing plugin {name}");
+        }
+        assert_eq!(r.len(), 11);
+    }
+
+    #[test]
+    fn unknown_task_error_lists_available() {
+        let r = Registry::builtin();
+        let err = r.get("nope").err().map(|e| e.to_string()).unwrap();
+        assert!(err.contains("unknown task 'nope'"));
+        assert!(err.contains("compute"));
+    }
+
+    #[test]
+    fn every_task_documents_params_and_metrics() {
+        for t in Registry::builtin().iter() {
+            assert!(!t.description().is_empty(), "{}", t.name());
+            assert!(!t.metrics().is_empty(), "{}", t.name());
+            // params may be empty, but definitions must have docs
+            for p in t.params() {
+                assert!(!p.doc.is_empty(), "{}::{}", t.name(), p.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Report assembly (paper §3.1 "Report" step and §3.3 step ③): collect
+//! per-test records into a user-facing document — rendered text plus a
+//! machine-readable JSON dump.
+
+use crate::platform::PlatformId;
+use crate::util::json::Value;
+
+use super::task::TestRecord;
+
+/// Results of one (task × platform) execution.
+#[derive(Debug, Clone)]
+pub struct TaskReport {
+    pub task: String,
+    pub platform: PlatformId,
+    pub records: Vec<TestRecord>,
+    /// The task's own rendered report section.
+    pub rendered: String,
+    /// Intermediate log lines cached during the run.
+    pub logs: Vec<String>,
+    /// Tests that failed (spec + error), kept for the summary.
+    pub failures: Vec<(String, String)>,
+}
+
+/// The complete output of one box execution.
+#[derive(Debug, Clone)]
+pub struct BoxReport {
+    pub box_name: String,
+    pub tasks: Vec<TaskReport>,
+}
+
+impl BoxReport {
+    /// Human-readable report (what the framework prints at step ③).
+    pub fn render(&self) -> String {
+        let mut out = format!("# dpBento report: box '{}'\n", self.box_name);
+        let total: usize = self.tasks.iter().map(|t| t.records.len()).sum();
+        let failed: usize = self.tasks.iter().map(|t| t.failures.len()).sum();
+        out.push_str(&format!(
+            "# {} task-runs, {} tests, {} failures\n\n",
+            self.tasks.len(),
+            total,
+            failed
+        ));
+        for t in &self.tasks {
+            out.push_str(&t.rendered);
+            if !t.failures.is_empty() {
+                out.push_str(&format!("  !! {} failed tests:\n", t.failures.len()));
+                for (spec, err) in &t.failures {
+                    out.push_str(&format!("     [{spec}] {err}\n"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable JSON (the artifact a CI harness would archive).
+    pub fn to_json(&self) -> Value {
+        let tasks: Vec<Value> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let records: Vec<Value> = t
+                    .records
+                    .iter()
+                    .map(|r| {
+                        let params =
+                            Value::Obj(r.spec.iter().map(|(k, v)| (k.clone(), v.clone())).collect());
+                        let metrics = Value::Obj(
+                            r.result
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Value::Num(*v)))
+                                .collect(),
+                        );
+                        Value::obj([
+                            ("params".to_string(), params),
+                            ("metrics".to_string(), metrics),
+                        ])
+                    })
+                    .collect();
+                Value::obj([
+                    ("task".to_string(), Value::str(t.task.clone())),
+                    ("platform".to_string(), Value::str(t.platform.name())),
+                    ("records".to_string(), Value::Arr(records)),
+                    (
+                        "failures".to_string(),
+                        Value::Arr(
+                            t.failures
+                                .iter()
+                                .map(|(s, e)| {
+                                    Value::obj([
+                                        ("test".to_string(), Value::str(s.clone())),
+                                        ("error".to_string(), Value::str(e.clone())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj([
+            ("box".to_string(), Value::str(self.box_name.clone())),
+            ("tasks".to_string(), Value::Arr(tasks)),
+        ])
+    }
+
+    /// Write both renderings under `dir` as `<box>.txt` / `<box>.json`.
+    pub fn write_to(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.box_name)), self.render())?;
+        std::fs::write(
+            dir.join(format!("{}.json", self.box_name)),
+            self.to_json().to_pretty(),
+        )?;
+        Ok(())
+    }
+
+    pub fn failure_count(&self) -> usize {
+        self.tasks.iter().map(|t| t.failures.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn sample() -> BoxReport {
+        BoxReport {
+            box_name: "b".into(),
+            tasks: vec![TaskReport {
+                task: "compute".into(),
+                platform: PlatformId::Bf3,
+                records: vec![TestRecord {
+                    spec: BTreeMap::from([("op".to_string(), Value::str("add"))]),
+                    result: BTreeMap::from([("ops_per_sec".to_string(), 1.69e9)]),
+                }],
+                rendered: "## task compute on bf3\n".into(),
+                logs: vec!["prepared".into()],
+                failures: vec![("op=div".into(), "boom".into())],
+            }],
+        }
+    }
+
+    #[test]
+    fn render_includes_counts_and_failures() {
+        let r = sample().render();
+        assert!(r.contains("box 'b'"));
+        assert!(r.contains("1 tests, 1 failures"));
+        assert!(r.contains("[op=div] boom"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let j = sample().to_json();
+        let reparsed = crate::util::json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(reparsed, j);
+        let tasks = reparsed.get("tasks").unwrap().as_arr().unwrap();
+        assert_eq!(tasks[0].get("platform").unwrap().as_str().unwrap(), "bf3");
+        let rec = &tasks[0].get("records").unwrap().as_arr().unwrap()[0];
+        assert_eq!(
+            rec.get("metrics").unwrap().get("ops_per_sec").unwrap().as_f64(),
+            Some(1.69e9)
+        );
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("dpbento_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        sample().write_to(&dir).unwrap();
+        assert!(dir.join("b.txt").exists());
+        assert!(dir.join("b.json").exists());
+    }
+}

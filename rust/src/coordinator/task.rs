@@ -1,0 +1,280 @@
+//! The dpBento task abstraction (paper §3.1).
+//!
+//! A *task* is a data-processing workload implemented behind four steps —
+//! **prepare** (set up environment/data), **run** (execute one test: a
+//! concrete parameter combination, producing metric values), **report**
+//! (format collected results), and **clean** (restore pre-task state).
+//! The framework owns everything else: test generation from parameter
+//! cross-products (§3.3), execution, log caching, and report assembly.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::platform::PlatformId;
+use crate::util::json::Value;
+
+/// One concrete test: a full assignment of task parameters.
+pub type TestSpec = BTreeMap<String, Value>;
+
+/// Metric values produced by one test run.
+pub type TestResult = BTreeMap<String, f64>;
+
+/// A parameter the task accepts, with documentation and an example domain
+/// (used by `dpbento list-tasks` and by box validation).
+#[derive(Debug, Clone)]
+pub struct ParamDef {
+    pub name: &'static str,
+    pub doc: &'static str,
+    /// Example values (informational; boxes may pass any JSON scalars).
+    pub example: &'static str,
+}
+
+impl ParamDef {
+    pub const fn new(name: &'static str, doc: &'static str, example: &'static str) -> Self {
+        ParamDef { name, doc, example }
+    }
+}
+
+/// Execution context handed to a task: the target platform, a scratch
+/// key-value store populated in `prepare` and read in `run` (generated
+/// tables, compiled runtimes, corpora...), intermediate log lines (the
+/// paper's cached per-test logs), and the box-level seed.
+pub struct TaskContext {
+    pub platform: PlatformId,
+    pub seed: u64,
+    state: BTreeMap<String, Box<dyn Any>>,
+    logs: Vec<String>,
+    prepared: bool,
+    cleaned: bool,
+}
+
+impl TaskContext {
+    pub fn new(platform: PlatformId, seed: u64) -> TaskContext {
+        TaskContext {
+            platform,
+            seed,
+            state: BTreeMap::new(),
+            logs: Vec::new(),
+            prepared: false,
+            cleaned: false,
+        }
+    }
+
+    /// Store a prepared object under `key`.
+    pub fn put<T: Any>(&mut self, key: &str, value: T) {
+        self.state.insert(key.to_string(), Box::new(value));
+    }
+
+    /// Borrow a prepared object; panics with the key name if missing or of
+    /// the wrong type (a task-implementation bug, not user input).
+    pub fn get<T: Any>(&self, key: &str) -> &T {
+        self.state
+            .get(key)
+            .unwrap_or_else(|| panic!("context missing '{key}' — prepare() not run?"))
+            .downcast_ref::<T>()
+            .unwrap_or_else(|| panic!("context '{key}' has unexpected type"))
+    }
+
+    pub fn get_mut<T: Any>(&mut self, key: &str) -> &mut T {
+        self.state
+            .get_mut(key)
+            .unwrap_or_else(|| panic!("context missing '{key}' — prepare() not run?"))
+            .downcast_mut::<T>()
+            .unwrap_or_else(|| panic!("context '{key}' has unexpected type"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.state.contains_key(key)
+    }
+
+    /// Append an intermediate log line (cached, surfaced by reports).
+    pub fn log(&mut self, line: impl Into<String>) {
+        self.logs.push(line.into());
+    }
+
+    pub fn logs(&self) -> &[String] {
+        &self.logs
+    }
+
+    /// Drop all prepared state (the framework calls this from `clean`).
+    pub fn clear(&mut self) {
+        self.state.clear();
+        self.cleaned = true;
+    }
+
+    pub fn mark_prepared(&mut self) {
+        self.prepared = true;
+    }
+    pub fn is_prepared(&self) -> bool {
+        self.prepared
+    }
+    pub fn is_cleaned(&self) -> bool {
+        self.cleaned
+    }
+}
+
+/// A completed test: its parameter assignment plus measured metrics.
+#[derive(Debug, Clone)]
+pub struct TestRecord {
+    pub spec: TestSpec,
+    pub result: TestResult,
+}
+
+/// The task interface (§3.1). Implementations live in `tasks/` (built-in)
+/// and `plugins/` (vendor-specific features); ad-hoc external plugins are
+/// adapted through `coordinator::plugin::ShellTask`.
+pub trait Task: Send + Sync {
+    /// Unique task name used in box configs (Table 1's left column).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `list-tasks`.
+    fn description(&self) -> &'static str;
+
+    /// The parameters this task understands (Table 1's right column).
+    fn params(&self) -> Vec<ParamDef>;
+
+    /// Metric names `run` may emit (box `metrics` lists are validated
+    /// against this).
+    fn metrics(&self) -> Vec<&'static str>;
+
+    /// Whether the task can run on this platform (plugins depending on
+    /// missing accelerators refuse politely — §3.2: "portability is not
+    /// expected" of plugins).
+    fn supports(&self, _platform: PlatformId) -> bool {
+        true
+    }
+
+    /// Step 1: set up data/environment for all tests of this task.
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()>;
+
+    /// Step 2: execute one test, returning its metric values.
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult>;
+
+    /// Step 3: format the collected records. The default renders a
+    /// generic parameter/metric table; tasks may override for
+    /// figure-shaped output.
+    fn report(&self, ctx: &TaskContext, records: &[TestRecord]) -> String {
+        let mut out = format!("## task {} on {}\n", self.name(), ctx.platform);
+        for r in records {
+            let params: Vec<String> = r
+                .spec
+                .iter()
+                .map(|(k, v)| format!("{k}={}", v.to_compact()))
+                .collect();
+            let metrics: Vec<String> = r
+                .result
+                .iter()
+                .map(|(k, v)| format!("{k}={}", crate::util::bench::fmt_sig(*v)))
+                .collect();
+            out.push_str(&format!("  [{}] -> {}\n", params.join(", "), metrics.join(", ")));
+        }
+        out
+    }
+
+    /// Step 4: remove all effects (drop prepared state). The framework
+    /// defers this to an explicit `dpbento clean` (§3.3: preparation is
+    /// expensive and shared between boxes).
+    fn clean(&self, ctx: &mut TaskContext) -> Result<()> {
+        ctx.clear();
+        Ok(())
+    }
+}
+
+/// Convenience accessors for reading typed parameters out of a TestSpec.
+pub trait SpecExt {
+    fn usize_or(&self, key: &str, default: usize) -> usize;
+    fn f64_or(&self, key: &str, default: f64) -> f64;
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str;
+}
+
+impl SpecExt for TestSpec {
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_usize).unwrap_or(default)
+    }
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Task for Echo {
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+        fn description(&self) -> &'static str {
+            "returns its 'x' parameter as metric 'value'"
+        }
+        fn params(&self) -> Vec<ParamDef> {
+            vec![ParamDef::new("x", "the value", "[1, 2]")]
+        }
+        fn metrics(&self) -> Vec<&'static str> {
+            vec!["value"]
+        }
+        fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+            ctx.put("offset", 10.0f64);
+            ctx.mark_prepared();
+            Ok(())
+        }
+        fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+            let x = test.f64_or("x", 0.0);
+            let off: &f64 = ctx.get("offset");
+            Ok(BTreeMap::from([("value".to_string(), x + off)]))
+        }
+    }
+
+    #[test]
+    fn lifecycle_and_state() {
+        let t = Echo;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        t.prepare(&mut ctx).unwrap();
+        assert!(ctx.is_prepared());
+        let spec: TestSpec = BTreeMap::from([("x".to_string(), Value::Num(5.0))]);
+        let r = t.run(&mut ctx, &spec).unwrap();
+        assert_eq!(r["value"], 15.0);
+        t.clean(&mut ctx).unwrap();
+        assert!(ctx.is_cleaned());
+        assert!(!ctx.has("offset"));
+    }
+
+    #[test]
+    #[should_panic(expected = "missing 'offset'")]
+    fn missing_state_panics_clearly() {
+        let ctx = TaskContext::new(PlatformId::Bf2, 1);
+        let _: &f64 = ctx.get("offset");
+    }
+
+    #[test]
+    fn default_report_renders_params_and_metrics() {
+        let t = Echo;
+        let ctx = TaskContext::new(PlatformId::Bf3, 1);
+        let records = vec![TestRecord {
+            spec: BTreeMap::from([("x".to_string(), Value::Num(1.0))]),
+            result: BTreeMap::from([("value".to_string(), 11.0)]),
+        }];
+        let rep = t.report(&ctx, &records);
+        assert!(rep.contains("task echo on bf3"));
+        assert!(rep.contains("x=1"));
+        assert!(rep.contains("value=11"));
+    }
+
+    #[test]
+    fn spec_ext_defaults() {
+        let spec: TestSpec = BTreeMap::from([
+            ("n".to_string(), Value::Num(4.0)),
+            ("s".to_string(), Value::str("seq")),
+        ]);
+        assert_eq!(spec.usize_or("n", 1), 4);
+        assert_eq!(spec.usize_or("missing", 7), 7);
+        assert_eq!(spec.str_or("s", "rand"), "seq");
+        assert_eq!(spec.f64_or("s", 2.5), 2.5); // wrong type → default
+    }
+}

@@ -1,0 +1,179 @@
+//! Columnar storage primitives for the embedded analytical engine (the
+//! DuckDB stand-in behind the DBMS task, §3.6).
+
+/// A typed column of values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Str(Vec<String>),
+}
+
+impl Column {
+    pub fn len(&self) -> usize {
+        match self {
+            Column::F32(v) => v.len(),
+            Column::I32(v) => v.len(),
+            Column::I64(v) => v.len(),
+            Column::Str(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// On-disk / in-memory footprint of the column in bytes (string columns
+    /// count their payload + a 4-byte offset per row, the usual columnar
+    /// layout).
+    pub fn byte_size(&self) -> u64 {
+        match self {
+            Column::F32(v) => 4 * v.len() as u64,
+            Column::I32(v) => 4 * v.len() as u64,
+            Column::I64(v) => 8 * v.len() as u64,
+            Column::Str(v) => v.iter().map(|s| s.len() as u64 + 4).sum(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Column::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Column::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            Column::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&[String]> {
+        match self {
+            Column::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Column::F32(_) => "f32",
+            Column::I32(_) => "i32",
+            Column::I64(_) => "i64",
+            Column::Str(_) => "str",
+        }
+    }
+}
+
+/// A named, schema-checked collection of equal-length columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    columns: Vec<(String, Column)>,
+    rows: usize,
+}
+
+impl Table {
+    pub fn new(name: impl Into<String>) -> Table {
+        Table {
+            name: name.into(),
+            columns: Vec::new(),
+            rows: 0,
+        }
+    }
+
+    /// Add a column; all columns must have equal length.
+    pub fn with_column(mut self, name: impl Into<String>, col: Column) -> Table {
+        if self.columns.is_empty() {
+            self.rows = col.len();
+        } else {
+            assert_eq!(col.len(), self.rows, "ragged column");
+        }
+        self.columns.push((name.into(), col));
+        self
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn column(&self, name: &str) -> Option<&Column> {
+        self.columns
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c)
+    }
+
+    /// Column lookup that panics with the table/column name — queries use
+    /// this since a missing column is a query-plan bug, not runtime input.
+    pub fn col(&self, name: &str) -> &Column {
+        self.column(name)
+            .unwrap_or_else(|| panic!("table {} has no column {name}", self.name))
+    }
+
+    pub fn column_names(&self) -> Vec<&str> {
+        self.columns.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Total bytes across all columns (what a cold scan reads from disk).
+    pub fn byte_size(&self) -> u64 {
+        self.columns.iter().map(|(_, c)| c.byte_size()).sum()
+    }
+
+    /// Bytes of just the named columns (what a column-pruned scan reads).
+    pub fn byte_size_of(&self, names: &[&str]) -> u64 {
+        names.iter().map(|n| self.col(n).byte_size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        Table::new("t")
+            .with_column("a", Column::F32(vec![1.0, 2.0, 3.0]))
+            .with_column("b", Column::I32(vec![4, 5, 6]))
+            .with_column("s", Column::Str(vec!["x".into(), "yy".into(), "zzz".into()]))
+    }
+
+    #[test]
+    fn schema_and_lookup() {
+        let t = t();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.column_names(), vec!["a", "b", "s"]);
+        assert_eq!(t.col("a").as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(t.column("missing").is_none());
+        assert_eq!(t.col("s").type_name(), "str");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_column_rejected() {
+        Table::new("t")
+            .with_column("a", Column::F32(vec![1.0]))
+            .with_column("b", Column::I32(vec![1, 2]));
+    }
+
+    #[test]
+    fn byte_sizes() {
+        let t = t();
+        // a: 12, b: 12, s: (1+4)+(2+4)+(3+4) = 18
+        assert_eq!(t.col("a").byte_size(), 12);
+        assert_eq!(t.col("s").byte_size(), 18);
+        assert_eq!(t.byte_size(), 42);
+        assert_eq!(t.byte_size_of(&["a", "b"]), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "no column")]
+    fn missing_column_panics_with_name() {
+        t().col("nope");
+    }
+}

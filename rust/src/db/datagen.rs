@@ -1,0 +1,246 @@
+//! TPC-H-like synthetic data generator.
+//!
+//! The paper's module and DBMS tasks run TPC-H (lineitem scans for
+//! predicate pushdown §3.5.1, the full query set for the DBMS task §3.6,
+//! and orders-comment strings for the compression plugin §5.2). dbgen is
+//! not available here, so this module generates schema- and
+//! distribution-faithful tables: same columns, same value domains, same
+//! selectivity behaviour — at a configurable row scale.
+//!
+//! Scale: real TPC-H lineitem has 6 M rows per scale factor; generating
+//! that in-memory for SF10 is wasteful for a simulation whose *time* comes
+//! from models, so [`Gen::rows_per_sf`] defaults to a 1/100 row scale with
+//! byte accounting compensated in `engine.rs` (each generated row stands
+//! for 100). Tests use tiny scales directly.
+
+use super::column::{Column, Table};
+use crate::util::rng::Pcg;
+
+/// TPC-H Q1 groups: (l_returnflag, l_linestatus) has 4 observed combos;
+/// we encode the pair as a single int key in [0, 4).
+pub const Q1_GROUPS: usize = 4;
+
+/// lineitem rows per scale factor in real TPC-H.
+pub const LINEITEM_ROWS_PER_SF: u64 = 6_000_000;
+/// orders rows per scale factor in real TPC-H.
+pub const ORDERS_ROWS_PER_SF: u64 = 1_500_000;
+
+/// Average bytes per lineitem row in a real columnar layout (the 16
+/// columns of TPC-H lineitem ≈ 120 B/row after light encoding). Used for
+/// storage-byte accounting at full fidelity even when rows are downscaled.
+pub const LINEITEM_BYTES_PER_ROW: u64 = 120;
+
+#[derive(Debug, Clone)]
+pub struct Gen {
+    pub seed: u64,
+    /// Fraction of real TPC-H row counts actually materialized (1 = full).
+    pub row_scale_denom: u64,
+}
+
+impl Default for Gen {
+    fn default() -> Self {
+        Gen {
+            seed: 0x7c9_db3e70,
+            row_scale_denom: 100,
+        }
+    }
+}
+
+impl Gen {
+    pub fn new(seed: u64, row_scale_denom: u64) -> Gen {
+        assert!(row_scale_denom >= 1);
+        Gen {
+            seed,
+            row_scale_denom,
+        }
+    }
+
+    pub fn lineitem_rows(&self, sf: f64) -> usize {
+        ((LINEITEM_ROWS_PER_SF as f64 * sf) / self.row_scale_denom as f64).round() as usize
+    }
+
+    /// Generate the lineitem table at scale factor `sf`.
+    ///
+    /// Columns (value domains match TPC-H dbgen):
+    ///  - l_orderkey i64 ascending with gaps
+    ///  - l_quantity f32 uniform [1, 50] — the pushdown predicate column
+    ///  - l_extendedprice f32 ≈ quantity × unit price [900, 10900)
+    ///  - l_discount f32 uniform {0.00 .. 0.10}
+    ///  - l_tax f32 uniform {0.00 .. 0.08}
+    ///  - l_flagstatus i32 in [0, 4): encoded (returnflag, linestatus)
+    ///  - l_shipdate i32: days since epoch start, uniform over ~7 years
+    pub fn lineitem(&self, sf: f64) -> Table {
+        let n = self.lineitem_rows(sf);
+        let mut rng = Pcg::with_stream(self.seed, 1);
+        let mut orderkey = Vec::with_capacity(n);
+        let mut quantity = Vec::with_capacity(n);
+        let mut price = Vec::with_capacity(n);
+        let mut discount = Vec::with_capacity(n);
+        let mut tax = Vec::with_capacity(n);
+        let mut flagstatus = Vec::with_capacity(n);
+        let mut shipdate = Vec::with_capacity(n);
+        let mut ok: i64 = 0;
+        for i in 0..n {
+            if i % 4 == 0 {
+                ok += 1 + rng.below(7) as i64; // order keys with gaps
+            }
+            orderkey.push(ok);
+            let q = 1.0 + rng.f64() * 49.0;
+            quantity.push(q as f32);
+            let unit = 900.0 + rng.f64() * 10000.0;
+            price.push((q * unit / 10.0) as f32);
+            discount.push((rng.below(11) as f32) / 100.0);
+            tax.push((rng.below(9) as f32) / 100.0);
+            // returnflag/linestatus: ~half of rows are (A/R shipped) style
+            flagstatus.push(rng.below(Q1_GROUPS as u64) as i32);
+            shipdate.push(rng.below(2557) as i32); // ~7 years of days
+        }
+        Table::new("lineitem")
+            .with_column("l_orderkey", Column::I64(orderkey))
+            .with_column("l_quantity", Column::F32(quantity))
+            .with_column("l_extendedprice", Column::F32(price))
+            .with_column("l_discount", Column::F32(discount))
+            .with_column("l_tax", Column::F32(tax))
+            .with_column("l_flagstatus", Column::I32(flagstatus))
+            .with_column("l_shipdate", Column::I32(shipdate))
+    }
+
+    /// Generate the orders table: o_orderkey, o_custkey, o_totalprice,
+    /// o_orderdate, and o_comment — the string column the compression and
+    /// RegEx plugins feed to DEFLATE / pattern matching (§5.2 compresses
+    /// "strings generated from TPC-H orders table"; the RegEx pattern is
+    /// Q13's '%special%requests%').
+    pub fn orders(&self, sf: f64) -> Table {
+        let n = ((ORDERS_ROWS_PER_SF as f64 * sf) / self.row_scale_denom as f64).round()
+            as usize;
+        let mut rng = Pcg::with_stream(self.seed, 2);
+        let mut orderkey = Vec::with_capacity(n);
+        let mut custkey = Vec::with_capacity(n);
+        let mut total = Vec::with_capacity(n);
+        let mut date = Vec::with_capacity(n);
+        let mut comment = Vec::with_capacity(n);
+        for i in 0..n {
+            orderkey.push(i as i64 * 4 + 1);
+            custkey.push(rng.below(150_000.max(n as u64 / 10)) as i64);
+            total.push(rng.range_f64(850.0, 560_000.0) as f32);
+            date.push(rng.below(2557) as i32);
+            comment.push(order_comment(&mut rng));
+        }
+        Table::new("orders")
+            .with_column("o_orderkey", Column::I64(orderkey))
+            .with_column("o_custkey", Column::I64(custkey))
+            .with_column("o_totalprice", Column::F32(total))
+            .with_column("o_orderdate", Column::I32(date))
+            .with_column("o_comment", Column::Str(comment))
+    }
+
+    /// Concatenate order comments into a text corpus of ≥ `bytes` bytes —
+    /// the payload generator for the compression/RegEx plugin tasks.
+    pub fn comment_corpus(&self, bytes: usize) -> Vec<u8> {
+        let mut rng = Pcg::with_stream(self.seed, 3);
+        let mut out = Vec::with_capacity(bytes + 128);
+        while out.len() < bytes {
+            out.extend_from_slice(order_comment(&mut rng).as_bytes());
+            out.push(b' ');
+        }
+        out.truncate(bytes);
+        out
+    }
+}
+
+/// dbgen-style comment text: random words from a small vocabulary, with
+/// the occasional "special ... requests" phrase Q13 greps for (~1% of
+/// comments, matching TPC-H's distribution of complaints).
+fn order_comment(rng: &mut Pcg) -> String {
+    const WORDS: [&str; 24] = [
+        "the", "furiously", "carefully", "quickly", "blithely", "deposits",
+        "accounts", "packages", "foxes", "ideas", "theodolites", "platelets",
+        "instructions", "pinto", "beans", "sleep", "haggle", "nag", "cajole",
+        "boost", "among", "final", "silent", "pending",
+    ];
+    let n_words = 6 + rng.below(12) as usize;
+    let mut s = String::new();
+    let special_at = if rng.below(100) == 0 {
+        Some(rng.below(n_words as u64 / 2) as usize)
+    } else {
+        None
+    };
+    for i in 0..n_words {
+        if !s.is_empty() {
+            s.push(' ');
+        }
+        if special_at == Some(i) {
+            s.push_str("special packages requests");
+        } else {
+            s.push_str(WORDS[rng.below(WORDS.len() as u64) as usize]);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_gen() -> Gen {
+        Gen::new(42, 6000) // 1000 rows/SF for tests
+    }
+
+    #[test]
+    fn lineitem_schema_and_domains() {
+        let t = small_gen().lineitem(1.0);
+        assert_eq!(t.rows(), 1000);
+        let q = t.col("l_quantity").as_f32().unwrap();
+        assert!(q.iter().all(|&x| (1.0..=50.0).contains(&x)));
+        let d = t.col("l_discount").as_f32().unwrap();
+        assert!(d.iter().all(|&x| (0.0..=0.10001).contains(&x)));
+        let fs = t.col("l_flagstatus").as_i32().unwrap();
+        assert!(fs.iter().all(|&x| (0..Q1_GROUPS as i32).contains(&x)));
+        // order keys non-decreasing
+        let ok = t.col("l_orderkey").as_i64().unwrap();
+        assert!(ok.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Gen::new(7, 6000).lineitem(0.5);
+        let b = Gen::new(7, 6000).lineitem(0.5);
+        assert_eq!(a.col("l_quantity").as_f32(), b.col("l_quantity").as_f32());
+        let c = Gen::new(8, 6000).lineitem(0.5);
+        assert_ne!(a.col("l_quantity").as_f32(), c.col("l_quantity").as_f32());
+    }
+
+    #[test]
+    fn selectivity_controllable_via_quantity_range() {
+        // quantity uniform on [1, 50] → a [lo, lo+0.49) band selects ≈1%
+        let t = small_gen().lineitem(10.0);
+        let q = t.col("l_quantity").as_f32().unwrap();
+        let sel = q.iter().filter(|&&x| (24.0..24.49).contains(&x)).count() as f64
+            / q.len() as f64;
+        assert!((0.005..0.015).contains(&sel), "{sel}");
+    }
+
+    #[test]
+    fn orders_comments_contain_special_requests() {
+        let t = small_gen().orders(10.0);
+        let c = t.col("o_comment").as_str().unwrap();
+        let hits = c.iter().filter(|s| s.contains("special")).count();
+        // ~1% of 2500 rows
+        assert!(hits > 5 && hits < 100, "{hits}");
+    }
+
+    #[test]
+    fn corpus_is_compressible_text() {
+        let corpus = small_gen().comment_corpus(64 * 1024);
+        assert_eq!(corpus.len(), 64 * 1024);
+        assert!(corpus.iter().all(|&b| b.is_ascii()));
+        // small vocabulary → DEFLATE should crush it (verified in plugins)
+    }
+
+    #[test]
+    fn row_scaling() {
+        let g = Gen::new(1, 100);
+        assert_eq!(g.lineitem_rows(1.0), 60_000);
+        assert_eq!(g.lineitem_rows(10.0), 600_000);
+    }
+}

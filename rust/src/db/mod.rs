@@ -1,0 +1,14 @@
+//! Embedded analytical DBMS substrate (the DuckDB stand-in): columnar
+//! tables, a TPC-H-like generator, vectorized operators, a six-query
+//! workload, and the per-platform cold/hot cost model.
+
+pub mod column;
+pub mod datagen;
+pub mod engine;
+pub mod exec;
+pub mod query;
+
+pub use column::{Column, Table};
+pub use datagen::Gen;
+pub use engine::{Database, ExecMode};
+pub use query::QueryId;

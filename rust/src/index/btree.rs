@@ -1,0 +1,291 @@
+//! In-memory B+-tree: the KV index substrate for the index-offloading
+//! task (§3.5.2). The paper adapts LMDB; here is a from-scratch B+-tree
+//! with the properties that matter for the benchmark: ordered keys, range
+//! partitioning, point get/put, and range scans.
+
+/// Branching factor (max keys per node). 64 keeps nodes cache-line-friendly
+/// and the tree shallow for the 1 KB-record workloads.
+const B: usize = 64;
+
+/// A B+-tree mapping u64 keys to fixed-size values (the YCSB record
+/// payload is represented by its length to avoid burning memory on
+/// synthetic bytes; `value_len` preserves byte accounting).
+#[derive(Debug)]
+pub struct BTree {
+    root: Node,
+    len: usize,
+    pub value_len: usize,
+}
+
+#[derive(Debug)]
+enum Node {
+    Leaf {
+        keys: Vec<u64>,
+        vals: Vec<u64>, // value fingerprint (e.g. generation counter)
+    },
+    Inner {
+        keys: Vec<u64>, // separator keys: child i holds keys < keys[i]
+        children: Vec<Box<Node>>,
+    },
+}
+
+impl Node {
+    fn new_leaf() -> Node {
+        Node::Leaf {
+            keys: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+}
+
+pub enum PutResult {
+    Inserted,
+    Updated,
+}
+
+impl BTree {
+    pub fn new(value_len: usize) -> BTree {
+        BTree {
+            root: Node::new_leaf(),
+            len: 0,
+            value_len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Approximate resident bytes (keys + values at `value_len`).
+    pub fn byte_size(&self) -> u64 {
+        self.len as u64 * (8 + self.value_len as u64)
+    }
+
+    pub fn get(&self, key: u64) -> Option<u64> {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { keys, vals } => {
+                    return keys.binary_search(&key).ok().map(|i| vals[i]);
+                }
+                Node::Inner { keys, children } => {
+                    let i = keys.partition_point(|&k| k <= key);
+                    node = &children[i];
+                }
+            }
+        }
+    }
+
+    pub fn put(&mut self, key: u64, val: u64) -> PutResult {
+        let (res, split) = Self::insert_rec(&mut self.root, key, val);
+        if let Some((sep, right)) = split {
+            // root split: grow the tree
+            let old_root = std::mem::replace(&mut self.root, Node::new_leaf());
+            self.root = Node::Inner {
+                keys: vec![sep],
+                children: vec![Box::new(old_root), Box::new(right)],
+            };
+        }
+        if matches!(res, PutResult::Inserted) {
+            self.len += 1;
+        }
+        res
+    }
+
+    fn insert_rec(node: &mut Node, key: u64, val: u64) -> (PutResult, Option<(u64, Node)>) {
+        match node {
+            Node::Leaf { keys, vals } => match keys.binary_search(&key) {
+                Ok(i) => {
+                    vals[i] = val;
+                    (PutResult::Updated, None)
+                }
+                Err(i) => {
+                    keys.insert(i, key);
+                    vals.insert(i, val);
+                    if keys.len() > B {
+                        let mid = keys.len() / 2;
+                        let rkeys = keys.split_off(mid);
+                        let rvals = vals.split_off(mid);
+                        let sep = rkeys[0];
+                        (
+                            PutResult::Inserted,
+                            Some((
+                                sep,
+                                Node::Leaf {
+                                    keys: rkeys,
+                                    vals: rvals,
+                                },
+                            )),
+                        )
+                    } else {
+                        (PutResult::Inserted, None)
+                    }
+                }
+            },
+            Node::Inner { keys, children } => {
+                let i = keys.partition_point(|&k| k <= key);
+                let (res, split) = Self::insert_rec(&mut children[i], key, val);
+                if let Some((sep, right)) = split {
+                    keys.insert(i, sep);
+                    children.insert(i + 1, Box::new(right));
+                    if keys.len() > B {
+                        let mid = keys.len() / 2;
+                        let sep_up = keys[mid];
+                        let rkeys = keys.split_off(mid + 1);
+                        keys.pop(); // sep_up moves up
+                        let rchildren = children.split_off(mid + 1);
+                        return (
+                            res,
+                            Some((
+                                sep_up,
+                                Node::Inner {
+                                    keys: rkeys,
+                                    children: rchildren,
+                                },
+                            )),
+                        );
+                    }
+                }
+                (res, None)
+            }
+        }
+    }
+
+    /// Inclusive-exclusive range scan: visit (key, val) for lo <= key < hi.
+    pub fn scan_range(&self, lo: u64, hi: u64, mut visit: impl FnMut(u64, u64)) {
+        Self::scan_rec(&self.root, lo, hi, &mut visit);
+    }
+
+    fn scan_rec(node: &Node, lo: u64, hi: u64, visit: &mut impl FnMut(u64, u64)) {
+        match node {
+            Node::Leaf { keys, vals } => {
+                let start = keys.partition_point(|&k| k < lo);
+                for i in start..keys.len() {
+                    if keys[i] >= hi {
+                        break;
+                    }
+                    visit(keys[i], vals[i]);
+                }
+            }
+            Node::Inner { keys, children } => {
+                let start = keys.partition_point(|&k| k <= lo);
+                let end = keys.partition_point(|&k| k < hi);
+                for child in &children[start..=end] {
+                    Self::scan_rec(child, lo, hi, visit);
+                }
+            }
+        }
+    }
+
+    /// All keys in order (test helper; O(n)).
+    pub fn keys(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.len);
+        self.scan_range(0, u64::MAX, |k, _| out.push(k));
+        out
+    }
+
+    /// Tree depth (leaf = 1); benchmark reports use it as a sanity metric.
+    pub fn depth(&self) -> usize {
+        let mut d = 1;
+        let mut node = &self.root;
+        while let Node::Inner { children, .. } = node {
+            d += 1;
+            node = &children[0];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut t = BTree::new(1024);
+        for k in 0..10_000u64 {
+            assert!(matches!(t.put(k * 7, k), PutResult::Inserted));
+        }
+        assert_eq!(t.len(), 10_000);
+        for k in 0..10_000u64 {
+            assert_eq!(t.get(k * 7), Some(k));
+        }
+        assert_eq!(t.get(3), None);
+        assert!(t.depth() >= 3); // actually split
+    }
+
+    #[test]
+    fn update_replaces_value() {
+        let mut t = BTree::new(16);
+        t.put(5, 1);
+        assert!(matches!(t.put(5, 2), PutResult::Updated));
+        assert_eq!(t.get(5), Some(2));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn keys_always_sorted_random_inserts() {
+        let mut rng = Pcg::new(3);
+        let mut t = BTree::new(8);
+        for _ in 0..50_000 {
+            t.put(rng.next_u64() % 1_000_000, 0);
+        }
+        let keys = t.keys();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(keys.len(), t.len());
+    }
+
+    #[test]
+    fn range_scan_matches_filter() {
+        let mut t = BTree::new(8);
+        for k in (0..1000u64).step_by(3) {
+            t.put(k, k * 2);
+        }
+        let mut got = Vec::new();
+        t.scan_range(100, 200, |k, v| got.push((k, v)));
+        let expected: Vec<(u64, u64)> = (0..1000u64)
+            .step_by(3)
+            .filter(|&k| (100..200).contains(&k))
+            .map(|k| (k, k * 2))
+            .collect();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn property_model_equivalence() {
+        // B+-tree behaves exactly like a BTreeMap under random ops
+        prop::check(30, |g| {
+            use std::collections::BTreeMap;
+            let mut tree = BTree::new(8);
+            let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+            let ops = 200 + g.usize(800);
+            for _ in 0..ops {
+                let k = g.u64(500);
+                let v = g.u64(1_000_000);
+                tree.put(k, v);
+                model.insert(k, v);
+            }
+            prop::expect(tree.len() == model.len(), "len mismatch")?;
+            for (&k, &v) in &model {
+                prop::expect(tree.get(k) == Some(v), format!("get({k})"))?;
+            }
+            let keys = tree.keys();
+            let model_keys: Vec<u64> = model.keys().copied().collect();
+            prop::expect(keys == model_keys, "ordered key set")
+        });
+    }
+
+    #[test]
+    fn byte_size_tracks_records() {
+        let mut t = BTree::new(1024);
+        for k in 0..100 {
+            t.put(k, 0);
+        }
+        assert_eq!(t.byte_size(), 100 * (8 + 1024));
+    }
+}

@@ -1,0 +1,11 @@
+//! KV-index substrate (the LMDB stand-in): a from-scratch B+-tree, YCSB
+//! workload generation, and host/DPU range partitioning with the Fig. 14
+//! throughput model.
+
+pub mod btree;
+pub mod partition;
+pub mod ycsb;
+
+pub use btree::BTree;
+pub use partition::PartitionedIndex;
+pub use ycsb::{AccessPattern, IndexOp, Workload};

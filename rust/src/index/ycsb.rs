@@ -1,0 +1,151 @@
+//! YCSB-style workload generator for the index-offloading task (§3.5.2:
+//! "We use the YCSB benchmark as the workload" — record count/size,
+//! read/write mix, uniform or zipfian access).
+
+use crate::util::rng::{Pcg, Zipf};
+
+/// Key access distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    Uniform,
+    /// YCSB "zipfian" with theta = 0.99.
+    Zipfian,
+}
+
+impl AccessPattern {
+    pub const ALL: [AccessPattern; 2] = [AccessPattern::Uniform, AccessPattern::Zipfian];
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccessPattern::Uniform => "uniform",
+            AccessPattern::Zipfian => "zipfian",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "uniform" => AccessPattern::Uniform,
+            "zipfian" | "zipf" | "skewed" => AccessPattern::Zipfian,
+            _ => return None,
+        })
+    }
+}
+
+/// One index operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexOp {
+    Read(u64),
+    Write(u64),
+}
+
+impl IndexOp {
+    pub fn key(&self) -> u64 {
+        match self {
+            IndexOp::Read(k) | IndexOp::Write(k) => *k,
+        }
+    }
+    pub fn is_read(&self) -> bool {
+        matches!(self, IndexOp::Read(_))
+    }
+}
+
+/// Workload specification (Table 1's index-offloading parameters).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Number of records loaded into the index.
+    pub record_count: u64,
+    /// Record payload size in bytes (the paper uses 1 KB).
+    pub record_bytes: usize,
+    /// Fraction of reads in [0, 1]; remainder are writes (updates).
+    pub read_fraction: f64,
+    pub pattern: AccessPattern,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// The paper's Fig. 14 setup: 50 M × 1 KB records, uniform reads.
+    pub fn fig14() -> Workload {
+        Workload {
+            record_count: 50_000_000,
+            record_bytes: 1024,
+            read_fraction: 1.0,
+            pattern: AccessPattern::Uniform,
+            seed: 14,
+        }
+    }
+
+    /// Generate `n` operations.
+    pub fn ops(&self, n: usize) -> Vec<IndexOp> {
+        let mut rng = Pcg::with_stream(self.seed, 0x9c5b);
+        let zipf = match self.pattern {
+            AccessPattern::Zipfian => Some(Zipf::new(self.record_count, 0.99)),
+            AccessPattern::Uniform => None,
+        };
+        (0..n)
+            .map(|_| {
+                let key = match &zipf {
+                    Some(z) => z.sample(&mut rng),
+                    None => rng.below(self.record_count),
+                };
+                if rng.f64() < self.read_fraction {
+                    IndexOp::Read(key)
+                } else {
+                    IndexOp::Write(key)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_ops_cover_keyspace() {
+        let w = Workload {
+            record_count: 1000,
+            record_bytes: 64,
+            read_fraction: 1.0,
+            pattern: AccessPattern::Uniform,
+            seed: 1,
+        };
+        let ops = w.ops(10_000);
+        assert!(ops.iter().all(|o| o.is_read() && o.key() < 1000));
+        // roughly uniform: the top decile of keys draws ~10% of accesses
+        let head = ops.iter().filter(|o| o.key() < 100).count();
+        assert!((800..1200).contains(&head), "{head}");
+    }
+
+    #[test]
+    fn zipfian_ops_are_skewed() {
+        let w = Workload {
+            record_count: 1000,
+            record_bytes: 64,
+            read_fraction: 1.0,
+            pattern: AccessPattern::Zipfian,
+            seed: 2,
+        };
+        let ops = w.ops(10_000);
+        let head = ops.iter().filter(|o| o.key() < 100).count();
+        assert!(head > 4000, "{head}"); // heavy head
+    }
+
+    #[test]
+    fn read_write_mix() {
+        let w = Workload {
+            record_count: 1000,
+            record_bytes: 64,
+            read_fraction: 0.5,
+            pattern: AccessPattern::Uniform,
+            seed: 3,
+        };
+        let ops = w.ops(10_000);
+        let reads = ops.iter().filter(|o| o.is_read()).count();
+        assert!((4500..5500).contains(&reads), "{reads}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = Workload::fig14();
+        assert_eq!(w.ops(100), w.ops(100));
+    }
+}

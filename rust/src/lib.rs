@@ -1,0 +1,34 @@
+//! # dpBento — Benchmarking DPUs for Data Processing
+//!
+//! A from-scratch reproduction of the dpBento benchmark framework
+//! (Hu et al., CS.DC 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//! - the **framework** (`coordinator`): the paper's task abstraction
+//!   (prepare/run/report/clean), declarative measurement *boxes*,
+//!   cross-product test generation, execution, and reporting;
+//! - the **built-in tasks** (`tasks`) and **plugin tasks** (`plugins`)
+//!   covering compute/memory/storage/network microbenchmarks, the
+//!   predicate-pushdown and index-offloading database modules, the full
+//!   DBMS task, and the accelerator/RDMA plugins;
+//! - every **substrate** those tasks need: calibrated platform models
+//!   (`platform`), a discrete-event simulator (`sim`), storage devices
+//!   (`storage`), network paths (`net`), a columnar DBMS with a TPC-H-like
+//!   generator (`db`), a B+-tree KV index with YCSB (`index`), and the
+//!   PJRT runtime (`runtime`) that executes the AOT-compiled JAX/Pallas
+//!   scan pipelines on the benchmark hot path.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured record of every figure.
+
+pub mod coordinator;
+pub mod db;
+pub mod index;
+pub mod net;
+pub mod platform;
+pub mod plugins;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod tasks;
+pub mod util;

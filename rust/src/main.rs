@@ -1,0 +1,185 @@
+//! dpBento command-line interface (the framework's user entry point).
+//!
+//! ```text
+//! dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics]
+//! dpbento list-tasks
+//! dpbento clean [--platform NAME]
+//! dpbento example-box
+//! ```
+//!
+//! `run` executes a measurement box (§3.2) end to end: parse → generate
+//! tests → prepare → run → report; the rendered report goes to stdout and,
+//! with `--out`, to `<DIR>/<box>.{txt,json}`. `clean` is the explicit
+//! cleanup command the paper defers to the user (§3.3 step ④).
+
+use std::process::ExitCode;
+
+use dpbento::coordinator::{clean_all, plugin::ShellTask, run_box, BoxConfig, ExecOptions, Registry};
+use dpbento::coordinator::Task as _;
+use dpbento::platform::PlatformId;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("dpbento: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
+    let mut it = args.into_iter();
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let rest: Vec<String> = it.collect();
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "list-tasks" => cmd_list_tasks(),
+        "clean" => cmd_clean(rest),
+        "example-box" => {
+            println!("{}", example_box_json());
+            Ok(ExitCode::SUCCESS)
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(ExitCode::SUCCESS)
+        }
+        other => {
+            eprintln!("dpbento: unknown command '{other}'\n");
+            print_help();
+            Ok(ExitCode::FAILURE)
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "dpBento: benchmarking DPUs for data processing (paper reproduction)
+
+USAGE:
+  dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics]
+  dpbento list-tasks
+  dpbento clean [--platform host|bf2|bf3|octeon]
+  dpbento example-box         print the paper's Fig. 2 box to stdout
+
+A *box* declares tasks, parameter lists (cross-producted into tests),
+metrics of interest, and target platforms. See `dpbento example-box`."
+    );
+}
+
+/// Parse `--flag value` style options out of an argument list.
+fn take_opt(args: &mut Vec<String>, flag: &str) -> Option<String> {
+    let i = args.iter().position(|a| a == flag)?;
+    if i + 1 >= args.len() {
+        return None;
+    }
+    let v = args.remove(i + 1);
+    args.remove(i);
+    Some(v)
+}
+
+fn take_flag(args: &mut Vec<String>, flag: &str) -> bool {
+    if let Some(i) = args.iter().position(|a| a == flag) {
+        args.remove(i);
+        true
+    } else {
+        false
+    }
+}
+
+fn load_registry(plugins_dir: Option<&str>) -> anyhow::Result<Registry> {
+    let mut registry = Registry::builtin();
+    if let Some(dir) = plugins_dir {
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() && path.join("plugin.json").exists() {
+                let task = ShellTask::load(&path)?;
+                eprintln!(
+                    "[dpbento] loaded plugin '{}' from {}",
+                    task.name(),
+                    path.display()
+                );
+                registry.register(std::sync::Arc::new(task));
+            }
+        }
+    }
+    Ok(registry)
+}
+
+fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
+    let out_dir = take_opt(&mut args, "--out");
+    let plugins = take_opt(&mut args, "--plugins");
+    let verbose = take_flag(&mut args, "--verbose");
+    let all_metrics = take_flag(&mut args, "--all-metrics");
+    let path = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dpbento run <box.json>"))?;
+
+    let cfg = BoxConfig::load(path)?;
+    let registry = load_registry(plugins.as_deref())?;
+    let opts = ExecOptions {
+        filter_metrics: !all_metrics,
+        verbose,
+    };
+    let report = run_box(&registry, &cfg, &opts)?;
+    print!("{}", report.render());
+    if let Some(dir) = out_dir {
+        report.write_to(&dir)?;
+        println!("report written to {dir}/{}.{{txt,json}}", cfg.name);
+    }
+    Ok(if report.failure_count() == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    })
+}
+
+fn cmd_list_tasks() -> anyhow::Result<ExitCode> {
+    let registry = Registry::builtin();
+    println!("built-in tasks and bundled plugins (paper Table 1 + §5.2/§6.2):\n");
+    for task in registry.iter() {
+        println!("  {:15} {}", task.name(), task.description());
+        for p in task.params() {
+            println!("      {:14} {} (e.g. {})", p.name, p.doc, p.example);
+        }
+        println!("      metrics: {}\n", task.metrics().join(", "));
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
+fn cmd_clean(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
+    let platform = take_opt(&mut args, "--platform")
+        .map(|p| {
+            PlatformId::from_name(&p).ok_or_else(|| anyhow::anyhow!("unknown platform '{p}'"))
+        })
+        .transpose()?
+        .unwrap_or(PlatformId::HostEpyc);
+    let cleaned = clean_all(&Registry::builtin(), platform)?;
+    println!(
+        "cleaned {} tasks on {platform}: {}",
+        cleaned.len(),
+        cleaned.join(", ")
+    );
+    Ok(ExitCode::SUCCESS)
+}
+
+fn example_box_json() -> &'static str {
+    r#"{
+  "name": "fig2_example",
+  "platforms": ["bf2"],
+  "seed": 42,
+  "tasks": [
+    {
+      "task": "network",
+      "params": {"message_size": [1024], "depth": [16], "threads": [1, 2, 4]},
+      "metrics": ["median_lat_us", "p99_lat_us", "throughput_gbps"]
+    },
+    {
+      "task": "pred_pushdown",
+      "params": {"scale": [1], "selectivity": [0.01], "threads": [4]},
+      "metrics": ["tuples_per_sec", "speedup"]
+    }
+  ]
+}"#
+}

@@ -1,0 +1,136 @@
+//! Real TCP loopback driver.
+//!
+//! The network task's *measured* mode exercises an actual Linux TCP path:
+//! an echo server on 127.0.0.1 and a closed-loop ping-pong client, the
+//! same shape as the paper's §3.4.4 benchmark ("two TCP endpoints ...
+//! receives each message and bounces it back"). This keeps a genuine
+//! sockets codepath in the repo even though cross-platform numbers come
+//! from the calibrated model (`net::tcp`).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Echo server bound to an ephemeral loopback port. Serves `conns`
+/// connections to completion, then exits.
+pub struct EchoServer {
+    pub addr: std::net::SocketAddr,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl EchoServer {
+    pub fn spawn(conns: usize, msg_bytes: usize) -> Result<EchoServer> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind loopback")?;
+        let addr = listener.local_addr()?;
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let mut served = 0;
+            for stream in listener.incoming() {
+                let mut stream = stream?;
+                stream.set_nodelay(true)?;
+                let mut buf = vec![0u8; msg_bytes];
+                // echo until the client closes
+                loop {
+                    match read_exact_or_eof(&mut stream, &mut buf)? {
+                        false => break,
+                        true => stream.write_all(&buf)?,
+                    }
+                }
+                served += 1;
+                if served >= conns {
+                    break;
+                }
+            }
+            Ok(())
+        });
+        Ok(EchoServer {
+            addr,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("echo server panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+fn read_exact_or_eof(stream: &mut TcpStream, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = stream.read(&mut buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(false);
+            }
+            anyhow::bail!("peer closed mid-message");
+        }
+        filled += n;
+    }
+    Ok(true)
+}
+
+/// Run `iters` ping-pongs of `msg_bytes` against the echo server; returns
+/// per-round-trip latencies in µs.
+pub fn pingpong_client(
+    addr: std::net::SocketAddr,
+    msg_bytes: usize,
+    iters: usize,
+) -> Result<Vec<f64>> {
+    let mut stream = TcpStream::connect(addr).context("connect")?;
+    stream.set_nodelay(true)?;
+    let msg = vec![0xa5u8; msg_bytes];
+    let mut back = vec![0u8; msg_bytes];
+    let mut rtts = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        stream.write_all(&msg)?;
+        read_exact_or_eof(&mut stream, &mut back)
+            .and_then(|ok| ok.then_some(()).context("early EOF"))?;
+        rtts.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    Ok(rtts)
+}
+
+/// Convenience: spawn a server, run one client, join the server.
+pub fn measure_loopback_rtt_us(msg_bytes: usize, iters: usize) -> Result<Vec<f64>> {
+    let server = EchoServer::spawn(1, msg_bytes)?;
+    let rtts = pingpong_client(server.addr, msg_bytes, iters)?;
+    server.join()?;
+    Ok(rtts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_pingpong_roundtrips() {
+        let rtts = measure_loopback_rtt_us(64, 50).unwrap();
+        assert_eq!(rtts.len(), 50);
+        // loopback RTT is positive and sub-millisecond-ish on any sane box
+        assert!(rtts.iter().all(|&r| r > 0.0 && r < 50_000.0));
+    }
+
+    #[test]
+    fn large_messages_roundtrip_intact() {
+        let server = EchoServer::spawn(1, 64 * 1024).unwrap();
+        let rtts = pingpong_client(server.addr, 64 * 1024, 5).unwrap();
+        server.join().unwrap();
+        assert_eq!(rtts.len(), 5);
+    }
+
+    #[test]
+    fn multiple_sequential_clients() {
+        let server = EchoServer::spawn(3, 128).unwrap();
+        for _ in 0..3 {
+            let rtts = pingpong_client(server.addr, 128, 10).unwrap();
+            assert_eq!(rtts.len(), 10);
+        }
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,6 @@
+//! Network substrate: the calibrated TCP and RDMA path models (Figs.
+//! 11–12) plus a real loopback TCP driver for measured-mode runs.
+
+pub mod loopback;
+pub mod rdma;
+pub mod tcp;

@@ -1,0 +1,123 @@
+//! RDMA (kernel-bypass) network-path model (paper §6.2, Fig. 12).
+//!
+//! The RDMA plugin task mirrors the paper's ib_read_lat / ib_read_bw
+//! measurements over InfiniBand on BF-2: one-sided reads from the remote
+//! server into the DPU's (or host's) memory. Bypassing the onboard Linux
+//! stack removes the wimpy-core software cost entirely; what remains is
+//! NIC processing plus the DMA distance to the destination memory — which
+//! is *shorter* on the DPU (NIC and DRAM on the same board) than on the
+//! host (across the PCIe fabric). Hence the paper's headline inversion:
+//! RDMA to the DPU has *lower* latency than to the host.
+
+use crate::platform::spec::PlatformId;
+use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
+
+pub use super::tcp::LINK_GBPS;
+
+/// One-way propagation on the InfiniBand fabric (µs) — lower than the
+/// TCP path's switch constant because verbs avoid the kernel scheduling
+/// delay baked into `tcp::PROP_US`.
+pub const IB_PROP_US: f64 = 1.0;
+
+/// NIC + DMA base cost (µs) of a one-sided read landing in `endpoint`
+/// memory. Calibration: host RDMA 4 KB read ≈ 4.8 µs; DPU 12.6% lower
+/// (Fig. 12a).
+pub fn base_us(endpoint: PlatformId) -> f64 {
+    if endpoint.is_dpu() {
+        1.55 // NIC → onboard DRAM, no PCIe hop
+    } else {
+        2.16 // NIC → host DRAM over PCIe
+    }
+}
+
+/// Mean one-sided RDMA read latency (µs): initiator NIC + wire both ways
+/// + destination DMA.
+pub fn read_latency_us(endpoint: PlatformId, bytes: usize) -> f64 {
+    base_us(endpoint) + 2.0 * IB_PROP_US + bytes as f64 * 8.0 / (LINK_GBPS * 1e3) + 0.3
+}
+
+/// Sampled latency with a light exponential tail.
+pub fn sample_latency_us(endpoint: PlatformId, bytes: usize, rng: &mut Pcg) -> f64 {
+    let mean = read_latency_us(endpoint, bytes);
+    0.93 * mean + rng.exp(0.07 * mean)
+}
+
+pub fn latency_summary(endpoint: PlatformId, bytes: usize, n: usize, seed: u64) -> Summary {
+    let mut rng = Pcg::new(seed);
+    let samples: Vec<f64> = (0..n)
+        .map(|_| sample_latency_us(endpoint, bytes, &mut rng))
+        .collect();
+    Summary::from_samples(&samples)
+}
+
+/// Single-QP RDMA read throughput (Gbps). Calibration (Fig. 12b): host
+/// ≈ 90 Gbps, DPU ≈ 80 Gbps (an 11.3% gap — PCIe-side DMA engines on the
+/// host NIC have more parallel buffers than the DPU's memory path).
+pub fn per_qp_gbps(endpoint: PlatformId) -> f64 {
+    if endpoint.is_dpu() {
+        80.0
+    } else {
+        89.0
+    }
+}
+
+/// Multi-QP throughput: peak reached with 2 QPs for both endpoints
+/// (Fig. 12b), bounded by the link.
+pub fn throughput_gbps(endpoint: PlatformId, threads: u32) -> f64 {
+    let t = threads.max(1) as f64;
+    (per_qp_gbps(endpoint) * t).min(0.97 * LINK_GBPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PlatformId::*;
+
+    #[test]
+    fn dpu_rdma_latency_beats_host() {
+        // Fig. 12a: at 4 KB the DPU latency is ~12.6% lower than the host.
+        let dpu = read_latency_us(Bf2, 4096);
+        let host = read_latency_us(HostEpyc, 4096);
+        let gain = 1.0 - dpu / host;
+        assert!((0.10..0.15).contains(&gain), "gain={gain}");
+        // and lower across all sizes
+        for sz in [64, 512, 4096, 32768] {
+            assert!(read_latency_us(Bf2, sz) < read_latency_us(HostEpyc, sz));
+        }
+    }
+
+    #[test]
+    fn single_qp_gap_is_marginal() {
+        // Fig. 12b: single-connection gap ≈ 11.3%
+        let gap = 1.0 - per_qp_gbps(Bf2) / per_qp_gbps(HostEpyc);
+        assert!((0.08..0.13).contains(&gap), "{gap}");
+    }
+
+    #[test]
+    fn peak_with_two_qps_and_gap_closes() {
+        let d1 = throughput_gbps(Bf2, 1);
+        let d2 = throughput_gbps(Bf2, 2);
+        let h2 = throughput_gbps(HostEpyc, 2);
+        assert!(d2 > d1);
+        assert_eq!(d2, throughput_gbps(Bf2, 4)); // flat beyond 2
+        // at peak both are link-bound: the gap vanishes
+        assert!((h2 - d2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rdma_beats_tcp_latency() {
+        // kernel bypass must be far below the TCP stack numbers (Fig. 11 vs 12)
+        use crate::net::tcp;
+        for sz in [64, 4096] {
+            assert!(read_latency_us(Bf2, sz) < tcp::pingpong_rtt_us(Bf2, sz) / 2.0);
+        }
+    }
+
+    #[test]
+    fn latency_summary_sane() {
+        let s = latency_summary(HostEpyc, 4096, 3000, 11);
+        assert!((s.mean / read_latency_us(HostEpyc, 4096) - 1.0).abs() < 0.05);
+        assert!(s.p99 >= s.p50);
+    }
+}

@@ -1,0 +1,182 @@
+//! TCP network-path model (paper §6.2, Fig. 11).
+//!
+//! The paper's setup: a remote server connects to the DPU (or the host)
+//! over a 100 Gbps link; ping-pong messages measure latency, multiple
+//! 32 KB-message connections with queue depth 128 measure throughput.
+//! The model charges each endpoint a software cost (Linux TCP/IP stack)
+//! with a per-message and a per-byte component, both inflated on wimpy
+//! DPU cores — which is exactly the paper's explanation for the DPU's 30%
+//! latency and 4.8× single-thread throughput deficits.
+
+use crate::platform::spec::PlatformId;
+use crate::util::rng::Pcg;
+use crate::util::stats::Summary;
+
+/// One-way link propagation (µs) — same rack, one switch.
+pub const PROP_US: f64 = 2.0;
+
+/// Link rate between the remote server and the measured endpoint (Gbps).
+/// The testbed cable is 100 Gbps (§6.2) regardless of the BF-3's 400 Gbps
+/// capability.
+pub const LINK_GBPS: f64 = 100.0;
+
+/// Per-message TCP/IP software cost (µs) on an endpoint of platform `p`.
+///
+/// Calibration: host ≈ 6 µs per message and ≈ 0.21 ns/B (38 Gbps of
+/// single-core stream processing, Fig. 11b). DPU cores run the same stack
+/// slower: 1.8× the per-message cost (→ ~30% higher small-message RTT,
+/// Fig. 11a) and 4.75× the per-byte cost (→ 8 Gbps single-thread,
+/// Fig. 11b).
+pub fn sw_cost_us(p: PlatformId, bytes: usize) -> f64 {
+    let (per_msg, per_byte_ns) = if p.is_dpu() {
+        (10.8, 1.0)
+    } else {
+        (6.0, 0.2105)
+    };
+    per_msg + bytes as f64 * per_byte_ns * 1e-3
+}
+
+/// Wire serialization time (µs) for a message of `bytes`.
+pub fn wire_us(bytes: usize) -> f64 {
+    bytes as f64 * 8.0 / (LINK_GBPS * 1e3)
+}
+
+/// Mean round-trip latency (µs) of a ping-pong between the remote host
+/// server and an endpoint of platform `endpoint` (Fig. 11a's setup: the
+/// message is bounced back, so both directions pay both stacks + wire).
+pub fn pingpong_rtt_us(endpoint: PlatformId, bytes: usize) -> f64 {
+    let one_way =
+        sw_cost_us(PlatformId::HostEpyc, bytes) + sw_cost_us(endpoint, bytes) + wire_us(bytes) + PROP_US;
+    2.0 * one_way
+}
+
+/// Sampled RTT with tail jitter (scheduler noise + retransmit-free tail):
+/// 90% deterministic + 10%-mean exponential.
+pub fn sample_rtt_us(endpoint: PlatformId, bytes: usize, rng: &mut Pcg) -> f64 {
+    let mean = pingpong_rtt_us(endpoint, bytes);
+    0.9 * mean + rng.exp(0.1 * mean)
+}
+
+/// Latency summary over `n` simulated ping-pongs.
+pub fn latency_summary(endpoint: PlatformId, bytes: usize, n: usize, seed: u64) -> Summary {
+    let mut rng = Pcg::new(seed);
+    let samples: Vec<f64> = (0..n).map(|_| sample_rtt_us(endpoint, bytes, rng_ref(&mut rng))).collect();
+    Summary::from_samples(&samples)
+}
+
+fn rng_ref(r: &mut Pcg) -> &mut Pcg {
+    r
+}
+
+/// Single-connection streaming throughput (Gbps): bounded by the slower
+/// endpoint's per-byte stack processing, then by the wire.
+///
+/// Streaming amortizes the per-message syscall/interrupt cost (batched
+/// receives, GRO), so the cost per message is a small fixed overhead plus
+/// the per-byte copy/checksum term — unlike the ping-pong latency path
+/// where the full per-message cost applies.
+pub fn per_conn_gbps(endpoint: PlatformId, msg_bytes: usize) -> f64 {
+    let (stream_overhead_us, per_byte_ns) = if endpoint.is_dpu() {
+        (0.54, 1.0)
+    } else {
+        (0.30, 0.205)
+    };
+    let t_us = (stream_overhead_us + msg_bytes as f64 * per_byte_ns * 1e-3)
+        .max(wire_us(msg_bytes));
+    (msg_bytes as f64 * 8.0 / 1e3) / t_us // Gbps
+}
+
+/// Aggregate TCP throughput cap (Gbps) of an endpoint: the paper's
+/// saturation points — DPU 22 Gbps, host 98 Gbps, both reached with 4
+/// threads (Fig. 11b).
+pub fn endpoint_cap_gbps(endpoint: PlatformId) -> f64 {
+    if endpoint.is_dpu() {
+        22.0
+    } else {
+        98.0
+    }
+}
+
+/// Multi-connection throughput (Gbps): `threads` connections, each with
+/// enough queue depth to saturate (Fig. 11b uses QD=128), scaling linearly
+/// until the endpoint cap. Threads clamp to the endpoint's cores.
+pub fn throughput_gbps(endpoint: PlatformId, msg_bytes: usize, threads: u32, depth: u32) -> f64 {
+    let t = threads.clamp(1, endpoint.spec().max_threads) as f64;
+    // shallow queues leave the pipe idle during the RTT
+    let rtt_us = pingpong_rtt_us(endpoint, msg_bytes) / 2.0;
+    let per_conn = per_conn_gbps(endpoint, msg_bytes);
+    let needed_inflight = (per_conn * rtt_us / (msg_bytes as f64 * 8.0 / 1e3)).max(1.0);
+    let depth_factor = (depth as f64 / needed_inflight).min(1.0);
+    (per_conn * depth_factor * t).min(endpoint_cap_gbps(endpoint)).min(LINK_GBPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PlatformId::*;
+
+    #[test]
+    fn dpu_latency_about_30pct_higher_small_messages() {
+        // Fig. 11a: remote↔DPU latency ≈ 30% above remote↔host on average;
+        // strongest claim at small sizes where the stack dominates.
+        let r = pingpong_rtt_us(Bf2, 32) / pingpong_rtt_us(HostEpyc, 32);
+        assert!((1.25..1.40).contains(&r), "{r}");
+        // the DPU is never faster over TCP
+        for sz in [32, 1024, 32 * 1024] {
+            assert!(pingpong_rtt_us(Bf2, sz) > pingpong_rtt_us(HostEpyc, sz));
+        }
+    }
+
+    #[test]
+    fn single_thread_throughput_gap() {
+        // Fig. 11b: DPU 8 Gbps vs host 38 Gbps single-thread (4.8×).
+        let dpu = throughput_gbps(Bf2, 32 * 1024, 1, 128);
+        let host = throughput_gbps(HostEpyc, 32 * 1024, 1, 128);
+        assert!((7.0..9.0).contains(&dpu), "{dpu}");
+        assert!((34.0..42.0).contains(&host), "{host}");
+        assert!((4.2..5.4).contains(&(host / dpu)));
+    }
+
+    #[test]
+    fn saturation_at_four_threads() {
+        let d4 = throughput_gbps(Bf2, 32 * 1024, 4, 128);
+        let d8 = throughput_gbps(Bf2, 32 * 1024, 8, 128);
+        assert!((21.0..23.0).contains(&d4), "{d4}");
+        assert_eq!(d4, d8); // flat beyond saturation
+        let h4 = throughput_gbps(HostEpyc, 32 * 1024, 4, 128);
+        assert!((96.0..100.0).contains(&h4), "{h4}");
+        // §6.2: host single-thread 1.7× the DPU's all-core throughput
+        let h1 = throughput_gbps(HostEpyc, 32 * 1024, 1, 128);
+        assert!((1.5..1.9).contains(&(h1 / d8)), "{}", h1 / d8);
+    }
+
+    #[test]
+    fn shallow_depth_cannot_saturate() {
+        let shallow = throughput_gbps(HostEpyc, 32 * 1024, 1, 1);
+        let deep = throughput_gbps(HostEpyc, 32 * 1024, 1, 128);
+        assert!(shallow < deep);
+    }
+
+    #[test]
+    fn latency_summary_has_tail() {
+        let s = latency_summary(Bf2, 4096, 5000, 7);
+        assert!(s.p99 > s.p50);
+        assert!(s.p99 < 3.0 * s.p50);
+        assert!((s.mean / pingpong_rtt_us(Bf2, 4096) - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn throughput_never_exceeds_link() {
+        crate::util::prop::check(50, |g| {
+            let p = *g.choose(&PlatformId::ALL);
+            let msg = 32 << g.usize(11); // 32 B .. 32 KB
+            let threads = 1 + g.usize(96) as u32;
+            let depth = 1 + g.usize(128) as u32;
+            let t = throughput_gbps(p, msg, threads, depth);
+            crate::util::prop::expect(
+                t > 0.0 && t <= LINK_GBPS + 1e-9,
+                format!("{p} msg={msg} t={t}"),
+            )
+        });
+    }
+}

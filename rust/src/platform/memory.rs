@@ -1,0 +1,291 @@
+//! Memory-hierarchy performance model (paper §5.3, Figs. 7–8).
+//!
+//! The memory task accesses pointer-size words in a buffer of a given size
+//! with a given pattern; the achieved rate depends on which cache level the
+//! buffer resides in (random accesses) or on prefetch-fed bandwidth
+//! (sequential accesses), times a thread-scaling law capped by the
+//! platform's memory subsystem.
+
+use super::spec::{PlatformId, StorageKind};
+
+/// read/write access to memory or storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessOp {
+    Read,
+    Write,
+}
+
+impl AccessOp {
+    pub const ALL: [AccessOp; 2] = [AccessOp::Read, AccessOp::Write];
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccessOp::Read => "read",
+            AccessOp::Write => "write",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "read" => AccessOp::Read,
+            "write" => AccessOp::Write,
+            _ => return None,
+        })
+    }
+}
+
+/// random / sequential pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    Random,
+    Sequential,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 2] = [Pattern::Random, Pattern::Sequential];
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Random => "random",
+            Pattern::Sequential => "sequential",
+        }
+    }
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "random" | "rand" => Pattern::Random,
+            "sequential" | "seq" => Pattern::Sequential,
+            _ => return None,
+        })
+    }
+}
+
+/// Which level of the hierarchy a working set of `bytes` lands in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Residency {
+    L2,
+    L3,
+    Dram,
+}
+
+pub fn residency(p: PlatformId, bytes: u64) -> Residency {
+    let s = p.spec();
+    // Effective L2 visible to the measuring thread: the host's 48 MB L2
+    // keeps even a 4 MB buffer L2-resident (§5.3), while on the DPUs the
+    // L2 is a small per-core-pair slice (1 MB on BF-2/OCTEON) or shared
+    // under contention (BF-3) — "at this size the working set is very
+    // likely to spill to L3 for the DPUs".
+    let l2_effective = match p {
+        PlatformId::HostEpyc => s.l2_bytes,
+        PlatformId::Bf3 => 2 * 1024 * 1024,
+        PlatformId::Bf2 | PlatformId::OcteonTx2 => 1024 * 1024,
+    };
+    if bytes <= l2_effective {
+        Residency::L2
+    } else if bytes <= s.l3_bytes {
+        Residency::L3
+    } else {
+        Residency::Dram
+    }
+}
+
+/// Single-thread access rate in ops/s (pointer-size accesses).
+///
+/// Calibration (§5.3, Fig. 7):
+///  - 16 KB random read (L2-resident): all platforms > 100 Mops/s;
+///    BF-3 = 1.6× BF-2; host = 1.3× BF-3. Fig. 8's host curve
+///    (11.3 Gops/s at 32 threads) pins host single-thread ≈ 350 Mops/s.
+///  - 4 MB random read: spills to L3 on the DPUs (−78% OCTEON, −87% BF-2,
+///    −75% BF-3) while the host's 48 MB L2 keeps it fast.
+///  - 1 GB random read: host 58 Mops/s (−83%), BF-3 20, OCTEON/BF-2 6.7.
+///  - Sequential: prefetch keeps rates ~flat in object size; host seq read
+///    = 5.9× BF-2 (vs 8.6× random at 1 GB); seq write 1 GB: BF-3
+///    2.2 Gops/s *beats* host 1.5 Gops/s.
+///  - Random write 1 GB: OCTEON clearly above BF-2, approaching BF-3.
+pub fn single_thread_ops(p: PlatformId, op: AccessOp, pat: Pattern, bytes: u64) -> f64 {
+    use PlatformId::*;
+    let m = 1e6;
+    match pat {
+        Pattern::Sequential => {
+            // flat in object size (prefetch); Fig. 7b/7d.
+            let rate = match (p, op) {
+                (HostEpyc, AccessOp::Read) => 2400.0,
+                (Bf3, AccessOp::Read) => 1200.0,
+                (OcteonTx2, AccessOp::Read) => 500.0,
+                (Bf2, AccessOp::Read) => 407.0, // host 5.9×
+                (HostEpyc, AccessOp::Write) => 1500.0,
+                (Bf3, AccessOp::Write) => 2200.0, // beats host (Fig. 7d)
+                (OcteonTx2, AccessOp::Write) => 600.0,
+                (Bf2, AccessOp::Write) => 400.0,
+            };
+            rate * m
+        }
+        Pattern::Random => {
+            let lv = residency(p, bytes);
+            let rate = match (p, op, lv) {
+                // ---- random read (Fig. 7a) ----
+                (HostEpyc, AccessOp::Read, Residency::L2) => 355.0, // 32 threads saturate the 11.3 G cap (Fig. 8)
+                (HostEpyc, AccessOp::Read, Residency::L3) => 343.0,
+                (HostEpyc, AccessOp::Read, Residency::Dram) => 58.0,
+                (Bf3, AccessOp::Read, Residency::L2) => 270.0, // host 1.3×
+                (Bf3, AccessOp::Read, Residency::L3) => 67.0,  // −75%
+                (Bf3, AccessOp::Read, Residency::Dram) => 20.0,
+                (Bf2, AccessOp::Read, Residency::L2) => 169.0, // BF-3 1.6×
+                (Bf2, AccessOp::Read, Residency::L3) => 22.0,  // −87%
+                (Bf2, AccessOp::Read, Residency::Dram) => 6.7,
+                (OcteonTx2, AccessOp::Read, Residency::L2) => 115.0,
+                (OcteonTx2, AccessOp::Read, Residency::L3) => 25.0, // −78%
+                (OcteonTx2, AccessOp::Read, Residency::Dram) => 6.7,
+                // ---- random write (Fig. 7c) ----
+                (HostEpyc, AccessOp::Write, Residency::L2) => 330.0,
+                (HostEpyc, AccessOp::Write, Residency::L3) => 320.0,
+                (HostEpyc, AccessOp::Write, Residency::Dram) => 50.0,
+                (Bf3, AccessOp::Write, Residency::L2) => 250.0,
+                (Bf3, AccessOp::Write, Residency::L3) => 60.0,
+                (Bf3, AccessOp::Write, Residency::Dram) => 15.0,
+                (Bf2, AccessOp::Write, Residency::L2) => 160.0,
+                (Bf2, AccessOp::Write, Residency::L3) => 18.0,
+                (Bf2, AccessOp::Write, Residency::Dram) => 4.5,
+                (OcteonTx2, AccessOp::Write, Residency::L2) => 110.0,
+                (OcteonTx2, AccessOp::Write, Residency::L3) => 30.0,
+                (OcteonTx2, AccessOp::Write, Residency::Dram) => 13.0, // near BF-3
+            };
+            rate * m
+        }
+    }
+}
+
+/// Thread-scaling cap in ops/s (Fig. 8: cache-resident random reads scale
+/// linearly with cores until the platform cap — BF-2 1.3 G, OCTEON 2.7 G,
+/// BF-3 4.3 G, host 11.3 G at 32 threads and flat beyond).
+pub fn scaling_cap_ops(p: PlatformId) -> f64 {
+    match p {
+        PlatformId::HostEpyc => 11.3e9,
+        PlatformId::Bf3 => 4.3e9,
+        PlatformId::OcteonTx2 => 2.7e9,
+        PlatformId::Bf2 => 1.3e9,
+    }
+}
+
+/// Multi-thread access rate in ops/s: linear in threads (clamped to the
+/// platform's schedulable threads) up to [`scaling_cap_ops`].
+pub fn ops_per_sec(
+    p: PlatformId,
+    op: AccessOp,
+    pat: Pattern,
+    bytes: u64,
+    threads: u32,
+) -> f64 {
+    let t = threads.clamp(1, p.spec().max_threads) as f64;
+    (single_thread_ops(p, op, pat, bytes) * t).min(scaling_cap_ops(p))
+}
+
+/// Bandwidth view of the same model (GB/s of pointer-size accesses).
+pub fn bandwidth_gbps(
+    p: PlatformId,
+    op: AccessOp,
+    pat: Pattern,
+    bytes: u64,
+    threads: u32,
+) -> f64 {
+    ops_per_sec(p, op, pat, bytes, threads) * 8.0 / 1e9
+}
+
+/// DRAM "kind" sanity helper used in reports.
+pub fn dram_summary(p: PlatformId) -> String {
+    let s = p.spec();
+    format!(
+        "{} {} / storage {:?}",
+        crate::util::fmt_bytes(s.dram_bytes),
+        s.dram_kind,
+        s.storage_kind
+    )
+}
+
+/// Whether the platform's local storage is flash-on-board (affects which
+/// storage figures it appears in).
+pub fn has_emmc(p: PlatformId) -> bool {
+    p.spec().storage_kind == StorageKind::Emmc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PlatformId::*;
+
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+
+    #[test]
+    fn residency_tracks_cache_sizes() {
+        assert_eq!(residency(Bf2, 16 * KB), Residency::L2);
+        assert_eq!(residency(Bf2, 4 * MB), Residency::L3); // 4 MB ≤ 6 MB L3
+        assert_eq!(residency(Bf2, GB), Residency::Dram);
+        // the host's 48 MB L2 keeps 4 MB L2-resident (§5.3)
+        assert_eq!(residency(HostEpyc, 4 * MB), Residency::L2);
+    }
+
+    #[test]
+    fn random_read_16kb_ratios() {
+        let host = single_thread_ops(HostEpyc, AccessOp::Read, Pattern::Random, 16 * KB);
+        let bf3 = single_thread_ops(Bf3, AccessOp::Read, Pattern::Random, 16 * KB);
+        let bf2 = single_thread_ops(Bf2, AccessOp::Read, Pattern::Random, 16 * KB);
+        for p in PlatformId::ALL {
+            assert!(
+                single_thread_ops(p, AccessOp::Read, Pattern::Random, 16 * KB) > 100e6,
+                "{p}"
+            );
+        }
+        assert!((1.5..1.7).contains(&(bf3 / bf2)));
+        assert!((1.2..1.4).contains(&(host / bf3)));
+    }
+
+    #[test]
+    fn random_read_1gb_tiers() {
+        let host = single_thread_ops(HostEpyc, AccessOp::Read, Pattern::Random, GB);
+        let bf3 = single_thread_ops(Bf3, AccessOp::Read, Pattern::Random, GB);
+        let bf2 = single_thread_ops(Bf2, AccessOp::Read, Pattern::Random, GB);
+        assert_eq!(host, 58e6);
+        assert_eq!(bf3, 20e6);
+        assert_eq!(bf2, 6.7e6);
+        // §5.3: host 8.6× BF-2 on 1 GB random reads
+        assert!((8.4..8.9).contains(&(host / bf2)));
+    }
+
+    #[test]
+    fn sequential_write_bf3_beats_host() {
+        // Fig. 7d headline: BF-3 2.2 G vs host 1.5 G seq writes
+        let bf3 = single_thread_ops(Bf3, AccessOp::Write, Pattern::Sequential, GB);
+        let host = single_thread_ops(HostEpyc, AccessOp::Write, Pattern::Sequential, GB);
+        assert!(bf3 > host);
+        assert_eq!(bf3, 2.2e9);
+    }
+
+    #[test]
+    fn sequential_flat_in_size() {
+        for p in PlatformId::ALL {
+            let small = single_thread_ops(p, AccessOp::Read, Pattern::Sequential, 16 * KB);
+            let large = single_thread_ops(p, AccessOp::Read, Pattern::Sequential, GB);
+            assert_eq!(small, large, "{p}");
+        }
+    }
+
+    #[test]
+    fn thread_scaling_linear_then_capped() {
+        // Fig. 8: BF-2 8 cores → 1.3 Gops/s cap
+        let one = ops_per_sec(Bf2, AccessOp::Read, Pattern::Random, 16 * KB, 1);
+        let four = ops_per_sec(Bf2, AccessOp::Read, Pattern::Random, 16 * KB, 4);
+        assert!((four / one - 4.0).abs() < 1e-9);
+        let eight = ops_per_sec(Bf2, AccessOp::Read, Pattern::Random, 16 * KB, 8);
+        assert!(eight <= 1.3e9 + 1.0);
+        // requesting more threads than cores clamps
+        let many = ops_per_sec(Bf2, AccessOp::Read, Pattern::Random, 16 * KB, 64);
+        assert_eq!(many, eight);
+        // host saturates at its 11.3 G cap before 96 threads
+        let h96 = ops_per_sec(HostEpyc, AccessOp::Read, Pattern::Random, 16 * KB, 96);
+        assert_eq!(h96, 11.3e9);
+    }
+
+    #[test]
+    fn dpu_caps_ordered_by_core_count_times_strength() {
+        assert!(scaling_cap_ops(Bf3) > scaling_cap_ops(OcteonTx2));
+        assert!(scaling_cap_ops(OcteonTx2) > scaling_cap_ops(Bf2));
+    }
+}

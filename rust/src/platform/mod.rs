@@ -1,0 +1,15 @@
+//! Calibrated performance models of the benchmarked platforms.
+//!
+//! The paper measured real BlueField-2/-3, OCTEON TX2, and an EPYC host;
+//! this environment has none of them, so `platform/` provides analytical
+//! stand-ins calibrated against every ratio the paper reports (DESIGN.md
+//! §3). All downstream subsystems — storage, network, database, index,
+//! accelerator plugins — consume these models, so "who wins and by what
+//! factor" flows from the same architectural causes the paper identifies.
+
+pub mod accelerator;
+pub mod cpu;
+pub mod memory;
+pub mod spec;
+
+pub use spec::{PlatformId, PlatformSpec, StorageKind};

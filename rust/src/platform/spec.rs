@@ -1,0 +1,261 @@
+//! Hardware specifications of the four benchmarked platforms.
+//!
+//! These mirror the paper's §4 testbed: NVIDIA BlueField-2, BlueField-3,
+//! Marvell OCTEON TX2, and the host server (2× AMD EPYC 9254). Every
+//! calibration constant cites its source — either the spec table in the
+//! paper's Figure 1 / §4 prose, or a ratio reported in the evaluation
+//! (§5–§8). Absolute numbers are best-effort reconstructions from those
+//! ratios; DESIGN.md §3 explains why preserving the *ratios* preserves the
+//! paper's findings.
+
+use std::fmt;
+
+/// Identifier for one of the benchmarked platforms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PlatformId {
+    /// Host server: 2× AMD EPYC 9254 (§4 "Host Machine").
+    HostEpyc,
+    /// NVIDIA BlueField-2 (§4, Fig. 1).
+    Bf2,
+    /// NVIDIA BlueField-3 (§4, Fig. 1).
+    Bf3,
+    /// Marvell OCTEON TX2 (§4, Fig. 1).
+    OcteonTx2,
+}
+
+impl PlatformId {
+    pub const ALL: [PlatformId; 4] = [
+        PlatformId::HostEpyc,
+        PlatformId::Bf2,
+        PlatformId::Bf3,
+        PlatformId::OcteonTx2,
+    ];
+
+    /// The three DPUs (everything but the host).
+    pub const DPUS: [PlatformId; 3] =
+        [PlatformId::Bf2, PlatformId::Bf3, PlatformId::OcteonTx2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlatformId::HostEpyc => "host",
+            PlatformId::Bf2 => "bf2",
+            PlatformId::Bf3 => "bf3",
+            PlatformId::OcteonTx2 => "octeon",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PlatformId> {
+        Some(match s {
+            "host" | "host_epyc" => PlatformId::HostEpyc,
+            "bf2" | "bluefield2" | "bluefield-2" => PlatformId::Bf2,
+            "bf3" | "bluefield3" | "bluefield-3" => PlatformId::Bf3,
+            "octeon" | "octeon_tx2" | "octeontx2" => PlatformId::OcteonTx2,
+            _ => return None,
+        })
+    }
+
+    pub fn spec(&self) -> &'static PlatformSpec {
+        spec_of(*self)
+    }
+
+    pub fn is_dpu(&self) -> bool {
+        *self != PlatformId::HostEpyc
+    }
+}
+
+impl fmt::Display for PlatformId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Storage device class attached to a platform (§4, §6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageKind {
+    /// eMMC flash soldered on BF-2 / OCTEON — the slowest tier (Fig. 9).
+    Emmc,
+    /// NVMe SSD (BF-3 160 GB, host 2× 960 GB).
+    Nvme,
+}
+
+/// Hardware accelerators present on a platform (§2.2: the set differs per
+/// vendor *and* generation — e.g. BF-3 dropped the compression engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Accelerators {
+    pub compression: bool,
+    pub decompression: bool,
+    pub regex: bool,
+}
+
+/// Static description of one platform.
+#[derive(Debug, Clone)]
+pub struct PlatformSpec {
+    pub id: PlatformId,
+    pub display: &'static str,
+    /// Physical cores (§4). Host has 48 physical / 96 hyperthreads.
+    pub cores: u32,
+    /// Max schedulable threads (host: hyperthreads).
+    pub max_threads: u32,
+    pub clock_ghz: f64,
+    /// Per-core-pair L2 on the DPUs; total L2 on the host (§4).
+    pub l2_bytes: u64,
+    /// Shared L3 (§4).
+    pub l3_bytes: u64,
+    pub dram_bytes: u64,
+    pub dram_kind: &'static str,
+    pub storage_kind: StorageKind,
+    /// NIC line rate in Gbps (ConnectX-6 100, CX-7 400, OCTEON 100).
+    pub nic_gbps: f64,
+    pub pcie_gen: u8,
+    pub accel: Accelerators,
+}
+
+const KB: u64 = 1024;
+const MB: u64 = 1024 * KB;
+const GB: u64 = 1024 * MB;
+
+/// §4: BF-2 — Arm A72, 8 cores @ 2.5 GHz, 1 MB L2 per 2 cores, 6 MB L3,
+/// 16 GB DDR4, ConnectX-6 (100 Gbps), PCIe 4.0, eMMC; compression +
+/// decompression + RegEx accelerators.
+static BF2: PlatformSpec = PlatformSpec {
+    id: PlatformId::Bf2,
+    display: "NVIDIA BlueField-2",
+    cores: 8,
+    max_threads: 8,
+    clock_ghz: 2.5,
+    l2_bytes: 4 * MB, // 1 MB × 4 core-pairs
+    l3_bytes: 6 * MB,
+    dram_bytes: 16 * GB,
+    dram_kind: "DDR4",
+    storage_kind: StorageKind::Emmc,
+    nic_gbps: 100.0,
+    pcie_gen: 4,
+    accel: Accelerators {
+        compression: true,
+        decompression: true,
+        regex: true,
+    },
+};
+
+/// §4: BF-3 — Arm A78, 16 cores @ 3.0 GHz, 6 MB L2, 16 MB L3, 32 GB DDR5,
+/// ConnectX-7 (400 Gbps), PCIe 5.0, 160 GB NVMe; the compression engine is
+/// *removed* relative to BF-2 (decompression + RegEx remain).
+static BF3: PlatformSpec = PlatformSpec {
+    id: PlatformId::Bf3,
+    display: "NVIDIA BlueField-3",
+    cores: 16,
+    max_threads: 16,
+    clock_ghz: 3.0,
+    l2_bytes: 6 * MB,
+    l3_bytes: 16 * MB,
+    dram_bytes: 32 * GB,
+    dram_kind: "DDR5",
+    storage_kind: StorageKind::Nvme,
+    nic_gbps: 400.0,
+    pcie_gen: 5,
+    accel: Accelerators {
+        compression: false,
+        decompression: true,
+        regex: true,
+    },
+};
+
+/// §4: OCTEON TX2 — Arm A72, 24 cores @ 2.2 GHz, 1 MB L2 per 2 cores,
+/// 14 MB L3, 32 GB DDR4, 100 Gbps Ethernet, PCIe 3.0, 64 GB eMMC;
+/// accelerators target network security / packet processing, so none of
+/// the three data-path accelerators dpBento's plugins exercise.
+static OCTEON: PlatformSpec = PlatformSpec {
+    id: PlatformId::OcteonTx2,
+    display: "Marvell OCTEON TX2",
+    cores: 24,
+    max_threads: 24,
+    clock_ghz: 2.2,
+    l2_bytes: 12 * MB, // 1 MB × 12 core-pairs
+    l3_bytes: 14 * MB,
+    dram_bytes: 32 * GB,
+    dram_kind: "DDR4",
+    storage_kind: StorageKind::Emmc,
+    nic_gbps: 100.0,
+    pcie_gen: 3,
+    accel: Accelerators {
+        compression: false,
+        decompression: false,
+        regex: false,
+    },
+};
+
+/// §4: host — 2× AMD EPYC 9254 24-core @ 2.9 GHz (48 cores / 96 HT),
+/// 48 MB L2, 256 MB L3, 128 GB DDR5, 2× 960 GB NVMe.
+static HOST: PlatformSpec = PlatformSpec {
+    id: PlatformId::HostEpyc,
+    display: "Host (2x AMD EPYC 9254)",
+    cores: 48,
+    max_threads: 96,
+    clock_ghz: 2.9,
+    l2_bytes: 48 * MB,
+    l3_bytes: 256 * MB,
+    dram_bytes: 128 * GB,
+    dram_kind: "DDR5",
+    storage_kind: StorageKind::Nvme,
+    nic_gbps: 100.0,
+    pcie_gen: 5,
+    accel: Accelerators {
+        compression: false,
+        decompression: false,
+        regex: false,
+    },
+};
+
+pub fn spec_of(id: PlatformId) -> &'static PlatformSpec {
+    match id {
+        PlatformId::HostEpyc => &HOST,
+        PlatformId::Bf2 => &BF2,
+        PlatformId::Bf3 => &BF3,
+        PlatformId::OcteonTx2 => &OCTEON,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_paper_table() {
+        let bf2 = PlatformId::Bf2.spec();
+        assert_eq!(bf2.cores, 8);
+        assert_eq!(bf2.clock_ghz, 2.5);
+        assert!(bf2.accel.compression);
+
+        let bf3 = PlatformId::Bf3.spec();
+        assert_eq!(bf3.cores, 16);
+        assert_eq!(bf3.nic_gbps, 400.0);
+        // §4: "the compression engine is removed" from BF-2 to BF-3
+        assert!(!bf3.accel.compression);
+        assert!(bf3.accel.decompression && bf3.accel.regex);
+        assert_eq!(bf3.storage_kind, StorageKind::Nvme);
+
+        let oct = PlatformId::OcteonTx2.spec();
+        assert_eq!(oct.cores, 24);
+        assert_eq!(oct.storage_kind, StorageKind::Emmc);
+        assert!(!oct.accel.regex);
+
+        let host = PlatformId::HostEpyc.spec();
+        assert_eq!(host.max_threads, 96);
+        assert_eq!(host.l3_bytes, 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for id in PlatformId::ALL {
+            assert_eq!(PlatformId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(PlatformId::from_name("bluefield-3"), Some(PlatformId::Bf3));
+        assert_eq!(PlatformId::from_name("unknown"), None);
+    }
+
+    #[test]
+    fn dpus_exclude_host() {
+        assert!(PlatformId::DPUS.iter().all(|p| p.is_dpu()));
+        assert!(!PlatformId::HostEpyc.is_dpu());
+    }
+}

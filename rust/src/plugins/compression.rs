@@ -1,0 +1,229 @@
+//! Compression / decompression plugin tasks (§5.2, Figs. 6a–6b).
+//!
+//! The software baseline is *real*: DEFLATE via `flate2` over a corpus of
+//! TPC-H-orders-style comment text (the paper compresses "strings
+//! generated from TPC-H orders table"). The measured host rate anchors
+//! the software variants (1-core / SIMD / all-core threaded) across
+//! platforms via the calibrated factors, and the DOCA hardware engines
+//! are priced by the startup+rate model in `platform::accelerator`.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::db::Gen;
+use crate::platform::accelerator::{
+    engine, host_sw_rate_bps, sw_throughput_bps, AccelTask, SwVariant,
+};
+
+/// One task instance handles one direction (two registry entries).
+pub struct CompressionTask {
+    accel: AccelTask,
+}
+
+impl CompressionTask {
+    pub fn compress() -> CompressionTask {
+        CompressionTask {
+            accel: AccelTask::Compression,
+        }
+    }
+    pub fn decompress() -> CompressionTask {
+        CompressionTask {
+            accel: AccelTask::Decompression,
+        }
+    }
+}
+
+/// Corpus used to measure the real host DEFLATE rate (large enough to
+/// amortize setup, small enough for fast tests).
+const MEASURE_BYTES: usize = 4 * 1024 * 1024;
+
+/// Really compress `data` with flate2 (level 6, the DEFLATE default);
+/// returns (compressed bytes, seconds).
+pub fn deflate_compress(data: &[u8]) -> Result<(Vec<u8>, f64)> {
+    let t0 = Instant::now();
+    let mut enc =
+        flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::new(6));
+    enc.write_all(data)?;
+    let out = enc.finish()?;
+    Ok((out, t0.elapsed().as_secs_f64()))
+}
+
+/// Really decompress; returns (original bytes, seconds).
+pub fn deflate_decompress(compressed: &[u8]) -> Result<(Vec<u8>, f64)> {
+    let t0 = Instant::now();
+    let mut dec = flate2::write::ZlibDecoder::new(Vec::new());
+    dec.write_all(compressed)?;
+    let out = dec.finish()?;
+    Ok((out, t0.elapsed().as_secs_f64()))
+}
+
+impl Task for CompressionTask {
+    fn name(&self) -> &'static str {
+        match self.accel {
+            AccelTask::Compression => "compression",
+            AccelTask::Decompression => "decompression",
+            AccelTask::Regex => unreachable!(),
+        }
+    }
+    fn description(&self) -> &'static str {
+        match self.accel {
+            AccelTask::Compression => {
+                "DEFLATE compression: CPU variants vs the BF-2 hardware engine (Fig. 6a)"
+            }
+            _ => "DEFLATE decompression: CPU variants vs BF-2/BF-3 engines (Fig. 6b)",
+        }
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("size", "payload bytes (1 KB - 512 MB in the paper)", "[1048576]"),
+            ParamDef::new(
+                "variant",
+                "1core | simd | threads | accel — execution technique (§5.2)",
+                "[\"1core\", \"accel\"]",
+            ),
+            ParamDef::new(
+                "rate_source",
+                "modeled | measured — host software anchor rate",
+                "\"modeled\"",
+            ),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["throughput_mbps", "compression_ratio"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        // real corpus + real round-trip: correctness before performance
+        let corpus = Gen::new(ctx.seed, 100).comment_corpus(MEASURE_BYTES);
+        let (compressed, c_secs) = deflate_compress(&corpus)?;
+        let (back, d_secs) = deflate_decompress(&compressed)?;
+        anyhow::ensure!(back == corpus, "DEFLATE round-trip corrupted the corpus");
+        let ratio = corpus.len() as f64 / compressed.len() as f64;
+        ctx.log(format!(
+            "{}: corpus {} B -> {} B (ratio {:.2}); host measured {:.0}/{:.0} MB/s c/d",
+            self.name(),
+            corpus.len(),
+            compressed.len(),
+            ratio,
+            corpus.len() as f64 / c_secs / 1e6,
+            corpus.len() as f64 / d_secs / 1e6,
+        ));
+        ctx.put("ratio", ratio);
+        ctx.put("host_compress_bps", corpus.len() as f64 / c_secs);
+        ctx.put("host_decompress_bps", corpus.len() as f64 / d_secs);
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let size = test.usize_or("size", 1024 * 1024) as u64;
+        anyhow::ensure!(size >= 1, "size must be positive");
+        let variant = test.str_or("variant", "1core").to_string();
+
+        let host_rate = match test.str_or("rate_source", "modeled") {
+            "modeled" => host_sw_rate_bps(self.accel),
+            "measured" => match self.accel {
+                AccelTask::Compression => *ctx.get::<f64>("host_compress_bps"),
+                _ => *ctx.get::<f64>("host_decompress_bps"),
+            },
+            s => bail!("unknown rate_source '{s}'"),
+        };
+
+        let bps = match variant.as_str() {
+            "1core" => sw_throughput_bps(ctx.platform, self.accel, SwVariant::SingleCore, size, host_rate),
+            "simd" => sw_throughput_bps(ctx.platform, self.accel, SwVariant::Simd, size, host_rate),
+            "threads" => sw_throughput_bps(ctx.platform, self.accel, SwVariant::Threaded, size, host_rate),
+            "accel" => match engine(ctx.platform, self.accel) {
+                Some(e) => e.throughput_bps(size),
+                None => bail!(
+                    "{} has no {} engine (§4: accelerator sets differ per DPU)",
+                    ctx.platform,
+                    self.name()
+                ),
+            },
+            v => bail!("unknown variant '{v}'"),
+        };
+
+        Ok(BTreeMap::from([
+            ("throughput_mbps".to_string(), bps / 1e6),
+            ("compression_ratio".to_string(), *ctx.get::<f64>("ratio")),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+    use crate::util::json::Value;
+
+    fn spec(pairs: &[(&str, Value)]) -> TestSpec {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn real_deflate_roundtrip_and_ratio() {
+        let corpus = Gen::new(1, 100).comment_corpus(256 * 1024);
+        let (c, _) = deflate_compress(&corpus).unwrap();
+        let (back, _) = deflate_decompress(&c).unwrap();
+        assert_eq!(back, corpus);
+        // dbgen-style text crushes well
+        assert!(corpus.len() as f64 / c.len() as f64 > 2.0);
+    }
+
+    #[test]
+    fn accel_crossover_visible_through_task() {
+        let t = CompressionTask::compress();
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 6);
+        t.prepare(&mut ctx).unwrap();
+        let small = t
+            .run(&mut ctx, &spec(&[("size", Value::Num(16384.0)), ("variant", Value::str("accel"))]))
+            .unwrap()["throughput_mbps"];
+        let small_sw = t
+            .run(&mut ctx, &spec(&[("size", Value::Num(16384.0)), ("variant", Value::str("1core"))]))
+            .unwrap()["throughput_mbps"];
+        assert!(small < small_sw, "engine should lose below the crossover");
+        let big = t
+            .run(&mut ctx, &spec(&[("size", Value::Num(512e6)), ("variant", Value::str("accel"))]))
+            .unwrap()["throughput_mbps"];
+        assert!(big > 20.0 * small, "engine should dominate at 512 MB");
+    }
+
+    #[test]
+    fn bf3_has_no_compression_engine() {
+        let t = CompressionTask::compress();
+        let mut ctx = TaskContext::new(PlatformId::Bf3, 6);
+        t.prepare(&mut ctx).unwrap();
+        let err = t
+            .run(&mut ctx, &spec(&[("variant", Value::str("accel"))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no compression engine"), "{err}");
+        // ... but decompression works on BF-3
+        let t2 = CompressionTask::decompress();
+        let mut ctx2 = TaskContext::new(PlatformId::Bf3, 6);
+        t2.prepare(&mut ctx2).unwrap();
+        assert!(t2
+            .run(&mut ctx2, &spec(&[("variant", Value::str("accel"))]))
+            .is_ok());
+    }
+
+    #[test]
+    fn measured_rate_source_uses_prepared_measurement() {
+        let t = CompressionTask::compress();
+        let mut ctx = TaskContext::new(PlatformId::HostEpyc, 6);
+        t.prepare(&mut ctx).unwrap();
+        let r = t
+            .run(
+                &mut ctx,
+                &spec(&[
+                    ("variant", Value::str("1core")),
+                    ("rate_source", Value::str("measured")),
+                ]),
+            )
+            .unwrap();
+        let measured = *ctx.get::<f64>("host_compress_bps") / 1e6;
+        assert!((r["throughput_mbps"] - measured).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,8 @@
+//! Bundled plugin tasks (§3.2 / §5.2 / §6.2): vendor-specific accelerator
+//! and kernel-bypass measurements. Unlike the built-ins, these depend on
+//! per-platform hardware features and refuse gracefully where the feature
+//! is absent (e.g. no compression engine on BF-3).
+
+pub mod compression;
+pub mod rdma;
+pub mod regex_match;

@@ -1,0 +1,95 @@
+//! RDMA plugin task (§6.2, Fig. 12): kernel-bypass one-sided reads from
+//! the remote server into the endpoint's memory (the paper drives
+//! ib_read_lat / ib_read_bw on BF-2). Prices the calibrated RDMA path
+//! model — the headline result is the latency *inversion*: RDMA to the
+//! DPU is faster than to the host.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::net::rdma;
+
+pub struct RdmaTask;
+
+const LAT_SAMPLES: usize = 3000;
+
+impl Task for RdmaTask {
+    fn name(&self) -> &'static str {
+        "rdma"
+    }
+    fn description(&self) -> &'static str {
+        "RDMA read latency/throughput, remote server <-> endpoint (Fig. 12)"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("message_size", "bytes per RDMA read", "[4096]"),
+            ParamDef::new("threads", "queue pairs (ib_read_bw -q)", "[1, 2]"),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["mean_lat_us", "p99_lat_us", "throughput_gbps"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        ctx.log(format!(
+            "rdma: one-sided reads into {} memory (kernel bypass)",
+            ctx.platform
+        ));
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let msg = test.usize_or("message_size", 4096);
+        let threads = test.usize_or("threads", 1) as u32;
+        anyhow::ensure!((1..=8 * 1024 * 1024).contains(&msg), "message_size out of range");
+        let lat = rdma::latency_summary(ctx.platform, msg, LAT_SAMPLES, ctx.seed);
+        Ok(BTreeMap::from([
+            ("mean_lat_us".to_string(), lat.mean),
+            ("p99_lat_us".to_string(), lat.p99),
+            (
+                "throughput_gbps".to_string(),
+                rdma::throughput_gbps(ctx.platform, threads),
+            ),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+    use crate::util::json::Value;
+
+    #[test]
+    fn dpu_latency_inversion_visible_through_task() {
+        let t = RdmaTask;
+        let spec: TestSpec = [("message_size".to_string(), Value::Num(4096.0))]
+            .into_iter()
+            .collect();
+        let mut dpu = TaskContext::new(PlatformId::Bf2, 12);
+        let mut host = TaskContext::new(PlatformId::HostEpyc, 12);
+        let rd = t.run(&mut dpu, &spec).unwrap();
+        let rh = t.run(&mut host, &spec).unwrap();
+        // Fig. 12a: RDMA to the DPU is *faster* than to the host
+        assert!(rd["mean_lat_us"] < rh["mean_lat_us"]);
+        // Fig. 12b: single-QP throughput gap is marginal (~11%)
+        let gap = 1.0 - rd["throughput_gbps"] / rh["throughput_gbps"];
+        assert!((0.05..0.15).contains(&gap), "{gap}");
+    }
+
+    #[test]
+    fn two_qps_close_the_gap() {
+        let t = RdmaTask;
+        let spec: TestSpec = [
+            ("message_size".to_string(), Value::Num(32768.0)),
+            ("threads".to_string(), Value::Num(2.0)),
+        ]
+        .into_iter()
+        .collect();
+        let mut dpu = TaskContext::new(PlatformId::Bf2, 12);
+        let mut host = TaskContext::new(PlatformId::HostEpyc, 12);
+        let rd = t.run(&mut dpu, &spec).unwrap();
+        let rh = t.run(&mut host, &spec).unwrap();
+        assert!((rd["throughput_gbps"] - rh["throughput_gbps"]).abs() < 1e-9);
+    }
+}

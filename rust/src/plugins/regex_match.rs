@@ -1,0 +1,184 @@
+//! RegEx-matching plugin task (§5.2, Fig. 6c): the TPC-H Q13 pattern
+//! '%special%requests%' over order-comment text. The software baseline is
+//! the real `regex` crate (which uses SIMD-accelerated literal scanning —
+//! the paper's "single-threaded implementation with SIMD"); hardware
+//! engines are priced by the startup+rate model.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use regex::bytes::Regex;
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::db::Gen;
+use crate::platform::accelerator::{
+    engine, host_sw_rate_bps, sw_throughput_bps, AccelTask, SwVariant,
+};
+
+pub struct RegexTask;
+
+/// SQL LIKE '%special%requests%' as a regex.
+pub const PATTERN: &str = "special.*requests";
+
+/// Corpus size for the real host measurement.
+const MEASURE_BYTES: usize = 8 * 1024 * 1024;
+
+/// Really scan `corpus` with the compiled pattern; returns (match count,
+/// bytes/s).
+pub fn scan_corpus(re: &Regex, corpus: &[u8]) -> (usize, f64) {
+    let t0 = Instant::now();
+    // line-at-a-time matching (each comment is one record, as in Q13)
+    let mut matches = 0usize;
+    for line in corpus.split(|&b| b == b'\n') {
+        if re.is_match(line) {
+            matches += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    (matches, corpus.len() as f64 / dt)
+}
+
+impl Task for RegexTask {
+    fn name(&self) -> &'static str {
+        "regex"
+    }
+    fn description(&self) -> &'static str {
+        "RegEx matching ('%special%requests%', TPC-H Q13) vs hardware engines (Fig. 6c)"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("size", "corpus bytes (1 KB - 256 MB in the paper)", "[1048576]"),
+            ParamDef::new(
+                "variant",
+                "1core | simd | threads | accel — execution technique (§5.2)",
+                "[\"simd\", \"accel\"]",
+            ),
+            ParamDef::new("rate_source", "modeled | measured — host anchor rate", "\"modeled\""),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["throughput_mbps", "match_rate"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        let re = Regex::new(PATTERN).expect("pattern compiles");
+        // newline-separated comment records
+        let mut corpus = Gen::new(ctx.seed, 100).comment_corpus(MEASURE_BYTES);
+        for i in (80..corpus.len()).step_by(80) {
+            corpus[i] = b'\n';
+        }
+        let (matches, bps) = scan_corpus(&re, &corpus);
+        anyhow::ensure!(matches > 0, "corpus should contain Q13 matches");
+        ctx.log(format!(
+            "regex: {} records matched in {} B corpus; host measured {:.0} MB/s",
+            matches,
+            corpus.len(),
+            bps / 1e6
+        ));
+        ctx.put("host_regex_bps", bps);
+        ctx.put("match_rate", matches as f64 / (corpus.len() as f64 / 80.0));
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let size = test.usize_or("size", 1024 * 1024) as u64;
+        anyhow::ensure!(size >= 1, "size must be positive");
+        let host_rate = match test.str_or("rate_source", "modeled") {
+            "modeled" => host_sw_rate_bps(AccelTask::Regex),
+            "measured" => *ctx.get::<f64>("host_regex_bps"),
+            s => bail!("unknown rate_source '{s}'"),
+        };
+        let bps = match test.str_or("variant", "simd") {
+            "1core" => {
+                sw_throughput_bps(ctx.platform, AccelTask::Regex, SwVariant::SingleCore, size, host_rate)
+            }
+            "simd" => sw_throughput_bps(ctx.platform, AccelTask::Regex, SwVariant::Simd, size, host_rate),
+            "threads" => {
+                sw_throughput_bps(ctx.platform, AccelTask::Regex, SwVariant::Threaded, size, host_rate)
+            }
+            "accel" => match engine(ctx.platform, AccelTask::Regex) {
+                Some(e) => e.throughput_bps(size),
+                None => bail!("{} has no RegEx engine", ctx.platform),
+            },
+            v => bail!("unknown variant '{v}'"),
+        };
+        Ok(BTreeMap::from([
+            ("throughput_mbps".to_string(), bps / 1e6),
+            ("match_rate".to_string(), *ctx.get::<f64>("match_rate")),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+    use crate::util::json::Value;
+
+    fn spec(pairs: &[(&str, Value)]) -> TestSpec {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn real_regex_agrees_with_db_query_semantics() {
+        let re = Regex::new(PATTERN).unwrap();
+        assert!(re.is_match(b"very special packages requests here"));
+        assert!(!re.is_match(b"requests then special"));
+        // consistency with the DB engine's LIKE implementation
+        use crate::db::query::matches_special_requests;
+        for s in [
+            "special packages requests",
+            "specialrequests",
+            "requests special",
+            "the quick fox",
+            "special but nothing else",
+        ] {
+            assert_eq!(
+                re.is_match(s.as_bytes()),
+                matches_special_requests(s),
+                "{s}"
+            );
+        }
+    }
+
+    #[test]
+    fn engines_identical_on_bf2_bf3() {
+        let t = RegexTask;
+        let s = spec(&[("size", Value::Num(1e6)), ("variant", Value::str("accel"))]);
+        let mut c2 = TaskContext::new(PlatformId::Bf2, 6);
+        let mut c3 = TaskContext::new(PlatformId::Bf3, 6);
+        t.prepare(&mut c2).unwrap();
+        t.prepare(&mut c3).unwrap();
+        assert_eq!(
+            t.run(&mut c2, &s).unwrap()["throughput_mbps"],
+            t.run(&mut c3, &s).unwrap()["throughput_mbps"]
+        );
+    }
+
+    #[test]
+    fn host_threads_beat_engine_at_256mb() {
+        let t = RegexTask;
+        let mut ctx = TaskContext::new(PlatformId::HostEpyc, 6);
+        t.prepare(&mut ctx).unwrap();
+        let threads = t
+            .run(&mut ctx, &spec(&[("size", Value::Num(256e6)), ("variant", Value::str("threads"))]))
+            .unwrap()["throughput_mbps"];
+        let mut bf3 = TaskContext::new(PlatformId::Bf3, 6);
+        t.prepare(&mut bf3).unwrap();
+        let accel = t
+            .run(&mut bf3, &spec(&[("size", Value::Num(256e6)), ("variant", Value::str("accel"))]))
+            .unwrap()["throughput_mbps"];
+        // Fig. 6c: host all-core ≈3× the engine on 256 MB
+        let ratio = threads / accel;
+        assert!((2.0..4.5).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn octeon_has_no_engine() {
+        let t = RegexTask;
+        let mut ctx = TaskContext::new(PlatformId::OcteonTx2, 6);
+        t.prepare(&mut ctx).unwrap();
+        assert!(t
+            .run(&mut ctx, &spec(&[("variant", Value::str("accel"))]))
+            .is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! Artifact manifest: the binary contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing each AOT
+//! entry point (HLO file, input shapes/dtypes) plus the pipeline constants
+//! (rows per invocation, kernel block size, Q1 group/measure counts). The
+//! runtime refuses to load artifacts whose manifest disagrees with its
+//! compiled-in expectations — shape drift fails loudly at startup, not as
+//! garbage numerics on the hot path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Input spec of one entry point parameter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub rows: usize,
+    pub block_rows: usize,
+    pub q1_groups: usize,
+    pub q1_measures: usize,
+    pub entry_points: BTreeMap<String, EntryPoint>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+        let get_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .with_context(|| format!("manifest missing numeric '{key}'"))
+        };
+        let rows = get_usize("rows")?;
+        let block_rows = get_usize("block_rows")?;
+        if rows == 0 || block_rows == 0 || rows % block_rows != 0 {
+            bail!("manifest rows {rows} not a positive multiple of block_rows {block_rows}");
+        }
+
+        let eps = v
+            .get("entry_points")
+            .and_then(Value::as_obj)
+            .context("manifest missing 'entry_points'")?;
+        let mut entry_points = BTreeMap::new();
+        for (name, ep) in eps {
+            let file = ep
+                .get("file")
+                .and_then(Value::as_str)
+                .with_context(|| format!("entry {name} missing 'file'"))?;
+            let hlo_path = dir.join(file);
+            if !hlo_path.exists() {
+                bail!("artifact file {} missing for entry {name}", hlo_path.display());
+            }
+            let inputs = ep
+                .get("inputs")
+                .and_then(Value::as_arr)
+                .with_context(|| format!("entry {name} missing 'inputs'"))?
+                .iter()
+                .map(|i| -> Result<InputSpec> {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Value::as_arr)
+                        .context("input missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("bad dim"))
+                        .collect::<Result<Vec<_>>>()?;
+                    let dtype = i
+                        .get("dtype")
+                        .and_then(Value::as_str)
+                        .context("input missing dtype")?
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entry_points.insert(
+                name.clone(),
+                EntryPoint {
+                    name: name.clone(),
+                    hlo_path,
+                    inputs,
+                },
+            );
+        }
+
+        let m = Manifest {
+            dir,
+            rows,
+            block_rows,
+            q1_groups: get_usize("q1_groups")?,
+            q1_measures: get_usize("q1_measures")?,
+            entry_points,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check the contract the Rust hot path is compiled against.
+    fn validate(&self) -> Result<()> {
+        for required in ["pushdown_scan", "pushdown_agg", "q6_agg", "q1_groupby"] {
+            let ep = self
+                .entry_points
+                .get(required)
+                .with_context(|| format!("manifest missing entry point '{required}'"))?;
+            let n = self.rows;
+            let expect: Vec<InputSpec> = match required {
+                "pushdown_scan" | "pushdown_agg" => vec![
+                    InputSpec { shape: vec![n], dtype: "float32".into() },
+                    InputSpec { shape: vec![n], dtype: "float32".into() },
+                    InputSpec { shape: vec![n], dtype: "float32".into() },
+                    InputSpec { shape: vec![1], dtype: "float32".into() },
+                    InputSpec { shape: vec![1], dtype: "float32".into() },
+                ],
+                "q6_agg" => vec![
+                    InputSpec { shape: vec![n], dtype: "float32".into() },
+                    InputSpec { shape: vec![n], dtype: "float32".into() },
+                    InputSpec { shape: vec![n], dtype: "float32".into() },
+                    InputSpec { shape: vec![3], dtype: "float32".into() },
+                ],
+                "q1_groupby" => vec![
+                    InputSpec { shape: vec![n], dtype: "int32".into() },
+                    InputSpec {
+                        shape: vec![n, self.q1_measures],
+                        dtype: "float32".into(),
+                    },
+                ],
+                _ => unreachable!(),
+            };
+            if ep.inputs != expect {
+                bail!(
+                    "entry '{required}' input spec {:?} != expected {:?} — \
+                     python/compile and rust/src/runtime are out of sync",
+                    ep.inputs,
+                    expect
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$DPBENTO_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("DPBENTO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::create_dir_all(dir).unwrap();
+        fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn minimal_manifest(dir: &Path) -> String {
+        // create dummy HLO files so existence checks pass
+        for f in [
+            "pushdown_scan.hlo.txt",
+            "pushdown_agg.hlo.txt",
+            "q6_agg.hlo.txt",
+            "q1_groupby.hlo.txt",
+        ] {
+            fs::write(dir.join(f), "HloModule m\n").unwrap();
+        }
+        let n = 65536;
+        format!(
+            r#"{{"rows": {n}, "block_rows": 8192, "q1_groups": 8, "q1_measures": 4,
+               "entry_points": {{
+                 "pushdown_scan": {{"file": "pushdown_scan.hlo.txt", "inputs": [
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [1], "dtype": "float32"}},
+                    {{"shape": [1], "dtype": "float32"}}]}},
+                 "pushdown_agg": {{"file": "pushdown_agg.hlo.txt", "inputs": [
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [1], "dtype": "float32"}},
+                    {{"shape": [1], "dtype": "float32"}}]}},
+                 "q6_agg": {{"file": "q6_agg.hlo.txt", "inputs": [
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [{n}], "dtype": "float32"}},
+                    {{"shape": [3], "dtype": "float32"}}]}},
+                 "q1_groupby": {{"file": "q1_groupby.hlo.txt", "inputs": [
+                    {{"shape": [{n}], "dtype": "int32"}},
+                    {{"shape": [{n}, 4], "dtype": "float32"}}]}}
+               }}}}"#
+        )
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("dpbento_manifest_ok");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let body = minimal_manifest(&dir);
+        write_manifest(&dir, &body);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.rows, 65536);
+        assert_eq!(m.entry_points.len(), 4);
+        assert!(m.entry_points["q6_agg"].hlo_path.exists());
+    }
+
+    #[test]
+    fn rejects_missing_entry() {
+        let dir = std::env::temp_dir().join("dpbento_manifest_missing");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let body = minimal_manifest(&dir).replace("q6_agg", "q6_gone");
+        fs::write(dir.join("q6_gone.hlo.txt"), "HloModule m\n").unwrap();
+        write_manifest(&dir, &body);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("q6_agg"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shape_drift() {
+        let dir = std::env::temp_dir().join("dpbento_manifest_drift");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let body = minimal_manifest(&dir).replace(r#""shape": [3]"#, r#""shape": [4]"#);
+        write_manifest(&dir, &body);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("out of sync"), "{err}");
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let dir = std::env::temp_dir().join("dpbento_manifest_ragged");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let body = minimal_manifest(&dir).replace(r#""block_rows": 8192"#, r#""block_rows": 10000"#);
+        write_manifest(&dir, &body);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent/dpbento").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,199 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas pipelines.
+//!
+//! Wraps the `xla` crate: one CPU `PjRtClient` per [`Runtime`], one
+//! compiled executable per entry point (compiled once at load, reused on
+//! the hot path), and typed batch-level helpers that stream row-blocks of
+//! column data through the executables. This is the only place Python's
+//! output crosses into Rust: HLO *text* (see `python/compile/aot.py` for
+//! why text, not serialized protos).
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+
+/// Outputs of one pushdown-scan invocation over a row-block.
+#[derive(Debug, Clone)]
+pub struct ScanOut {
+    /// Row selection mask (0/1) for the block.
+    pub mask: Vec<i32>,
+    /// Number of qualifying rows.
+    pub count: i32,
+    /// sum(price × discount) over qualifying rows.
+    pub revenue: f32,
+}
+
+/// Q1 group-by outputs.
+#[derive(Debug, Clone)]
+pub struct GroupbyOut {
+    /// [groups × measures] row-major sums.
+    pub sums: Vec<f32>,
+    /// per-group row counts.
+    pub counts: Vec<f32>,
+    pub groups: usize,
+    pub measures: usize,
+}
+
+/// Loaded PJRT runtime: client + compiled executables + the manifest
+/// contract.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    pushdown: xla::PjRtLoadedExecutable,
+    pushdown_agg: xla::PjRtLoadedExecutable,
+    q6: xla::PjRtLoadedExecutable,
+    q1: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let ep = &manifest.entry_points[name];
+            let proto = xla::HloModuleProto::from_text_file(
+                ep.hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", ep.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(Runtime {
+            pushdown: compile("pushdown_scan")?,
+            pushdown_agg: compile("pushdown_agg")?,
+            q6: compile("q6_agg")?,
+            q1: compile("q1_groupby")?,
+            client,
+            manifest,
+        })
+    }
+
+    /// Rows each executable invocation consumes.
+    pub fn rows(&self) -> usize {
+        self.manifest.rows
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the predicate-pushdown scan over exactly [`Self::rows`]
+    /// rows: mask + count + revenue for `lo <= qty < hi`.
+    pub fn pushdown_scan(
+        &self,
+        qty: &[f32],
+        price: &[f32],
+        disc: &[f32],
+        lo: f32,
+        hi: f32,
+    ) -> Result<ScanOut> {
+        let n = self.rows();
+        anyhow::ensure!(
+            qty.len() == n && price.len() == n && disc.len() == n,
+            "pushdown_scan expects exactly {n} rows (pad the tail block)"
+        );
+        let args = [
+            xla::Literal::vec1(qty),
+            xla::Literal::vec1(price),
+            xla::Literal::vec1(disc),
+            xla::Literal::vec1(&[lo]),
+            xla::Literal::vec1(&[hi]),
+        ];
+        let result = self.pushdown.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "pushdown_scan returned {} outputs", parts.len());
+        let revenue = parts.pop().unwrap().to_vec::<f32>()?[0];
+        let count = parts.pop().unwrap().to_vec::<i32>()?[0];
+        let mask = parts.pop().unwrap().to_vec::<i32>()?;
+        Ok(ScanOut { mask, count, revenue })
+    }
+
+    /// Mask-free pushdown aggregate (§Perf): count + revenue only — no
+    /// int32[N] mask round-trip. Use when the pushdown returns aggregates
+    /// rather than qualifying tuples.
+    pub fn pushdown_agg(
+        &self,
+        qty: &[f32],
+        price: &[f32],
+        disc: &[f32],
+        lo: f32,
+        hi: f32,
+    ) -> Result<(i32, f32)> {
+        let n = self.rows();
+        anyhow::ensure!(
+            qty.len() == n && price.len() == n && disc.len() == n,
+            "pushdown_agg expects exactly {n} rows"
+        );
+        let args = [
+            xla::Literal::vec1(qty),
+            xla::Literal::vec1(price),
+            xla::Literal::vec1(disc),
+            xla::Literal::vec1(&[lo]),
+            xla::Literal::vec1(&[hi]),
+        ];
+        let result = self.pushdown_agg.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (count_l, rev_l) = result.to_tuple2()?;
+        Ok((count_l.to_vec::<i32>()?[0], rev_l.to_vec::<f32>()?[0]))
+    }
+
+    /// Execute the fused Q6 aggregate: revenue over one row-block.
+    /// `params = [qty_hi, disc_lo, disc_hi]`.
+    pub fn q6_agg(&self, qty: &[f32], price: &[f32], disc: &[f32], params: [f32; 3]) -> Result<f32> {
+        let n = self.rows();
+        anyhow::ensure!(qty.len() == n && price.len() == n && disc.len() == n);
+        let args = [
+            xla::Literal::vec1(qty),
+            xla::Literal::vec1(price),
+            xla::Literal::vec1(disc),
+            xla::Literal::vec1(&params),
+        ];
+        let result = self.q6.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?[0])
+    }
+
+    /// Execute the Q1 group-by over one row-block: keys in
+    /// [0, q1_groups), vals row-major [rows × q1_measures].
+    pub fn q1_groupby(&self, keys: &[i32], vals: &[f32]) -> Result<GroupbyOut> {
+        let n = self.rows();
+        let (g, k) = (self.manifest.q1_groups, self.manifest.q1_measures);
+        anyhow::ensure!(keys.len() == n && vals.len() == n * k);
+        let vals_lit = xla::Literal::vec1(vals).reshape(&[n as i64, k as i64])?;
+        let args = [xla::Literal::vec1(keys), vals_lit];
+        let result = self.q1.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (sums_l, counts_l) = result.to_tuple2()?;
+        Ok(GroupbyOut {
+            sums: sums_l.to_vec::<f32>()?,
+            counts: counts_l.to_vec::<f32>()?,
+            groups: g,
+            measures: k,
+        })
+    }
+}
+
+/// Pad a column slice to `rows` with `pad` (tail blocks of a table scan).
+pub fn pad_to<T: Copy>(data: &[T], rows: usize, pad: T) -> Vec<T> {
+    let mut v = Vec::with_capacity(rows);
+    v.extend_from_slice(data);
+    v.resize(rows, pad);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_extends_and_preserves() {
+        let p = pad_to(&[1.0f32, 2.0], 5, -1.0);
+        assert_eq!(p, vec![1.0, 2.0, -1.0, -1.0, -1.0]);
+        let q = pad_to(&[1, 2, 3], 3, 0);
+        assert_eq!(q, vec![1, 2, 3]);
+    }
+
+    // Runtime execution tests live in rust/tests/runtime_integration.rs —
+    // they need real artifacts from `make artifacts`.
+}

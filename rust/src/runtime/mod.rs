@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `make artifacts` and executes them on the
+//! benchmark hot path. Python never runs at benchmark time — the HLO text
+//! is the only hand-off.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::Manifest;
+pub use executor::{pad_to, GroupbyOut, Runtime, ScanOut};

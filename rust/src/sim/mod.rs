@@ -1,0 +1,8 @@
+//! Discrete-event simulation substrate: the virtual-time engine and the
+//! closed-loop service station the storage/network tasks are built on.
+
+pub mod engine;
+pub mod station;
+
+pub use engine::{Engine, SimTime};
+pub use station::{run_closed_loop, RunResult};

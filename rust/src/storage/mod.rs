@@ -1,0 +1,9 @@
+//! Storage substrate: device models (eMMC / NVMe) and an async-I/O-shaped
+//! workload driver. The paper's storage task (§3.4.3) is "an extensive
+//! storage testing toolkit" over io_uring/libaio; here the same parameter
+//! space (I/O type, access size, pattern, queue depth, threads) drives the
+//! simulated devices of `device::Device`.
+
+pub mod device;
+
+pub use device::Device;

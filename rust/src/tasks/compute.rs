@@ -1,0 +1,335 @@
+//! Built-in compute task (§3.4.1): single-core arithmetic over primitive
+//! types and string operations — Figs. 4 and 5.
+//!
+//! Two modes:
+//!  - `modeled` (default): the calibrated per-platform tables in
+//!    `platform::cpu` — machine-independent, reproduces the paper's
+//!    ratios exactly.
+//!  - `measured`: run *real* register-pressure instruction loops on the
+//!    build host (this is what the paper does on each device), report the
+//!    measured host rate, and scale DPU numbers by the calibrated ratios.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::platform::cpu::{self, ArithOp, DataType, StrOp};
+use crate::platform::PlatformId;
+
+pub struct ComputeTask;
+
+impl Task for ComputeTask {
+    fn name(&self) -> &'static str {
+        "compute"
+    }
+    fn description(&self) -> &'static str {
+        "single-core primitive arithmetic and string operations (Figs. 4-5)"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("data_type", "int8 | int128 | fp64 | str10 | str64 | str256 | str1024", "[\"int8\"]"),
+            ParamDef::new("operation", "add|sub|mul|div for numeric; cmp|cat|xfrm for strings", "[\"add\"]"),
+            ParamDef::new("mode", "modeled (calibrated tables) | measured (real loops, host-scaled)", "\"modeled\""),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["ops_per_sec"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        ctx.log("compute: no external preparation needed");
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let dt = test.str_or("data_type", "int8").to_string();
+        let op = test.str_or("operation", "add").to_string();
+        let mode = test.str_or("mode", "modeled").to_string();
+
+        let rate = if let Some(size) = parse_str_size(&dt) {
+            let sop = StrOp::from_name(&op)
+                .ok_or_else(|| anyhow::anyhow!("string op must be cmp/cat/xfrm, got '{op}'"))?;
+            match mode.as_str() {
+                "modeled" => cpu::string_ops_per_sec(ctx.platform, sop, size),
+                "measured" => {
+                    let host = measure_string(sop, size);
+                    scale_by_model(ctx.platform, host, |p| cpu::string_ops_per_sec(p, sop, size))
+                }
+                m => bail!("unknown mode '{m}'"),
+            }
+        } else {
+            let d = DataType::from_name(&dt)
+                .ok_or_else(|| anyhow::anyhow!("unknown data_type '{dt}'"))?;
+            let a = ArithOp::from_name(&op)
+                .ok_or_else(|| anyhow::anyhow!("unknown operation '{op}'"))?;
+            match mode.as_str() {
+                "modeled" => cpu::arith_ops_per_sec(ctx.platform, d, a),
+                "measured" => {
+                    let host = measure_arith(d, a);
+                    scale_by_model(ctx.platform, host, |p| cpu::arith_ops_per_sec(p, d, a))
+                }
+                m => bail!("unknown mode '{m}'"),
+            }
+        };
+        Ok(BTreeMap::from([("ops_per_sec".to_string(), rate)]))
+    }
+}
+
+/// `strN` → N.
+fn parse_str_size(dt: &str) -> Option<usize> {
+    dt.strip_prefix("str").and_then(|s| s.parse().ok())
+}
+
+/// Scale a measured host rate to `p` by the model's host:p ratio.
+fn scale_by_model(p: PlatformId, host_measured: f64, model: impl Fn(PlatformId) -> f64) -> f64 {
+    host_measured * model(p) / model(PlatformId::HostEpyc)
+}
+
+// ---------------------------------------------------------------------------
+// Real instruction loops (the measured mode's host-side ground truth).
+// Each loop keeps 4 independent dependency chains in registers, mirroring
+// the paper's "repeatedly performing the corresponding instructions over
+// registers, ruling out the effect of the CPU cache and main memory".
+// ---------------------------------------------------------------------------
+
+const MEASURE_ITERS: u64 = 4_000_000;
+
+macro_rules! arith_loop {
+    ($ty:ty, $meth:ident, $seed:expr) => {{
+        let mut a: $ty = $seed;
+        let mut b: $ty = $seed + 1;
+        let mut c: $ty = $seed + 2;
+        let mut d: $ty = $seed + 3;
+        let t0 = Instant::now();
+        for _ in 0..MEASURE_ITERS {
+            a = a.$meth(b);
+            b = b.$meth(c);
+            c = c.$meth(d);
+            d = d.$meth(a);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        crate::util::bench::black_box((a, b, c, d));
+        (MEASURE_ITERS * 4) as f64 / dt
+    }};
+}
+
+fn measure_arith(dt: DataType, op: ArithOp) -> f64 {
+    // division needs non-trivial operands to avoid div-by-zero / overflow
+    match (dt, op) {
+        (DataType::Int8, ArithOp::Add) => arith_loop!(i8, wrapping_add, 3),
+        (DataType::Int8, ArithOp::Sub) => arith_loop!(i8, wrapping_sub, 3),
+        (DataType::Int8, ArithOp::Mul) => arith_loop!(i8, wrapping_mul, 3),
+        (DataType::Int8, ArithOp::Div) => int_div_loop_i8(),
+        (DataType::Int128, ArithOp::Add) => arith_loop!(i128, wrapping_add, 3),
+        (DataType::Int128, ArithOp::Sub) => arith_loop!(i128, wrapping_sub, 3),
+        (DataType::Int128, ArithOp::Mul) => arith_loop!(i128, wrapping_mul, 3),
+        (DataType::Int128, ArithOp::Div) => int_div_loop_i128(),
+        (DataType::Fp64, ArithOp::Add) => fp_loop(ArithOp::Add),
+        (DataType::Fp64, ArithOp::Sub) => fp_loop(ArithOp::Sub),
+        (DataType::Fp64, ArithOp::Mul) => fp_loop(ArithOp::Mul),
+        (DataType::Fp64, ArithOp::Div) => fp_loop(ArithOp::Div),
+    }
+}
+
+// the macro's method-call form doesn't cover operators on primitives for
+// div (no wrapping_div chain without zero checks), so hand-rolled loops:
+fn int_div_loop_i8() -> f64 {
+    use crate::util::bench::black_box;
+    let (mut a, mut b): (i8, i8) = (127, 3);
+    let t0 = Instant::now();
+    for _ in 0..MEASURE_ITERS {
+        // black_box defeats LLVM's fixed-point constant-folding of the
+        // dependency chain (release builds otherwise delete the divides)
+        a = (black_box(a) | 65).wrapping_div(b | 1);
+        b = (black_box(b) | 33).wrapping_div(a | 1);
+        a = (black_box(a) | 91).wrapping_div(b | 1);
+        b = (black_box(b) | 17).wrapping_div(a | 1);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    black_box((a, b));
+    (MEASURE_ITERS * 4) as f64 / dt
+}
+
+fn int_div_loop_i128() -> f64 {
+    use crate::util::bench::black_box;
+    let (mut a, mut b): (i128, i128) = (i128::MAX / 3, 12345);
+    let t0 = Instant::now();
+    for _ in 0..MEASURE_ITERS {
+        a = (black_box(a) | 0x10001).wrapping_div(b | 1);
+        b = (black_box(b) | 0x333).wrapping_div(a | 1);
+        a = (black_box(a) | 0x912ff).wrapping_div(b | 1);
+        b = (black_box(b) | 0x17).wrapping_div(a | 1);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    black_box((a, b));
+    (MEASURE_ITERS * 4) as f64 / dt
+}
+
+fn fp_loop(op: ArithOp) -> f64 {
+    let (mut a, mut b, mut c, mut d) = (1.000001f64, 1.000002f64, 1.000003f64, 1.000004f64);
+    let t0 = Instant::now();
+    for _ in 0..MEASURE_ITERS {
+        match op {
+            ArithOp::Add => {
+                a += b;
+                b += c;
+                c += d;
+                d += a;
+                // keep magnitudes bounded without branching every step
+                if d > 1e300 {
+                    a = 1.1;
+                    b = 1.2;
+                    c = 1.3;
+                    d = 1.4;
+                }
+            }
+            ArithOp::Sub => {
+                a -= b;
+                b -= c;
+                c -= d;
+                d -= a;
+                if d < -1e300 {
+                    a = 1.1;
+                    b = 1.2;
+                    c = 1.3;
+                    d = 1.4;
+                }
+            }
+            ArithOp::Mul => {
+                a *= b;
+                b *= c;
+                c *= d;
+                d *= a;
+                if d > 1e300 || d < 1e-300 {
+                    a = 1.000001;
+                    b = 1.000002;
+                    c = 1.000003;
+                    d = 1.000004;
+                }
+            }
+            ArithOp::Div => {
+                a /= b;
+                b /= c;
+                c /= d;
+                d /= a;
+                if d > 1e300 || d < 1e-300 {
+                    a = 1.000001;
+                    b = 1.000002;
+                    c = 1.000003;
+                    d = 1.000004;
+                }
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    crate::util::bench::black_box((a, b, c, d));
+    (MEASURE_ITERS * 4) as f64 / dt
+}
+
+fn measure_string(op: StrOp, size: usize) -> f64 {
+    let a: String = "abcdefgh".chars().cycle().take(size).collect();
+    let mut b = a.clone();
+    // differ at the last byte so cmp scans the whole string
+    unsafe {
+        b.as_bytes_mut()[size - 1] = b'z';
+    }
+    let iters = (200_000_000 / size.max(1)).clamp(10_000, 4_000_000) as u64;
+    let t0 = Instant::now();
+    let mut sink = 0usize;
+    for i in 0..iters {
+        match op {
+            StrOp::Cmp => {
+                sink += (a.as_bytes() == b.as_bytes()) as usize;
+            }
+            StrOp::Cat => {
+                let mut s = String::with_capacity(2 * size);
+                s.push_str(&a);
+                s.push_str(&b);
+                sink += s.len();
+            }
+            StrOp::Xfrm => {
+                // locale-transform stand-in: case-fold + checksum
+                sink += a
+                    .bytes()
+                    .map(|ch| ch.to_ascii_uppercase() as usize)
+                    .sum::<usize>()
+                    .wrapping_add(i as usize);
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    crate::util::bench::black_box(sink);
+    iters as f64 / dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn spec(pairs: &[(&str, &str)]) -> TestSpec {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::str(*v)))
+            .collect()
+    }
+
+    #[test]
+    fn modeled_matches_cpu_tables() {
+        let t = ComputeTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf3, 1);
+        t.prepare(&mut ctx).unwrap();
+        let r = t
+            .run(&mut ctx, &spec(&[("data_type", "fp64"), ("operation", "mul")]))
+            .unwrap();
+        assert_eq!(
+            r["ops_per_sec"],
+            cpu::arith_ops_per_sec(PlatformId::Bf3, DataType::Fp64, ArithOp::Mul)
+        );
+    }
+
+    #[test]
+    fn string_sizes_parse() {
+        let t = ComputeTask;
+        let mut ctx = TaskContext::new(PlatformId::HostEpyc, 1);
+        let r = t
+            .run(&mut ctx, &spec(&[("data_type", "str64"), ("operation", "cmp")]))
+            .unwrap();
+        assert_eq!(
+            r["ops_per_sec"],
+            cpu::string_ops_per_sec(PlatformId::HostEpyc, StrOp::Cmp, 64)
+        );
+    }
+
+    #[test]
+    fn rejects_nonsense() {
+        let t = ComputeTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        assert!(t.run(&mut ctx, &spec(&[("data_type", "int7")])).is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("data_type", "int8"), ("operation", "mod")]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("data_type", "str10"), ("operation", "add")]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("data_type", "int8"), ("mode", "psychic")]))
+            .is_err());
+    }
+
+    #[test]
+    fn measured_mode_runs_real_loops() {
+        // cheap smoke: int8 add on the host must measure something positive
+        // and divisions must be slower than additions.
+        let add = measure_arith(DataType::Int8, ArithOp::Add);
+        let div = measure_arith(DataType::Int8, ArithOp::Div);
+        assert!(add > 1e8, "{add}");
+        assert!(div < add, "div {div} !< add {add}");
+    }
+
+    #[test]
+    fn measured_string_ops_positive() {
+        let cmp = measure_string(StrOp::Cmp, 64);
+        assert!(cmp > 1e5, "{cmp}");
+    }
+}

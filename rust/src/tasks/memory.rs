@@ -1,0 +1,195 @@
+//! Built-in memory task (§3.4.2): pointer-size accesses to an in-memory
+//! buffer, random/sequential × read/write × object size × threads —
+//! Figs. 7 and 8. The paper drives sysbench; here the modeled mode prices
+//! the calibrated hierarchy model and the measured mode runs a real
+//! sysbench-shaped access loop on the build host.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::platform::memory::{self, AccessOp, Pattern};
+use crate::platform::PlatformId;
+use crate::util::rng::Pcg;
+
+pub struct MemoryTask;
+
+impl Task for MemoryTask {
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+    fn description(&self) -> &'static str {
+        "in-memory object access throughput/bandwidth (Figs. 7-8)"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("operation", "read | write", "[\"read\"]"),
+            ParamDef::new("object_size", "buffer bytes (16 KB / 4 MB / 1 GB in the paper)", "[16384]"),
+            ParamDef::new("pattern", "random | sequential", "[\"random\"]"),
+            ParamDef::new("threads", "parallel accessor threads", "[1, 4]"),
+            ParamDef::new("mode", "modeled | measured (real loop, host only)", "\"modeled\""),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["throughput_ops", "bandwidth_gbps"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        ctx.log("memory: buffers are allocated per measured test");
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let op = AccessOp::from_name(test.str_or("operation", "read"))
+            .ok_or_else(|| anyhow::anyhow!("operation must be read|write"))?;
+        let pat = Pattern::from_name(test.str_or("pattern", "random"))
+            .ok_or_else(|| anyhow::anyhow!("pattern must be random|sequential"))?;
+        let size = test.usize_or("object_size", 16 * 1024) as u64;
+        let threads = test.usize_or("threads", 1) as u32;
+        if size < 8 {
+            bail!("object_size must hold at least one pointer");
+        }
+
+        let ops = match test.str_or("mode", "modeled") {
+            "modeled" => memory::ops_per_sec(ctx.platform, op, pat, size, threads),
+            "measured" => {
+                let host = measure_host(op, pat, size as usize, ctx.seed);
+                // scale to the target platform via the model's ratio, then
+                // apply the modeled thread scaling law
+                let scale = memory::ops_per_sec(ctx.platform, op, pat, size, threads)
+                    / memory::ops_per_sec(PlatformId::HostEpyc, op, pat, size, 1);
+                host * scale
+            }
+            m => bail!("unknown mode '{m}'"),
+        };
+        Ok(BTreeMap::from([
+            ("throughput_ops".to_string(), ops),
+            ("bandwidth_gbps".to_string(), ops * 8.0 / 1e9),
+        ]))
+    }
+}
+
+/// Real single-thread access loop over a `size`-byte buffer (host ground
+/// truth for measured mode). Random mode chases a pre-shuffled index ring
+/// (defeating the prefetcher like sysbench's rnd mode); sequential strides
+/// through the buffer.
+pub fn measure_host(op: AccessOp, pat: Pattern, size: usize, seed: u64) -> f64 {
+    let words = (size / 8).max(16);
+    let mut buf: Vec<u64> = vec![0; words];
+    let total_ops: usize = 4_000_000;
+    match pat {
+        Pattern::Random => {
+            // permutation cycle for pointer chasing
+            let mut idx: Vec<u32> = (0..words as u32).collect();
+            Pcg::new(seed).shuffle(&mut idx);
+            for i in 0..words {
+                buf[i] = idx[i] as u64;
+            }
+            let t0 = std::time::Instant::now();
+            let mut pos = 0u64;
+            match op {
+                AccessOp::Read => {
+                    for _ in 0..total_ops {
+                        pos = buf[pos as usize];
+                    }
+                }
+                AccessOp::Write => {
+                    let mut wpos = 0usize;
+                    for i in 0..total_ops {
+                        let next = buf[wpos] as usize;
+                        buf[wpos] = (next as u64).wrapping_add(i as u64 & 1);
+                        // keep the ring intact: restore parity on next pass
+                        buf[wpos] = next as u64;
+                        wpos = next;
+                    }
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            crate::util::bench::black_box(pos);
+            total_ops as f64 / dt
+        }
+        Pattern::Sequential => {
+            let t0 = std::time::Instant::now();
+            let mut acc = 0u64;
+            let mut done = 0usize;
+            while done < total_ops {
+                let n = words.min(total_ops - done);
+                match op {
+                    AccessOp::Read => {
+                        for w in &buf[..n] {
+                            acc = acc.wrapping_add(*w);
+                        }
+                    }
+                    AccessOp::Write => {
+                        for w in &mut buf[..n] {
+                            *w = acc;
+                        }
+                    }
+                }
+                done += n;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            crate::util::bench::black_box((acc, buf[0]));
+            total_ops as f64 / dt
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn spec(pairs: &[(&str, Value)]) -> TestSpec {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn modeled_matches_memory_model() {
+        let t = MemoryTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        let r = t
+            .run(
+                &mut ctx,
+                &spec(&[
+                    ("operation", Value::str("read")),
+                    ("pattern", Value::str("random")),
+                    ("object_size", Value::Num(16384.0)),
+                    ("threads", Value::Num(4.0)),
+                ]),
+            )
+            .unwrap();
+        assert_eq!(
+            r["throughput_ops"],
+            memory::ops_per_sec(PlatformId::Bf2, AccessOp::Read, Pattern::Random, 16384, 4)
+        );
+        assert!((r["bandwidth_gbps"] - r["throughput_ops"] * 8.0 / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let t = MemoryTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        assert!(t
+            .run(&mut ctx, &spec(&[("operation", Value::str("erase"))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("pattern", Value::str("spiral"))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("object_size", Value::Num(4.0))]))
+            .is_err());
+    }
+
+    #[test]
+    fn measured_loop_produces_sane_rates() {
+        // small buffer: cache-resident reads should be far above 10 Mops/s
+        let rate = measure_host(AccessOp::Read, Pattern::Random, 16 * 1024, 1);
+        assert!(rate > 1e7, "{rate}");
+        let seq = measure_host(AccessOp::Read, Pattern::Sequential, 16 * 1024, 1);
+        assert!(seq > rate / 2.0, "seq {seq} vs rand {rate}");
+        let w = measure_host(AccessOp::Write, Pattern::Sequential, 16 * 1024, 1);
+        assert!(w > 1e7, "{w}");
+        let rw = measure_host(AccessOp::Write, Pattern::Random, 16 * 1024, 1);
+        assert!(rw > 1e6, "{rw}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Built-in dpBento tasks (Table 1): four microbenchmarks, two cloud
+//! database modules, and the full-DBMS task.
+
+pub mod compute;
+pub mod dbms;
+pub mod index_offload;
+pub mod memory;
+pub mod network;
+pub mod pred_pushdown;
+pub mod storage;

@@ -1,0 +1,130 @@
+//! Built-in network task (§3.4.4): TCP ping-pong latency and streaming
+//! throughput between a remote server and the measured endpoint —
+//! Fig. 11. Modeled mode prices the calibrated TCP path; measured mode
+//! runs the real loopback echo driver on the build host.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::net::{loopback, tcp};
+use crate::util::stats::Summary;
+
+pub struct NetworkTask;
+
+/// Simulated ping-pongs per latency test.
+const LAT_SAMPLES: usize = 3000;
+/// Real loopback ping-pongs in measured mode (kept modest: real I/O).
+const MEASURED_SAMPLES: usize = 300;
+
+impl Task for NetworkTask {
+    fn name(&self) -> &'static str {
+        "network"
+    }
+    fn description(&self) -> &'static str {
+        "TCP latency and throughput, remote server <-> endpoint (Fig. 11)"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("message_size", "bytes per message (32 B - 32 KB in the paper)", "[1024]"),
+            ParamDef::new("depth", "outstanding messages per connection (1-128)", "[128]"),
+            ParamDef::new("threads", "connections (one thread each)", "[1, 4]"),
+            ParamDef::new("mode", "modeled | measured (real loopback TCP, host only)", "\"modeled\""),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["mean_lat_us", "median_lat_us", "p99_lat_us", "throughput_gbps"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        ctx.log(format!(
+            "network: endpoint {} over a {} Gbps link",
+            ctx.platform,
+            tcp::LINK_GBPS
+        ));
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let msg = test.usize_or("message_size", 1024);
+        let depth = test.usize_or("depth", 128) as u32;
+        let threads = test.usize_or("threads", 1) as u32;
+        anyhow::ensure!((1..=16 * 1024 * 1024).contains(&msg), "message_size out of range");
+
+        let (lat, gbps) = match test.str_or("mode", "modeled") {
+            "modeled" => {
+                let lat = tcp::latency_summary(ctx.platform, msg, LAT_SAMPLES, ctx.seed);
+                let gbps = tcp::throughput_gbps(ctx.platform, msg, threads, depth);
+                (lat, gbps)
+            }
+            "measured" => {
+                if ctx.platform.is_dpu() {
+                    bail!("measured mode runs on the build host only (no DPU hardware)");
+                }
+                let rtts = loopback::measure_loopback_rtt_us(msg, MEASURED_SAMPLES)?;
+                let lat = Summary::from_samples(&rtts);
+                // streaming rate implied by the measured RTT pipeline
+                let gbps = (msg as f64 * 8.0 / 1e3) / lat.p50 * depth.min(16) as f64;
+                (lat, gbps.min(tcp::LINK_GBPS))
+            }
+            m => bail!("unknown mode '{m}'"),
+        };
+
+        Ok(BTreeMap::from([
+            ("mean_lat_us".to_string(), lat.mean),
+            ("median_lat_us".to_string(), lat.p50),
+            ("p99_lat_us".to_string(), lat.p99),
+            ("throughput_gbps".to_string(), gbps),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+    use crate::util::json::Value;
+
+    fn spec(pairs: &[(&str, Value)]) -> TestSpec {
+        pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+    }
+
+    #[test]
+    fn modeled_dpu_slower_than_host() {
+        let t = NetworkTask;
+        let s = spec(&[
+            ("message_size", Value::Num(1024.0)),
+            ("threads", Value::Num(1.0)),
+        ]);
+        let mut dpu_ctx = TaskContext::new(PlatformId::Bf2, 1);
+        let mut host_ctx = TaskContext::new(PlatformId::HostEpyc, 1);
+        let dpu = t.run(&mut dpu_ctx, &s).unwrap();
+        let host = t.run(&mut host_ctx, &s).unwrap();
+        assert!(dpu["mean_lat_us"] > host["mean_lat_us"]);
+        assert!(dpu["throughput_gbps"] < host["throughput_gbps"]);
+        assert!(dpu["p99_lat_us"] > dpu["median_lat_us"]);
+    }
+
+    #[test]
+    fn measured_mode_host_only() {
+        let t = NetworkTask;
+        let s = spec(&[
+            ("message_size", Value::Num(256.0)),
+            ("mode", Value::str("measured")),
+        ]);
+        let mut dpu_ctx = TaskContext::new(PlatformId::Bf3, 1);
+        assert!(t.run(&mut dpu_ctx, &s).is_err());
+        let mut host_ctx = TaskContext::new(PlatformId::HostEpyc, 1);
+        let r = t.run(&mut host_ctx, &s).unwrap();
+        assert!(r["median_lat_us"] > 0.0);
+        assert!(r["throughput_gbps"] > 0.0);
+    }
+
+    #[test]
+    fn message_size_bounds() {
+        let t = NetworkTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        assert!(t
+            .run(&mut ctx, &spec(&[("message_size", Value::Num(0.0))]))
+            .is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Built-in storage task (§3.4.3): asynchronous disk I/O against the
+//! platform's local device — Figs. 9 and 10. The paper's toolkit issues
+//! io_uring/libaio file I/O; here the same parameter space drives the
+//! calibrated device models through the closed-loop discrete-event
+//! station, producing throughput and the full latency distribution.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::platform::memory::{AccessOp, Pattern};
+use crate::storage::Device;
+
+pub struct StorageTask;
+
+/// Simulated I/Os per latency test (enough for a stable p99).
+const SIM_OPS: usize = 4000;
+
+impl Task for StorageTask {
+    fn name(&self) -> &'static str {
+        "storage"
+    }
+    fn description(&self) -> &'static str {
+        "local-device async I/O throughput and latency (Figs. 9-10)"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new("io_type", "read | write", "[\"read\"]"),
+            ParamDef::new("access_size", "bytes per I/O (8 KB - 4 MB in the paper)", "[8192]"),
+            ParamDef::new("pattern", "random | sequential", "[\"random\"]"),
+            ParamDef::new("depth", "outstanding requests per thread (1-256)", "[1, 32]"),
+            ParamDef::new("threads", "I/O-issuing threads", "[1]"),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec!["throughput_mbps", "avg_lat_us", "p50_lat_us", "p99_lat_us", "iops"]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        // the paper initializes a test file with random content; the
+        // simulated device needs only its parameters
+        let dev = Device::for_platform(ctx.platform);
+        ctx.log(format!(
+            "storage: device {:?} channels={} on {}",
+            dev.kind, dev.channels, ctx.platform
+        ));
+        ctx.put("device", dev);
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let op = AccessOp::from_name(test.str_or("io_type", "read"))
+            .ok_or_else(|| anyhow::anyhow!("io_type must be read|write"))?;
+        let pat = Pattern::from_name(test.str_or("pattern", "random"))
+            .ok_or_else(|| anyhow::anyhow!("pattern must be random|sequential"))?;
+        let size = test.usize_or("access_size", 8192);
+        let depth = test.usize_or("depth", 1) as u32;
+        let threads = test.usize_or("threads", 1) as u32;
+        anyhow::ensure!(size >= 512, "access_size below one sector");
+        anyhow::ensure!(depth >= 1 && depth <= 1024, "depth out of range");
+
+        let dev: &Device = ctx.get("device");
+        let bw = dev.throughput_mbps(op, pat, size, depth, threads);
+        let run = dev.simulate(op, pat, size, depth, threads, SIM_OPS, ctx.seed);
+        let lat = run.latency_summary_us();
+        Ok(BTreeMap::from([
+            ("throughput_mbps".to_string(), bw),
+            ("avg_lat_us".to_string(), lat.mean),
+            ("p50_lat_us".to_string(), lat.p50),
+            ("p99_lat_us".to_string(), lat.p99),
+            ("iops".to_string(), bw * 1e6 / size as f64),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+    use crate::util::json::Value;
+
+    fn run_one(p: PlatformId, pairs: &[(&str, Value)]) -> TestResult {
+        let t = StorageTask;
+        let mut ctx = TaskContext::new(p, 7);
+        t.prepare(&mut ctx).unwrap();
+        let spec: TestSpec = pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        t.run(&mut ctx, &spec).unwrap()
+    }
+
+    #[test]
+    fn throughput_and_latency_consistent() {
+        let r = run_one(
+            PlatformId::Bf3,
+            &[
+                ("io_type", Value::str("read")),
+                ("access_size", Value::Num(8192.0)),
+                ("depth", Value::Num(1.0)),
+            ],
+        );
+        assert!(r["throughput_mbps"] > 0.0);
+        assert!(r["p99_lat_us"] >= r["avg_lat_us"] * 0.9);
+        assert!((r["iops"] - r["throughput_mbps"] * 1e6 / 8192.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn emmc_vs_nvme_tiers_visible_through_task() {
+        let args = [
+            ("io_type", Value::str("read")),
+            ("access_size", Value::Num(4194304.0)),
+            ("pattern", Value::str("sequential")),
+            ("depth", Value::Num(32.0)),
+            ("threads", Value::Num(4.0)),
+        ];
+        let host = run_one(PlatformId::HostEpyc, &args)["throughput_mbps"];
+        let bf3 = run_one(PlatformId::Bf3, &args)["throughput_mbps"];
+        let bf2 = run_one(PlatformId::Bf2, &args)["throughput_mbps"];
+        assert!(host > bf3 && bf3 > bf2);
+        assert!(host / bf2 > 20.0); // orders-of-magnitude eMMC gap
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let t = StorageTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        t.prepare(&mut ctx).unwrap();
+        let bad: TestSpec =
+            [("access_size".to_string(), Value::Num(16.0))].into_iter().collect();
+        assert!(t.run(&mut ctx, &bad).is_err());
+    }
+}

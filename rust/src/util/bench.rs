@@ -1,0 +1,193 @@
+//! Tiny benchmark harness (criterion is unavailable offline — DESIGN.md §8).
+//!
+//! Each `benches/figXX_*.rs` target uses `harness = false` and drives this
+//! module: warmup, repeated timed runs, [`Summary`] statistics, aligned
+//! table printing (the paper's "report" step), and CSV output under
+//! `target/bench-results/` so EXPERIMENTS.md numbers are regenerable.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs; returns
+/// per-iteration seconds samples.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Compiler fence: keep a computed value alive without optimizing it out.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+/// A result table being accumulated by a bench binary: one named series of
+/// (row-label, value) pairs per column, printed paper-style and dumped to CSV.
+pub struct BenchTable {
+    title: String,
+    unit: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<Option<f64>>)>,
+}
+
+impl BenchTable {
+    pub fn new(title: impl Into<String>, unit: impl Into<String>) -> Self {
+        BenchTable {
+            title: title.into(),
+            unit: unit.into(),
+            columns: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn columns(mut self, cols: &[&str]) -> Self {
+        self.columns = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Add one row. `values.len()` must equal the column count.
+    pub fn row(&mut self, label: impl Into<String>, values: Vec<Option<f64>>) {
+        assert_eq!(values.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push((label.into(), values));
+    }
+
+    pub fn row_f(&mut self, label: impl Into<String>, values: &[f64]) {
+        self.row(label, values.iter().map(|v| Some(*v)).collect());
+    }
+
+    /// Render an aligned ASCII table (the bench's stdout report).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} [{}] ==\n", self.title, self.unit));
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([8])
+            .max()
+            .unwrap();
+        let col_w = 14usize;
+        out.push_str(&format!("{:label_w$}", ""));
+        for c in &self.columns {
+            out.push_str(&format!(" {c:>col_w$}"));
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("{label:label_w$}"));
+            for v in vals {
+                match v {
+                    Some(x) => out.push_str(&format!(" {:>col_w$}", fmt_sig(*x))),
+                    None => out.push_str(&format!(" {:>col_w$}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `target/bench-results/<name>.csv` (label,col1,col2,...).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<PathBuf> {
+        let dir = PathBuf::from(
+            std::env::var("CARGO_TARGET_DIR").unwrap_or_else(|_| "target".into()),
+        )
+        .join("bench-results");
+        fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = fs::File::create(&path)?;
+        writeln!(f, "label,{}", self.columns.join(","))?;
+        for (label, vals) in &self.rows {
+            let cells: Vec<String> = vals
+                .iter()
+                .map(|v| v.map(|x| format!("{x}")).unwrap_or_default())
+                .collect();
+            writeln!(f, "{label},{}", cells.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Print to stdout and persist CSV; the standard tail of a bench main().
+    pub fn finish(&self, csv_name: &str) {
+        print!("{}", self.render());
+        match self.write_csv(csv_name) {
+            Ok(p) => println!("   -> {}", p.display()),
+            Err(e) => eprintln!("   csv write failed: {e}"),
+        }
+    }
+}
+
+/// 4-significant-digit human formatting (matches paper-style axis labels).
+pub fn fmt_sig(x: f64) -> String {
+    if x == 0.0 {
+        return "0".into();
+    }
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.3}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.3}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.3}k", x / 1e3)
+    } else if ax >= 1.0 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.5}")
+    }
+}
+
+/// Convenience: summarize timed samples of a closure.
+pub fn bench_summary<F: FnMut()>(warmup: usize, iters: usize, f: F) -> Summary {
+    Summary::from_samples(&time_iters(warmup, iters, f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_iters_counts() {
+        let mut n = 0u64;
+        let samples = time_iters(2, 5, || n += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(n, 7);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = BenchTable::new("Fig. X", "ops/s").columns(&["host", "bf3"]);
+        t.row_f("int8 add", &[6.5e9, 1.2e9]);
+        t.row("int8 div", vec![Some(1.0e9), None]);
+        let r = t.render();
+        assert!(r.contains("Fig. X"));
+        assert!(r.contains("6.500G"));
+        assert!(r.contains("-"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = BenchTable::new("t", "u").columns(&["a", "b"]);
+        t.row_f("r", &[1.0]);
+    }
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0), "0");
+        assert_eq!(fmt_sig(1234.0), "1.234k");
+        assert_eq!(fmt_sig(2.5e9), "2.500G");
+        assert_eq!(fmt_sig(0.0125), "0.01250");
+    }
+}

@@ -1,0 +1,37 @@
+//! Infrastructure the offline environment forces us to own: JSON, stats,
+//! deterministic RNG, property testing, and a bench harness (DESIGN.md §8).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count human-readably (storage/network reports).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if v.fract() == 0.0 {
+        format!("{}{}", v as u64, UNITS[u])
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(16 * 1024), "16KB");
+        assert_eq!(fmt_bytes(4 * 1024 * 1024), "4MB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024 / 2), "1.5GB");
+    }
+}

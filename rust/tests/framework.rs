@@ -1,0 +1,178 @@
+//! Integration tests: the dpBento framework end to end — box parsing →
+//! cross-product → execution over the real built-in tasks → reporting.
+//! (Table 1 coverage + the paper's Fig. 2/3 workflow.)
+
+use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
+use dpbento::platform::PlatformId;
+
+fn registry() -> Registry {
+    Registry::builtin()
+}
+
+#[test]
+fn table1_tasks_all_present_with_paper_parameters() {
+    let r = registry();
+    // Table 1 rows → (task, must-have parameters)
+    let expect = [
+        ("compute", vec!["data_type", "operation"]),
+        ("memory", vec!["operation", "object_size", "pattern", "threads"]),
+        ("storage", vec!["io_type", "access_size", "pattern", "depth", "threads"]),
+        ("network", vec!["message_size", "depth", "threads"]),
+        ("pred_pushdown", vec!["scale", "selectivity", "threads"]),
+        (
+            "index_offload",
+            vec!["record_count", "operation", "pattern", "split_ratio", "threads"],
+        ),
+        ("dbms", vec!["scale", "query", "mode", "threads"]),
+    ];
+    for (name, params) in expect {
+        let task = r.get(name).unwrap();
+        let have: Vec<&str> = task.params().iter().map(|p| p.name).collect();
+        for p in params {
+            assert!(have.contains(&p), "{name} missing param {p} (has {have:?})");
+        }
+    }
+}
+
+#[test]
+fn fig2_box_runs_end_to_end() {
+    let cfg = BoxConfig::fig2_example();
+    let report = run_box(&registry(), &cfg, &ExecOptions::default()).unwrap();
+    assert_eq!(report.failure_count(), 0, "{}", report.render());
+    // network: 3 thread counts; pushdown: 1 test
+    let net = &report.tasks[0];
+    assert_eq!(net.task, "network");
+    assert_eq!(net.records.len(), 3);
+    for rec in &net.records {
+        assert!(rec.result.contains_key("median_lat_us"));
+        assert!(rec.result.contains_key("throughput_gbps"));
+        // metric filtering removed unrequested metrics
+        assert!(!rec.result.contains_key("mean_lat_us"));
+    }
+    let pd = &report.tasks[1];
+    assert_eq!(pd.task, "pred_pushdown");
+    assert_eq!(pd.records.len(), 1);
+    assert!(pd.records[0].result["tuples_per_sec"] > 0.0);
+}
+
+#[test]
+fn every_builtin_task_runs_with_defaults_on_every_platform() {
+    // empty params → one test with task defaults; a broad smoke matrix
+    let r = registry();
+    for platform in PlatformId::ALL {
+        for task in [
+            "compute",
+            "memory",
+            "storage",
+            "network",
+            "pred_pushdown",
+            "index_offload",
+            "dbms",
+            "rdma",
+        ] {
+            let cfg = BoxConfig::parse(&format!(
+                r#"{{"name":"smoke","platforms":["{}"],
+                    "tasks":[{{"task":"{task}",
+                               "params": {}}}]}}"#,
+                platform.name(),
+                // keep the heavy tasks small
+                match task {
+                    "pred_pushdown" => r#"{"scale": [0.1], "engine": ["native"]}"#,
+                    "dbms" => r#"{"scale": [0.5], "query": ["q6"]}"#,
+                    "index_offload" => r#"{"record_count": [200000]}"#,
+                    _ => "{}",
+                }
+            ))
+            .unwrap();
+            let report = run_box(&r, &cfg, &ExecOptions::default()).unwrap();
+            assert_eq!(
+                report.failure_count(),
+                0,
+                "{task} on {platform}: {}",
+                report.render()
+            );
+        }
+    }
+}
+
+#[test]
+fn plugins_skip_on_unsupported_platforms_within_a_box() {
+    // the compression plugin's accel variant errors on platforms without
+    // the engine — recorded as a per-test failure, not a box failure
+    let cfg = BoxConfig::parse(
+        r#"{"name":"accel","platforms":["bf2","bf3","octeon","host"],
+            "tasks":[{"task":"compression",
+                      "params":{"size":[1048576],"variant":["accel"]},
+                      "metrics":["throughput_mbps"]}]}"#,
+    )
+    .unwrap();
+    let report = run_box(&registry(), &cfg, &ExecOptions::default()).unwrap();
+    let by_platform: Vec<(PlatformId, usize, usize)> = report
+        .tasks
+        .iter()
+        .map(|t| (t.platform, t.records.len(), t.failures.len()))
+        .collect();
+    // only BF-2 has the compression engine (§4)
+    assert_eq!(by_platform[0], (PlatformId::Bf2, 1, 0));
+    assert_eq!(by_platform[1].0, PlatformId::Bf3);
+    assert_eq!(by_platform[1].1, 0); // no record on BF-3...
+    assert_eq!(by_platform[1].2, 1); // ... a recorded failure instead
+    assert_eq!(by_platform[3], (PlatformId::HostEpyc, 0, 1));
+}
+
+#[test]
+fn cross_product_counts_through_the_whole_stack() {
+    let cfg = BoxConfig::parse(
+        r#"{"name":"xp","tasks":[{"task":"memory",
+            "params":{"operation":["read","write"],
+                      "pattern":["random","sequential"],
+                      "object_size":[16384, 4194304],
+                      "threads":[1, 4]}}]}"#,
+    )
+    .unwrap();
+    let report = run_box(&registry(), &cfg, &ExecOptions::default()).unwrap();
+    assert_eq!(report.tasks[0].records.len(), 16); // 2×2×2×2
+}
+
+#[test]
+fn report_json_round_trips() {
+    let cfg = BoxConfig::parse(
+        r#"{"name":"json_rt","tasks":[{"task":"compute",
+            "params":{"data_type":["int8"],"operation":["add","div"]}}]}"#,
+    )
+    .unwrap();
+    let report = run_box(&registry(), &cfg, &ExecOptions::default()).unwrap();
+    let json = report.to_json().to_pretty();
+    let parsed = dpbento::util::json::parse(&json).unwrap();
+    assert_eq!(parsed.get("box").unwrap().as_str().unwrap(), "json_rt");
+    let dir = std::env::temp_dir().join("dpbento_it_report");
+    let _ = std::fs::remove_dir_all(&dir);
+    report.write_to(&dir).unwrap();
+    assert!(dir.join("json_rt.json").exists());
+    assert!(dir.join("json_rt.txt").exists());
+}
+
+#[test]
+fn dbms_task_reproduces_cold_hot_flip_through_framework() {
+    let cfg = BoxConfig::parse(
+        r#"{"name":"flip","platforms":["bf2","octeon"],
+            "tasks":[{"task":"dbms",
+                      "params":{"scale":[10],"mode":["cold","hot"],"query":["all"]},
+                      "metrics":["seconds"]}]}"#,
+    )
+    .unwrap();
+    let report = run_box(&registry(), &cfg, &ExecOptions::default()).unwrap();
+    let get = |platform: &str, mode: &str| -> f64 {
+        report
+            .tasks
+            .iter()
+            .filter(|t| t.platform.name() == platform)
+            .flat_map(|t| &t.records)
+            .find(|r| r.spec["mode"].as_str() == Some(mode))
+            .unwrap()
+            .result["seconds"]
+    };
+    // Fig. 15: BF-2 faster cold (eMMC seq reads), OCTEON faster hot (cores)
+    assert!(get("bf2", "cold") < get("octeon", "cold"));
+    assert!(get("octeon", "hot") < get("bf2", "hot"));
+}

@@ -1,0 +1,208 @@
+//! Integration tests for the PJRT runtime: load the real AOT artifacts
+//! (requires `make artifacts`) and cross-check every kernel against the
+//! native Rust oracle on randomized inputs — the rust-side mirror of
+//! python/tests/test_kernels.py.
+//!
+//! If artifacts/ is absent the tests are skipped with a note (CI runs
+//! `make artifacts` first; `make test` guarantees it).
+
+use dpbento::db::exec;
+use dpbento::runtime::{artifact, pad_to, Runtime};
+use dpbento::util::rng::Pcg;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load(artifact::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e:#}");
+            None
+        }
+    }
+}
+
+fn columns(rng: &mut Pcg, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let qty: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 100.0) as f32).collect();
+    let price: Vec<f32> = (0..n).map(|_| rng.range_f64(1.0, 1000.0) as f32).collect();
+    let disc: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 0.1) as f32).collect();
+    (qty, price, disc)
+}
+
+#[test]
+fn pushdown_scan_matches_native_oracle_randomized() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    for seed in [1u64, 2, 3, 4, 5] {
+        let mut rng = Pcg::new(seed);
+        let (qty, price, disc) = columns(&mut rng, n);
+        let lo = rng.range_f64(0.0, 60.0) as f32;
+        let hi = lo + rng.range_f64(0.1, 40.0) as f32;
+
+        let out = rt.pushdown_scan(&qty, &price, &disc, lo, hi).unwrap();
+        let (mask, _) = exec::filter_range_f32(&qty, lo, hi);
+        let (revenue, _) = exec::sum_product_masked(&price, &disc, &mask);
+
+        assert_eq!(out.count as u64, exec::mask_count(&mask), "seed {seed}");
+        assert_eq!(out.mask.len(), n);
+        for i in 0..n {
+            assert_eq!(out.mask[i] == 1, mask[i], "seed {seed} row {i}");
+        }
+        let rel = (out.revenue as f64 - revenue).abs() / revenue.abs().max(1.0);
+        assert!(rel < 1e-4, "seed {seed}: revenue rel err {rel}");
+    }
+}
+
+#[test]
+fn pushdown_scan_edge_selectivities() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    let mut rng = Pcg::new(9);
+    let (qty, price, disc) = columns(&mut rng, n);
+    // empty predicate
+    let empty = rt.pushdown_scan(&qty, &price, &disc, 50.0, 50.0).unwrap();
+    assert_eq!(empty.count, 0);
+    assert_eq!(empty.revenue, 0.0);
+    assert!(empty.mask.iter().all(|&m| m == 0));
+    // full predicate
+    let full = rt.pushdown_scan(&qty, &price, &disc, -1.0, 101.0).unwrap();
+    assert_eq!(full.count as usize, n);
+    assert!(full.mask.iter().all(|&m| m == 1));
+}
+
+#[test]
+fn q6_agg_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    for seed in [11u64, 12, 13] {
+        let mut rng = Pcg::new(seed);
+        let (qty, price, disc) = columns(&mut rng, n);
+        let params = [
+            rng.range_f64(1.0, 99.0) as f32,
+            0.02,
+            0.08,
+        ];
+        let got = rt.q6_agg(&qty, &price, &disc, params).unwrap() as f64;
+        let mut want = 0.0f64;
+        for i in 0..n {
+            if qty[i] < params[0] && disc[i] >= params[1] && disc[i] <= params[2] {
+                want += price[i] as f64 * disc[i] as f64;
+            }
+        }
+        let rel = (got - want).abs() / want.abs().max(1.0);
+        assert!(rel < 1e-4, "seed {seed}: {got} vs {want}");
+    }
+}
+
+#[test]
+fn q1_groupby_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    let g = rt.manifest.q1_groups;
+    let k = rt.manifest.q1_measures;
+    let mut rng = Pcg::new(21);
+    let keys: Vec<i32> = (0..n).map(|_| rng.below(g as u64) as i32).collect();
+    let vals: Vec<f32> = (0..n * k).map(|_| rng.range_f64(0.0, 100.0) as f32).collect();
+
+    let out = rt.q1_groupby(&keys, &vals).unwrap();
+    assert_eq!(out.sums.len(), g * k);
+    assert_eq!(out.counts.len(), g);
+
+    // oracle
+    let mut sums = vec![0.0f64; g * k];
+    let mut counts = vec![0u64; g];
+    for i in 0..n {
+        let key = keys[i] as usize;
+        counts[key] += 1;
+        for m in 0..k {
+            sums[key * k + m] += vals[i * k + m] as f64;
+        }
+    }
+    for gi in 0..g {
+        assert_eq!(out.counts[gi] as u64, counts[gi], "group {gi} count");
+        for m in 0..k {
+            let got = out.sums[gi * k + m] as f64;
+            let want = sums[gi * k + m];
+            let rel = (got - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-3, "group {gi} measure {m}: {got} vs {want}");
+        }
+    }
+    let total: f32 = out.counts.iter().sum();
+    assert_eq!(total as usize, n);
+}
+
+#[test]
+fn input_length_mismatch_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    let short = vec![1.0f32; n - 1];
+    let ok = vec![1.0f32; n];
+    assert!(rt.pushdown_scan(&short, &ok, &ok, 0.0, 1.0).is_err());
+    assert!(rt.q6_agg(&ok, &short, &ok, [1.0, 0.0, 0.1]).is_err());
+}
+
+#[test]
+fn padded_tail_blocks_do_not_change_counts() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    let mut rng = Pcg::new(31);
+    let (qty, price, disc) = columns(&mut rng, n / 2); // half a block
+    let q = pad_to(&qty, n, f32::MAX); // padding fails any finite [lo, hi)
+    let p = pad_to(&price, n, 0.0);
+    let d = pad_to(&disc, n, 0.0);
+    let out = rt.pushdown_scan(&q, &p, &d, 10.0, 90.0).unwrap();
+    let (mask, _) = exec::filter_range_f32(&qty, 10.0, 90.0);
+    assert_eq!(out.count as u64, exec::mask_count(&mask));
+    // the padded region contributes no matches
+    assert!(out.mask[n / 2..].iter().all(|&m| m == 0));
+}
+
+#[test]
+fn manifest_constants_match_compiled_contract() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.rows() % rt.manifest.block_rows, 0);
+    assert_eq!(rt.manifest.q1_groups, 8);
+    assert_eq!(rt.manifest.q1_measures, 4);
+    assert!(rt.platform_name().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn pushdown_agg_matches_masked_variant() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows();
+    for seed in [41u64, 42, 43] {
+        let mut rng = Pcg::new(seed);
+        let (qty, price, disc) = columns(&mut rng, n);
+        let lo = rng.range_f64(0.0, 60.0) as f32;
+        let hi = lo + rng.range_f64(0.1, 40.0) as f32;
+        let full = rt.pushdown_scan(&qty, &price, &disc, lo, hi).unwrap();
+        let (count, revenue) = rt.pushdown_agg(&qty, &price, &disc, lo, hi).unwrap();
+        assert_eq!(count, full.count, "seed {seed}");
+        let rel = (revenue as f64 - full.revenue as f64).abs()
+            / (full.revenue as f64).abs().max(1.0);
+        assert!(rel < 1e-5, "seed {seed}: {revenue} vs {}", full.revenue);
+    }
+}
+
+#[test]
+fn parallel_scan_agrees_with_serial() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.rows() * 2 + 1000; // multiple blocks + ragged tail
+    let mut rng = Pcg::new(77);
+    let qty: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 100.0) as f32).collect();
+    let price: Vec<f32> = (0..n).map(|_| rng.range_f64(1.0, 1000.0) as f32).collect();
+    let disc: Vec<f32> = (0..n).map(|_| rng.range_f64(0.0, 0.1) as f32).collect();
+    let serial =
+        dpbento::tasks::pred_pushdown::scan_pjrt(&rt, &qty, &price, &disc, 20.0, 40.0).unwrap();
+    let parallel = dpbento::tasks::pred_pushdown::scan_pjrt_parallel(
+        &dpbento::runtime::artifact::default_dir(),
+        &qty,
+        &price,
+        &disc,
+        20.0,
+        40.0,
+        2,
+    )
+    .unwrap();
+    assert_eq!(parallel.qualified, serial.qualified);
+    let rel = (parallel.revenue - serial.revenue).abs() / serial.revenue.abs().max(1.0);
+    assert!(rel < 1e-5, "{} vs {}", parallel.revenue, serial.revenue);
+}
