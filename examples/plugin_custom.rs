@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     registry.register(Arc::new(DoorbellTask));
     registry.register(Arc::new(ShellTask::load(&plugin_dir)?));
     println!(
-        "registry now has {} tasks (11 built-in/bundled + 2 plugins)\n",
+        "registry now has {} tasks (12 built-in/bundled + 2 plugins)\n",
         registry.len()
     );
 

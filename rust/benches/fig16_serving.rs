@@ -1,0 +1,97 @@
+//! Fig. 16 (beyond the paper): the serving regime — throughput–latency
+//! curves for the offload service under every placement policy, on each
+//! host+DPU deployment.
+//!
+//! The batch benchmarks (Figs. 4–15) ask "how fast is one offloaded
+//! run?"; this bench asks the production question: at what offered load
+//! does each deployment stop meeting its SLO, and how much host CPU does
+//! offloading free before that happens?
+
+use dpbento::platform::PlatformId;
+use dpbento::serve::{capacity_rps, host_only_capacity_rps, sweep, Mix, Policy, ServeConfig};
+use dpbento::util::bench::BenchTable;
+
+const SEED: u64 = 16;
+const REQUESTS: usize = 4000;
+const LOADS: [f64; 5] = [0.2, 0.5, 0.8, 1.0, 1.2];
+
+fn run_policy(dpu: PlatformId, policy: Policy, mix: &Mix) -> Vec<dpbento::serve::LoadPoint> {
+    let mut cfg = ServeConfig::new(Some(dpu), policy, mix.clone(), SEED);
+    cfg.total_requests = REQUESTS;
+    let host_cap = host_only_capacity_rps(&cfg);
+    let rates: Vec<f64> = LOADS.iter().map(|l| l * host_cap).collect();
+    sweep(&cfg, &rates)
+}
+
+fn main() {
+    let mix = Mix::from_name("mixed").expect("mixed workload");
+
+    for dpu in [PlatformId::Bf2, PlatformId::Bf3] {
+        let mut tput = BenchTable::new(
+            format!("Fig. 16a — achieved throughput, host+{dpu} (mixed workload)"),
+            "req/s",
+        )
+        .columns(&["host-only", "dpu-only", "static-split", "queue-aware"]);
+        let mut p99 = BenchTable::new(
+            format!("Fig. 16b — p99 latency, host+{dpu} (mixed workload)"),
+            "µs",
+        )
+        .columns(&["host-only", "dpu-only", "static-split", "queue-aware"]);
+        let mut freed = BenchTable::new(
+            format!("Fig. 16c — host CPU per request, host+{dpu}"),
+            "µs/req",
+        )
+        .columns(&["host-only", "dpu-only", "static-split", "queue-aware"]);
+
+        let curves: Vec<Vec<dpbento::serve::LoadPoint>> = Policy::ALL
+            .iter()
+            .map(|p| run_policy(dpu, *p, &mix))
+            .collect();
+        for (li, load) in LOADS.iter().enumerate() {
+            let label = format!("{:.0}% host cap", load * 100.0);
+            tput.row_f(
+                label.clone(),
+                &curves.iter().map(|c| c[li].achieved_rps).collect::<Vec<_>>(),
+            );
+            p99.row_f(
+                label.clone(),
+                &curves.iter().map(|c| c[li].p99_us).collect::<Vec<_>>(),
+            );
+            freed.row_f(
+                label,
+                &curves
+                    .iter()
+                    .map(|c| c[li].host_cpu_us_per_req)
+                    .collect::<Vec<_>>(),
+            );
+        }
+        tput.finish(&format!("fig16a_serving_tput_{dpu}"));
+        p99.finish(&format!("fig16b_serving_p99_{dpu}"));
+        freed.finish(&format!("fig16c_serving_hostcpu_{dpu}"));
+
+        // shape checks mirroring the serving integration tests
+        let dpu_only = &curves[1];
+        let host_only = &curves[0];
+        let qa = &curves[3];
+        let high = LOADS.len() - 1;
+        assert!(
+            dpu_only[high].achieved_rps < host_only[high].achieved_rps,
+            "dpu-only must saturate first"
+        );
+        assert!(
+            qa[high].achieved_rps >= host_only[high].achieved_rps * 0.95,
+            "queue-aware must keep up with host-only at high load"
+        );
+        println!(
+            "\n{dpu}: dpu-only knee {:.0}/s, host-only knee {:.0}/s, queue-aware knee {:.0}/s",
+            run_capacity(dpu, Policy::DpuOnly, &mix),
+            run_capacity(dpu, Policy::HostOnly, &mix),
+            run_capacity(dpu, Policy::QueueAware, &mix),
+        );
+    }
+    println!("\nfig16 shape checks passed: wimpy-core pools saturate early; dynamic placement holds the SLO");
+}
+
+fn run_capacity(dpu: PlatformId, policy: Policy, mix: &Mix) -> f64 {
+    capacity_rps(&ServeConfig::new(Some(dpu), policy, mix.clone(), SEED))
+}

@@ -13,7 +13,7 @@ use super::box_config::{BoxConfig, TaskEntry};
 use super::crossproduct::{cardinality, expand};
 use super::registry::Registry;
 use super::report::{BoxReport, TaskReport};
-use super::task::{TaskContext, TestRecord};
+use super::task::{Task, TaskContext, TestRecord};
 
 /// Guard against combinatorially absurd boxes: the cross-product of one
 /// task entry may not exceed this many tests.
@@ -27,6 +27,13 @@ pub struct ExecOptions {
     pub filter_metrics: bool,
     /// Print progress lines to stderr.
     pub verbose: bool,
+    /// Opt-in parallel test execution: the expanded cross-product is
+    /// chunked across worker threads, each with a private prepared
+    /// `TaskContext`. Report ordering stays deterministic (records and
+    /// failures are stitched back in test order). Worth it for large
+    /// boxes and serving sweeps; prepare runs once *per worker*, so keep
+    /// it off for tasks with very expensive preparation.
+    pub parallel: bool,
 }
 
 impl Default for ExecOptions {
@@ -34,6 +41,7 @@ impl Default for ExecOptions {
         ExecOptions {
             filter_metrics: true,
             verbose: false,
+            parallel: false,
         }
     }
 }
@@ -109,41 +117,126 @@ fn run_task_on(
 
     // ② run every generated test
     let tests = expand(&entry.params);
-    let mut records = Vec::with_capacity(tests.len());
-    let mut failures = Vec::new();
-    for (i, spec) in tests.iter().enumerate() {
-        if opts.verbose {
-            eprintln!(
-                "[dpbento]   test {}/{} {}",
-                i + 1,
-                tests.len(),
-                spec_string(spec)
-            );
-        }
-        match task.run(&mut ctx, spec) {
-            Ok(mut result) => {
-                if opts.filter_metrics && !entry.metrics.is_empty() {
-                    result.retain(|k, _| entry.metrics.iter().any(|m| m == k));
-                }
-                records.push(TestRecord {
-                    spec: spec.clone(),
-                    result,
-                });
+    let (records, failures, worker_logs) = if opts.parallel && tests.len() > 1 {
+        run_tests_parallel(task.as_ref(), cfg, entry, platform, &tests, opts)?
+    } else {
+        let mut records = Vec::with_capacity(tests.len());
+        let mut failures = Vec::new();
+        for (i, spec) in tests.iter().enumerate() {
+            if opts.verbose {
+                eprintln!(
+                    "[dpbento]   test {}/{} {}",
+                    i + 1,
+                    tests.len(),
+                    spec_string(spec)
+                );
             }
-            Err(e) => failures.push((spec_string(spec), format!("{e:#}"))),
+            run_one_test(task.as_ref(), &mut ctx, entry, spec, opts, &mut records, &mut failures);
         }
-    }
+        (records, failures, Vec::new())
+    };
 
     // ③ report
     let rendered = task.report(&ctx, &records);
+    let mut logs = ctx.logs().to_vec();
+    logs.extend(worker_logs);
     Ok(TaskReport {
         task: entry.task.clone(),
         platform,
         records,
         rendered,
-        logs: ctx.logs().to_vec(),
+        logs,
         failures,
     })
+}
+
+/// Run one test and file its outcome under records/failures.
+fn run_one_test(
+    task: &dyn Task,
+    ctx: &mut TaskContext,
+    entry: &TaskEntry,
+    spec: &super::task::TestSpec,
+    opts: &ExecOptions,
+    records: &mut Vec<TestRecord>,
+    failures: &mut Vec<(String, String)>,
+) {
+    match task.run(ctx, spec) {
+        Ok(mut result) => {
+            if opts.filter_metrics && !entry.metrics.is_empty() {
+                result.retain(|k, _| entry.metrics.iter().any(|m| m == k));
+            }
+            records.push(TestRecord {
+                spec: spec.clone(),
+                result,
+            });
+        }
+        Err(e) => failures.push((spec_string(spec), format!("{e:#}"))),
+    }
+}
+
+type ParallelOut = (Vec<TestRecord>, Vec<(String, String)>, Vec<String>);
+
+/// Opt-in parallel execution path: chunk the expanded tests across worker
+/// threads, each preparing a private context, then stitch the results back
+/// in test order so reports are byte-identical run to run.
+fn run_tests_parallel(
+    task: &dyn Task,
+    cfg: &BoxConfig,
+    entry: &TaskEntry,
+    platform: PlatformId,
+    tests: &[super::task::TestSpec],
+    opts: &ExecOptions,
+) -> Result<ParallelOut> {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, tests.len());
+    let chunk_len = tests.len().div_ceil(workers);
+    let chunks: Vec<&[super::task::TestSpec]> = tests.chunks(chunk_len).collect();
+    if opts.verbose {
+        eprintln!(
+            "[dpbento]   running {} tests across {} workers",
+            tests.len(),
+            chunks.len()
+        );
+    }
+
+    let outcomes: Vec<Result<ParallelOut>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|chunk| {
+                scope.spawn(move || -> Result<ParallelOut> {
+                    let mut ctx = TaskContext::new(platform, cfg.seed);
+                    task.prepare(&mut ctx)?;
+                    ctx.mark_prepared();
+                    // the main context already contributed the prepare log
+                    // lines; workers report only their run-time logs
+                    let prepare_logs = ctx.logs().len();
+                    let mut records = Vec::with_capacity(chunk.len());
+                    let mut failures = Vec::new();
+                    for spec in *chunk {
+                        run_one_test(task, &mut ctx, entry, spec, opts, &mut records, &mut failures);
+                    }
+                    Ok((records, failures, ctx.logs()[prepare_logs..].to_vec()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("executor worker panicked"))
+            .collect()
+    });
+
+    let mut records = Vec::with_capacity(tests.len());
+    let mut failures = Vec::new();
+    let mut logs = Vec::new();
+    for outcome in outcomes {
+        let (r, f, l) = outcome?;
+        records.extend(r);
+        failures.extend(f);
+        logs.extend(l);
+    }
+    Ok((records, failures, logs))
 }
 
 /// Explicit cleanup (§3.3 step ④): run every task's clean step.
@@ -240,7 +333,7 @@ mod tests {
     #[test]
     fn per_test_failures_recorded_not_fatal() {
         let c = cfg(r#"{"tasks":[{"task":"probe","params":{"x":[-1,5]}}]}"#);
-        let rep = run_box(&registry(), &c, &ExecOptions::default()).unwrap();
+        let rep = run_box(&quiet_registry(), &c, &ExecOptions::default()).unwrap();
         assert_eq!(rep.tasks[0].records.len(), 1);
         assert_eq!(rep.tasks[0].failures.len(), 1);
         assert!(rep.tasks[0].failures[0].1.contains("negative x"));
@@ -250,7 +343,7 @@ mod tests {
     #[test]
     fn unknown_metric_fails_fast() {
         let c = cfg(r#"{"tasks":[{"task":"probe","metrics":["latency"]}]}"#);
-        let err = run_box(&registry(), &c, &ExecOptions::default())
+        let err = run_box(&quiet_registry(), &c, &ExecOptions::default())
             .unwrap_err()
             .to_string();
         assert!(err.contains("no metric 'latency'"), "{err}");
@@ -259,7 +352,7 @@ mod tests {
     #[test]
     fn unknown_task_fails_fast() {
         let c = cfg(r#"{"tasks":[{"task":"ghost"}]}"#);
-        assert!(run_box(&registry(), &c, &ExecOptions::default()).is_err());
+        assert!(run_box(&quiet_registry(), &c, &ExecOptions::default()).is_err());
     }
 
     #[test]
@@ -268,7 +361,7 @@ mod tests {
             r#"{"platforms":["host","bf2","bf3"],
                 "tasks":[{"task":"probe","params":{"x":[1]}}]}"#,
         );
-        let rep = run_box(&registry(), &c, &ExecOptions::default()).unwrap();
+        let rep = run_box(&quiet_registry(), &c, &ExecOptions::default()).unwrap();
         assert_eq!(rep.tasks.len(), 3);
         let platforms: Vec<_> = rep.tasks.iter().map(|t| t.platform).collect();
         assert_eq!(
@@ -285,7 +378,7 @@ mod tests {
         let c = cfg(&format!(
             r#"{{"tasks":[{{"task":"probe","params":{{"a":{arr},"b":{arr},"c":{arr}}}}}]}}"#
         ));
-        let err = run_box(&registry(), &c, &ExecOptions::default())
+        let err = run_box(&quiet_registry(), &c, &ExecOptions::default())
             .unwrap_err()
             .to_string();
         assert!(err.contains("expands to"), "{err}");
@@ -293,7 +386,103 @@ mod tests {
 
     #[test]
     fn clean_all_reports_cleaned_tasks() {
-        let cleaned = clean_all(&registry(), PlatformId::HostEpyc).unwrap();
+        let cleaned = clean_all(&quiet_registry(), PlatformId::HostEpyc).unwrap();
         assert_eq!(cleaned, vec!["probe"]);
+    }
+
+    /// Like [`Probe`] but without the global prepare counter, so the
+    /// parallel tests (which prepare once per worker) don't race the
+    /// `prepare_once_tests_crossproducted` assertion.
+    struct QuietProbe;
+    impl Task for QuietProbe {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn description(&self) -> &'static str {
+            "test double (no prepare counting)"
+        }
+        fn params(&self) -> Vec<ParamDef> {
+            vec![ParamDef::new("x", "value", "[1,2]")]
+        }
+        fn metrics(&self) -> Vec<&'static str> {
+            vec!["doubled", "tripled"]
+        }
+        fn prepare(&self, ctx: &mut crate::coordinator::task::TaskContext) -> anyhow::Result<()> {
+            ctx.log("prepared");
+            Ok(())
+        }
+        fn run(
+            &self,
+            _ctx: &mut crate::coordinator::task::TaskContext,
+            test: &TestSpec,
+        ) -> anyhow::Result<TestResult> {
+            let x = test.get("x").and_then(Value::as_f64).unwrap_or(0.0);
+            if x < 0.0 {
+                anyhow::bail!("negative x");
+            }
+            Ok(BTreeMap::from([
+                ("doubled".to_string(), 2.0 * x),
+                ("tripled".to_string(), 3.0 * x),
+            ]))
+        }
+    }
+
+    fn quiet_registry() -> Registry {
+        let mut r = Registry::empty();
+        r.register(Arc::new(QuietProbe));
+        r
+    }
+
+    #[test]
+    fn parallel_execution_matches_serial_with_deterministic_order() {
+        let values: Vec<String> = (0..40).map(|i| i.to_string()).collect();
+        let json = format!(
+            r#"{{"name":"p","tasks":[{{"task":"probe","params":{{"x":[{}]}},
+                "metrics":["doubled"]}}]}}"#,
+            values.join(",")
+        );
+        let c = cfg(&json);
+        let serial = run_box(&quiet_registry(), &c, &ExecOptions::default()).unwrap();
+        let parallel_opts = ExecOptions {
+            parallel: true,
+            ..ExecOptions::default()
+        };
+        let p1 = run_box(&quiet_registry(), &c, &parallel_opts).unwrap();
+        let p2 = run_box(&quiet_registry(), &c, &parallel_opts).unwrap();
+        // same records, same order, run to run and vs the serial path
+        let specs = |r: &BoxReport| -> Vec<String> {
+            r.tasks[0]
+                .records
+                .iter()
+                .map(|rec| {
+                    format!(
+                        "{}={}",
+                        rec.spec["x"].to_compact(),
+                        rec.result["doubled"]
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(specs(&serial), specs(&p1));
+        assert_eq!(specs(&p1), specs(&p2));
+        assert_eq!(p1.tasks[0].records.len(), 40);
+    }
+
+    #[test]
+    fn parallel_execution_keeps_failures_ordered() {
+        let c = cfg(
+            r#"{"tasks":[{"task":"probe",
+                "params":{"x":[-3,-2,-1,1,2,3,4,5,6,7,8,9]}}]}"#,
+        );
+        let opts = ExecOptions {
+            parallel: true,
+            ..ExecOptions::default()
+        };
+        let rep = run_box(&quiet_registry(), &c, &opts).unwrap();
+        assert_eq!(rep.tasks[0].records.len(), 9);
+        assert_eq!(rep.tasks[0].failures.len(), 3);
+        // failures keep cross-product order
+        assert!(rep.tasks[0].failures[0].0.contains("-3"));
+        assert!(rep.tasks[0].failures[2].0.contains("-1"));
     }
 }

@@ -34,6 +34,8 @@ impl Registry {
         r.register(Arc::new(crate::tasks::index_offload::IndexOffloadTask));
         // full DBMS (§3.6)
         r.register(Arc::new(crate::tasks::dbms::DbmsTask));
+        // the serving layer (DESIGN.md §7): offload as a service
+        r.register(Arc::new(crate::serve::ServingTask));
         // plugins (§3.2 / §5.2 / §6.2)
         r.register(Arc::new(crate::plugins::compression::CompressionTask::compress()));
         r.register(Arc::new(crate::plugins::compression::CompressionTask::decompress()));
@@ -82,7 +84,7 @@ mod tests {
     #[test]
     fn builtin_covers_table1_and_plugins() {
         let r = Registry::builtin();
-        // Table 1: micro (4) + modules (2) + full system (1)
+        // Table 1: micro (4) + modules (2) + full system (1) + serving
         for name in [
             "compute",
             "memory",
@@ -91,6 +93,7 @@ mod tests {
             "pred_pushdown",
             "index_offload",
             "dbms",
+            "serving",
         ] {
             assert!(r.get(name).is_ok(), "missing builtin {name}");
         }
@@ -98,7 +101,7 @@ mod tests {
         for name in ["compression", "decompression", "regex", "rdma"] {
             assert!(r.get(name).is_ok(), "missing plugin {name}");
         }
-        assert_eq!(r.len(), 11);
+        assert_eq!(r.len(), 12);
     }
 
     #[test]

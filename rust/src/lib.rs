@@ -16,7 +16,11 @@
 //!   (`storage`), network paths (`net`), a columnar DBMS with a TPC-H-like
 //!   generator (`db`), a B+-tree KV index with YCSB (`index`), and the
 //!   PJRT runtime (`runtime`) that executes the AOT-compiled JAX/Pallas
-//!   scan pipelines on the benchmark hot path.
+//!   scan pipelines on the benchmark hot path;
+//! - the **serving layer** (`serve`): an offload *service* built on those
+//!   substrates — open/closed-loop load generation, host/DPU placement
+//!   policies with per-core FIFO queues and admission control, and
+//!   throughput–latency sweeps (the `serving` task / `dpbento serve`).
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured record of every figure.
@@ -28,6 +32,7 @@ pub mod net;
 pub mod platform;
 pub mod plugins;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod storage;
 pub mod tasks;

@@ -1,7 +1,8 @@
 //! dpBento command-line interface (the framework's user entry point).
 //!
 //! ```text
-//! dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics]
+//! dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics] [--parallel]
+//! dpbento serve [--platforms LIST] [--policy NAME|all] [--workload MIX] [--loads CSV] ...
 //! dpbento list-tasks
 //! dpbento clean [--platform NAME]
 //! dpbento example-box
@@ -35,6 +36,7 @@ fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
     let rest: Vec<String> = it.collect();
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "list-tasks" => cmd_list_tasks(),
         "clean" => cmd_clean(rest),
         "example-box" => {
@@ -58,13 +60,23 @@ fn print_help() {
         "dpBento: benchmarking DPUs for data processing (paper reproduction)
 
 USAGE:
-  dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics]
+  dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics] [--parallel]
+  dpbento serve [--platforms bf2,bf3] [--policy all|host-only|dpu-only|static-split|queue-aware]
+                [--workload mixed|analytics|index_get|net_rpc] [--loads 0.2,0.5,0.8,1.0,1.2]
+                [--requests N] [--seed N]
   dpbento list-tasks
   dpbento clean [--platform host|bf2|bf3|octeon]
   dpbento example-box         print the paper's Fig. 2 box to stdout
 
 A *box* declares tasks, parameter lists (cross-producted into tests),
-metrics of interest, and target platforms. See `dpbento example-box`."
+metrics of interest, and target platforms. See `dpbento example-box`.
+
+SERVING:
+  `dpbento serve` drives the offload-serving layer: an open-loop load
+  sweep (fractions of the host-only capacity) through each placement
+  policy on each host+DPU deployment, printing one throughput-latency
+  table per (platform, policy). The same engine is available to boxes as
+  the `serving` task (see `dpbento list-tasks`)."
     );
 }
 
@@ -112,6 +124,7 @@ fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     let plugins = take_opt(&mut args, "--plugins");
     let verbose = take_flag(&mut args, "--verbose");
     let all_metrics = take_flag(&mut args, "--all-metrics");
+    let parallel = take_flag(&mut args, "--parallel");
     let path = args
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: dpbento run <box.json>"))?;
@@ -121,6 +134,7 @@ fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     let opts = ExecOptions {
         filter_metrics: !all_metrics,
         verbose,
+        parallel,
     };
     let report = run_box(&registry, &cfg, &opts)?;
     print!("{}", report.render());
@@ -133,6 +147,85 @@ fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     } else {
         ExitCode::FAILURE
     })
+}
+
+/// `dpbento serve`: sweep offered load through the serving layer for each
+/// requested (platform, policy) pair and print throughput–latency tables.
+fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
+    use dpbento::platform::PlatformId;
+    use dpbento::serve::{
+        capacity_rps, host_only_capacity_rps, render_sweep, sweep, Mix, Policy, ServeConfig,
+    };
+
+    let platforms: Vec<PlatformId> = take_opt(&mut args, "--platforms")
+        .unwrap_or_else(|| "bf2,bf3".to_string())
+        .split(',')
+        .map(|s| {
+            PlatformId::from_name(s.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown platform '{s}' (host/bf2/bf3/octeon)"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let policy_arg = take_opt(&mut args, "--policy").unwrap_or_else(|| "all".to_string());
+    let policies: Vec<Policy> = if policy_arg == "all" {
+        Policy::ALL.to_vec()
+    } else {
+        vec![Policy::from_name(&policy_arg)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_arg}'"))?]
+    };
+    let workload = take_opt(&mut args, "--workload").unwrap_or_else(|| "mixed".to_string());
+    let mix = Mix::from_name(&workload)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}'"))?;
+    let loads: Vec<f64> = take_opt(&mut args, "--loads")
+        .unwrap_or_else(|| "0.2,0.5,0.8,1.0,1.2".to_string())
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad load factor '{s}'"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(
+        loads.iter().all(|&l| l > 0.0 && l.is_finite()),
+        "load factors must be positive"
+    );
+    let requests = take_opt(&mut args, "--requests")
+        .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --requests")))
+        .transpose()?
+        .unwrap_or(3000);
+    let seed = take_opt(&mut args, "--seed")
+        .map(|s| s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad --seed")))
+        .transpose()?
+        .unwrap_or(42);
+    anyhow::ensure!(
+        args.is_empty(),
+        "unrecognized serve arguments: {} (see `dpbento help`)",
+        args.join(" ")
+    );
+
+    println!(
+        "dpBento serving sweep: workload '{workload}', {requests} requests/point, seed {seed}"
+    );
+    println!("load factors are fractions of the host-only capacity\n");
+    for platform in &platforms {
+        let dpu = if platform.is_dpu() { Some(*platform) } else { None };
+        for policy in &policies {
+            let mut cfg = ServeConfig::new(dpu, *policy, mix.clone(), seed);
+            cfg.total_requests = requests;
+            let host_cap = host_only_capacity_rps(&cfg);
+            let rates: Vec<f64> = loads.iter().map(|l| l * host_cap).collect();
+            let points = sweep(&cfg, &rates);
+            let title = format!(
+                "{} · {} (capacity {:.0}/s, host-only {:.0}/s)",
+                platform,
+                policy.name(),
+                capacity_rps(&cfg),
+                host_cap
+            );
+            print!("{}", render_sweep(&title, &points));
+            println!();
+        }
+    }
+    Ok(ExitCode::SUCCESS)
 }
 
 fn cmd_list_tasks() -> anyhow::Result<ExitCode> {

@@ -9,6 +9,10 @@
 
 use anyhow::{Context, Result};
 
+// Offline builds compile against the in-tree PJRT stub (DESIGN.md §8);
+// restoring the real `xla` crate is this one import.
+use super::xla_stub as xla;
+
 use super::artifact::Manifest;
 
 /// Outputs of one pushdown-scan invocation over a row-block.

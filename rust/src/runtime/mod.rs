@@ -5,6 +5,7 @@
 
 pub mod artifact;
 pub mod executor;
+pub mod xla_stub;
 
 pub use artifact::Manifest;
 pub use executor::{pad_to, GroupbyOut, Runtime, ScanOut};

@@ -1,0 +1,88 @@
+//! Arrival processes for the load generator.
+//!
+//! Open-loop arrivals (Poisson or deterministically paced) model an
+//! offered-load sweep where clients do not wait for responses — the regime
+//! where saturation shows up as unbounded queueing. Closed-loop arrivals
+//! model a fixed population of synchronous clients (concurrency-limited,
+//! like the paper's queue-depth benchmarks).
+
+use crate::util::rng::Pcg;
+
+/// How requests arrive at the service.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Open loop, Poisson process at `rate_rps` requests/second.
+    OpenPoisson { rate_rps: f64 },
+    /// Open loop, fixed inter-arrival gap of `1/rate_rps` seconds
+    /// (deterministic — used by the FIFO-accounting unit tests).
+    Paced { rate_rps: f64 },
+    /// Closed loop: `clients` concurrent synchronous clients, each
+    /// re-issuing `think_s` seconds after its previous request completes.
+    ClosedLoop { clients: u32, think_s: f64 },
+}
+
+impl Arrivals {
+    pub fn is_open(&self) -> bool {
+        !matches!(self, Arrivals::ClosedLoop { .. })
+    }
+
+    /// Offered rate for open processes (requests/second).
+    pub fn rate_rps(&self) -> Option<f64> {
+        match self {
+            Arrivals::OpenPoisson { rate_rps } | Arrivals::Paced { rate_rps } => Some(*rate_rps),
+            Arrivals::ClosedLoop { .. } => None,
+        }
+    }
+
+    /// Sample the gap to the next arrival (open processes only).
+    pub fn sample_gap_s(&self, rng: &mut Pcg) -> f64 {
+        match self {
+            Arrivals::OpenPoisson { rate_rps } => {
+                assert!(*rate_rps > 0.0, "offered rate must be positive");
+                rng.exp(1.0 / rate_rps)
+            }
+            Arrivals::Paced { rate_rps } => {
+                assert!(*rate_rps > 0.0, "offered rate must be positive");
+                1.0 / rate_rps
+            }
+            Arrivals::ClosedLoop { .. } => {
+                panic!("closed-loop arrivals are driven by completions, not gaps")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_gaps_have_the_right_mean() {
+        let a = Arrivals::OpenPoisson { rate_rps: 2_000.0 };
+        let mut rng = Pcg::new(7);
+        let n = 50_000;
+        let sum: f64 = (0..n).map(|_| a.sample_gap_s(&mut rng)).sum();
+        let mean = sum / n as f64;
+        assert!((mean / (1.0 / 2_000.0) - 1.0).abs() < 0.03, "{mean}");
+    }
+
+    #[test]
+    fn paced_gaps_are_constant() {
+        let a = Arrivals::Paced { rate_rps: 100.0 };
+        let mut rng = Pcg::new(7);
+        for _ in 0..10 {
+            assert_eq!(a.sample_gap_s(&mut rng), 0.01);
+        }
+    }
+
+    #[test]
+    fn closed_loop_is_not_open() {
+        let c = Arrivals::ClosedLoop {
+            clients: 8,
+            think_s: 0.0,
+        };
+        assert!(!c.is_open());
+        assert_eq!(c.rate_rps(), None);
+        assert!(Arrivals::OpenPoisson { rate_rps: 1.0 }.is_open());
+    }
+}

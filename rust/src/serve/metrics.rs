@@ -1,0 +1,229 @@
+//! Throughput–latency reporting: turn raw [`ServeOutcome`]s into the
+//! curves the serving question is actually about — offered load vs
+//! achieved throughput, avg/p95/p99 latency, SLO-violation rate, and how
+//! much host CPU the placement policy freed.
+
+use crate::platform::PlatformId;
+use crate::util::stats::Summary;
+
+use super::load::Arrivals;
+use super::scheduler::Policy;
+use super::sim::{run_serve, ServeConfig, ServeOutcome};
+
+/// One point on a throughput–latency curve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadPoint {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub mean_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Fraction of requests that missed the SLO (late + rejected).
+    pub slo_violation_rate: f64,
+    /// Fraction of requests shed by admission control.
+    pub rejected_frac: f64,
+    /// Host pool utilization (busy core-seconds / capacity core-seconds).
+    pub host_busy_frac: f64,
+    /// DPU pool utilization (0 on host-only deployments).
+    pub dpu_busy_frac: f64,
+    /// Host CPU spent per completed request (µs) — the "host CPU freed"
+    /// axis: compare against the host-only policy's value.
+    pub host_cpu_us_per_req: f64,
+}
+
+/// Summarize one run into a curve point.
+pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoint {
+    let elapsed = out.elapsed_s.max(f64::MIN_POSITIVE);
+    let total = (out.completed + out.rejected).max(1) as f64;
+    let (mean_us, p95_us, p99_us, late) = if out.latencies_us.is_empty() {
+        (0.0, 0.0, 0.0, 0u64)
+    } else {
+        let s = Summary::from_samples(&out.latencies_us);
+        let late = out
+            .latencies_us
+            .iter()
+            .filter(|&&l| l > cfg.slo_us)
+            .count() as u64;
+        (s.mean, s.p95, s.p99, late)
+    };
+    let dpu_capacity_s = elapsed * cfg.dpu_workers.max(1) as f64;
+    LoadPoint {
+        offered_rps,
+        achieved_rps: out.completed as f64 / elapsed,
+        mean_us,
+        p95_us,
+        p99_us,
+        slo_violation_rate: (late + out.rejected) as f64 / total,
+        rejected_frac: out.rejected as f64 / total,
+        host_busy_frac: out.host_busy_s / (elapsed * cfg.host_workers.max(1) as f64),
+        dpu_busy_frac: if cfg.dpu.is_some() {
+            out.dpu_busy_s / dpu_capacity_s
+        } else {
+            0.0
+        },
+        host_cpu_us_per_req: out.host_busy_s * 1e6 / out.completed.max(1) as f64,
+    }
+}
+
+/// Analytic service capacity (requests/second) of a deployment under its
+/// policy: the knee a throughput–latency curve bends around.
+pub fn capacity_rps(cfg: &ServeConfig) -> f64 {
+    let host_cap =
+        cfg.host_workers.max(1) as f64 / cfg.mix.mean_service_s(PlatformId::HostEpyc);
+    let dpu_cap = match cfg.dpu {
+        Some(p) => cfg.dpu_workers.max(1) as f64 / cfg.mix.mean_service_s(p),
+        None => 0.0,
+    };
+    match cfg.policy {
+        Policy::HostOnly => host_cap,
+        Policy::DpuOnly => {
+            if cfg.dpu.is_some() {
+                dpu_cap
+            } else {
+                host_cap
+            }
+        }
+        Policy::StaticSplit { dpu_fraction } => {
+            if cfg.dpu.is_none() || dpu_fraction <= 0.0 {
+                host_cap
+            } else if dpu_fraction >= 1.0 {
+                dpu_cap
+            } else {
+                // the split saturates when either side saturates its share
+                (host_cap / (1.0 - dpu_fraction)).min(dpu_cap / dpu_fraction)
+            }
+        }
+        Policy::QueueAware => host_cap + dpu_cap,
+    }
+}
+
+/// The host-only capacity of the same deployment — the common reference
+/// axis sweeps and the `load` box parameter are expressed against.
+pub fn host_only_capacity_rps(cfg: &ServeConfig) -> f64 {
+    let mut c = cfg.clone();
+    c.policy = Policy::HostOnly;
+    capacity_rps(&c)
+}
+
+/// Run an offered-load sweep: one open-loop Poisson run per rate.
+pub fn sweep(base: &ServeConfig, offered_rps: &[f64]) -> Vec<LoadPoint> {
+    offered_rps
+        .iter()
+        .map(|&rate| {
+            let mut cfg = base.clone();
+            cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
+            let out = run_serve(&cfg);
+            point(&cfg, rate, &out)
+        })
+        .collect()
+}
+
+/// Render a sweep as an aligned text table (the CLI/report surface).
+pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!(
+        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8}\n",
+        "offered/s", "achieved/s", "mean_us", "p95_us", "p99_us", "slo_viol", "reject", "host_bz", "dpu_bz"
+    ));
+    for p in points {
+        out.push_str(&format!(
+            "{:>12.0} {:>12.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
+            p.offered_rps,
+            p.achieved_rps,
+            p.mean_us,
+            p.p95_us,
+            p.p99_us,
+            p.slo_violation_rate,
+            p.rejected_frac,
+            p.host_busy_frac,
+            p.dpu_busy_frac,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::{mean_service_s, Mix, RequestClass};
+
+    fn cfg(policy: Policy) -> ServeConfig {
+        ServeConfig::new(
+            Some(PlatformId::Bf2),
+            policy,
+            Mix::single(RequestClass::NetRpc),
+            3,
+        )
+    }
+
+    #[test]
+    fn capacity_formulas() {
+        let host_cap = 96.0 / mean_service_s(RequestClass::NetRpc, PlatformId::HostEpyc);
+        let dpu_cap = 8.0 / mean_service_s(RequestClass::NetRpc, PlatformId::Bf2);
+        assert!((capacity_rps(&cfg(Policy::HostOnly)) - host_cap).abs() < 1e-6);
+        assert!((capacity_rps(&cfg(Policy::DpuOnly)) - dpu_cap).abs() < 1e-6);
+        assert!(
+            (capacity_rps(&cfg(Policy::QueueAware)) - (host_cap + dpu_cap)).abs() < 1e-6
+        );
+        // 50/50 split: the slower side's share binds
+        let split = capacity_rps(&cfg(Policy::StaticSplit { dpu_fraction: 0.5 }));
+        assert!((split - (2.0 * dpu_cap).min(2.0 * host_cap)).abs() < 1e-6);
+        // host-only deployment: every policy degenerates to the host cap
+        let mut no_dpu = cfg(Policy::DpuOnly);
+        no_dpu.dpu = None;
+        assert!((capacity_rps(&no_dpu) - host_cap).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dpu_only_knee_below_host_only_knee() {
+        // the acceptance-critical ordering, stated analytically
+        for mix in ["analytics", "index_get", "net_rpc", "mixed"] {
+            let mut c = cfg(Policy::DpuOnly);
+            c.mix = Mix::from_name(mix).unwrap();
+            let dpu_cap = capacity_rps(&c);
+            c.policy = Policy::HostOnly;
+            let host_cap = capacity_rps(&c);
+            assert!(dpu_cap < host_cap, "{mix}: {dpu_cap} vs {host_cap}");
+        }
+    }
+
+    #[test]
+    fn sweep_points_line_up_with_rates() {
+        let mut base = cfg(Policy::HostOnly);
+        base.total_requests = 800;
+        let rates = [1000.0, 2000.0];
+        let pts = sweep(&base, &rates);
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].offered_rps, 1000.0);
+        assert_eq!(pts[1].offered_rps, 2000.0);
+        for p in &pts {
+            // far below capacity: everything completes at ~service latency
+            assert!(p.rejected_frac == 0.0, "{p:?}");
+            assert!(p.achieved_rps > 0.0);
+            assert!(p.mean_us > 0.0);
+            assert!(p.p99_us >= p.p95_us && p.p95_us >= 0.0);
+        }
+        let rendered = render_sweep("t", &pts);
+        assert!(rendered.contains("offered/s"));
+        assert!(rendered.lines().count() == 4);
+    }
+
+    #[test]
+    fn empty_completions_do_not_panic() {
+        let out = ServeOutcome {
+            completed: 0,
+            rejected: 5,
+            elapsed_s: 1.0,
+            latencies_us: vec![],
+            waits_us: vec![],
+            host_busy_s: 0.0,
+            dpu_busy_s: 0.0,
+            host_served: 0,
+            dpu_served: 0,
+        };
+        let p = point(&cfg(Policy::HostOnly), 100.0, &out);
+        assert_eq!(p.achieved_rps, 0.0);
+        assert_eq!(p.slo_violation_rate, 1.0);
+        assert_eq!(p.rejected_frac, 1.0);
+    }
+}

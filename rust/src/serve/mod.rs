@@ -1,0 +1,41 @@
+//! `serve` — the DPU offload *serving* subsystem.
+//!
+//! The paper benchmarks DPU offloading as one-shot batch runs; this layer
+//! asks the question the ROADMAP's north star actually poses: what happens
+//! when many concurrent clients drive offloaded data-processing requests
+//! *as a service*? Related characterizations (BlueField-2 under load,
+//! DPU-offload studies) show DPU benefits invert in this regime because
+//! wimpy cores saturate early — `serve` makes that measurable.
+//!
+//! Architecture (see DESIGN.md §7 for the request lifecycle diagram):
+//!
+//!  - [`request`]: typed request classes priced by the existing substrate
+//!    models — analytical query slices (`db::engine`), index gets
+//!    (`index::partition`'s Fig. 14 calibration), and network RPCs
+//!    (`net::tcp`'s per-message stack cost);
+//!  - [`load`]: open-loop (Poisson / paced) and closed-loop
+//!    (fixed-concurrency) arrival generation, seeded via `util::rng::Pcg`;
+//!  - [`scheduler`]: host and DPU worker pools with per-core FIFO queues,
+//!    pluggable placement policies (host-only, dpu-only, static-split,
+//!    queue-aware dynamic) and per-core admission control;
+//!  - [`sim`]: the event loop driving everything through `sim::Engine` —
+//!    fully deterministic under a fixed seed;
+//!  - [`metrics`]: throughput–latency curves (offered load sweep →
+//!    achieved throughput, avg/p95/p99 latency, SLO-violation rate,
+//!    host-CPU freed) via `util::stats::Summary`;
+//!  - [`task`]: the `serving` coordinator task (registered in
+//!    `Registry::builtin`) and therefore the `dpbento serve` CLI surface.
+
+pub mod load;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod sim;
+pub mod task;
+
+pub use load::Arrivals;
+pub use metrics::{capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, LoadPoint};
+pub use request::{Mix, RequestClass, ServiceJitter};
+pub use scheduler::{Policy, Pool};
+pub use sim::{run_serve, ServeConfig, ServeOutcome};
+pub use task::ServingTask;

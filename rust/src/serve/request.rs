@@ -1,0 +1,264 @@
+//! Typed request classes and their per-platform service-time models.
+//!
+//! Each class is priced from an existing calibrated substrate, so the
+//! serving results inherit the paper's cross-platform ratios instead of
+//! introducing new constants:
+//!
+//!  - **Analytics** — a slice of analytical query work (a Q6-style scan
+//!    partition). One request costs [`ANALYTICS_HOST_CORE_S`] on a host
+//!    core and scales by `platform::cpu::sw_core_factor` elsewhere, the
+//!    same factor the DB/TCP/codec software paths use.
+//!  - **IndexGet** — one B+-tree point lookup, priced from the Fig. 14
+//!    per-thread index service rates (`index::partition::index_rate_mops`).
+//!  - **NetRpc** — one small RPC, priced as the endpoint's TCP per-message
+//!    software cost (`net::tcp::sw_cost_us`), the paper's wimpy-core
+//!    network finding.
+
+use crate::index::partition::index_rate_mops;
+use crate::net::tcp;
+use crate::platform::cpu::sw_core_factor;
+use crate::platform::PlatformId;
+use crate::util::rng::Pcg;
+
+/// Host-core seconds of one analytics request (a small query slice).
+pub const ANALYTICS_HOST_CORE_S: f64 = 2.0e-3;
+
+/// Payload of one RPC request (bytes).
+pub const RPC_MSG_BYTES: usize = 4096;
+
+/// A serving request class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    Analytics,
+    IndexGet,
+    NetRpc,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 3] = [
+        RequestClass::Analytics,
+        RequestClass::IndexGet,
+        RequestClass::NetRpc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestClass::Analytics => "analytics",
+            RequestClass::IndexGet => "index_get",
+            RequestClass::NetRpc => "net_rpc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RequestClass> {
+        Some(match s {
+            "analytics" | "query" => RequestClass::Analytics,
+            "index_get" | "index" | "get" => RequestClass::IndexGet,
+            "net_rpc" | "rpc" | "net" => RequestClass::NetRpc,
+            _ => return None,
+        })
+    }
+}
+
+/// Mean service time (seconds) of one request of `class` on one worker
+/// core of platform `p`.
+pub fn mean_service_s(class: RequestClass, p: PlatformId) -> f64 {
+    match class {
+        RequestClass::Analytics => ANALYTICS_HOST_CORE_S / sw_core_factor(p),
+        RequestClass::IndexGet => 1.0 / (index_rate_mops(p, 1) * 1e6),
+        RequestClass::NetRpc => tcp::sw_cost_us(p, RPC_MSG_BYTES) * 1e-6,
+    }
+}
+
+/// Service-time dispersion model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceJitter {
+    /// Deterministic: every request takes exactly the mean (unit tests).
+    None,
+    /// 90% deterministic floor + 10%-mean exponential tail — the shape the
+    /// storage/network models use for realistic p99s.
+    Tail,
+    /// Fully exponential (memoryless) service — M/M/c sanity checks.
+    Exponential,
+}
+
+/// Sample one service time.
+pub fn sample_service_s(
+    class: RequestClass,
+    p: PlatformId,
+    jitter: ServiceJitter,
+    rng: &mut Pcg,
+) -> f64 {
+    let mean = mean_service_s(class, p);
+    match jitter {
+        ServiceJitter::None => mean,
+        ServiceJitter::Tail => 0.9 * mean + rng.exp(0.1 * mean),
+        ServiceJitter::Exponential => rng.exp(mean),
+    }
+}
+
+/// A weighted mix of request classes (the tenant workload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mix {
+    entries: Vec<(RequestClass, f64)>,
+}
+
+impl Mix {
+    /// Build a mix from positive weights (normalized internally).
+    pub fn new(entries: Vec<(RequestClass, f64)>) -> Mix {
+        assert!(!entries.is_empty(), "empty workload mix");
+        assert!(
+            entries.iter().all(|(_, w)| *w > 0.0 && w.is_finite()),
+            "mix weights must be positive finite"
+        );
+        Mix { entries }
+    }
+
+    pub fn single(class: RequestClass) -> Mix {
+        Mix::new(vec![(class, 1.0)])
+    }
+
+    /// Named mixes for boxes and the CLI: a single class by name, or
+    /// `mixed` — an OLTP-ish blend of 20% analytics / 50% gets / 30% RPCs.
+    pub fn from_name(s: &str) -> Option<Mix> {
+        if let Some(c) = RequestClass::from_name(s) {
+            return Some(Mix::single(c));
+        }
+        match s {
+            "mixed" | "all" => Some(Mix::new(vec![
+                (RequestClass::Analytics, 0.2),
+                (RequestClass::IndexGet, 0.5),
+                (RequestClass::NetRpc, 0.3),
+            ])),
+            _ => None,
+        }
+    }
+
+    pub fn entries(&self) -> &[(RequestClass, f64)] {
+        &self.entries
+    }
+
+    fn total_weight(&self) -> f64 {
+        self.entries.iter().map(|(_, w)| w).sum()
+    }
+
+    /// Sample a class proportionally to its weight.
+    pub fn sample(&self, rng: &mut Pcg) -> RequestClass {
+        let mut x = rng.f64() * self.total_weight();
+        for (c, w) in &self.entries {
+            if x < *w {
+                return *c;
+            }
+            x -= w;
+        }
+        self.entries[self.entries.len() - 1].0
+    }
+
+    /// Weighted mean service time (seconds) of the mix on platform `p`.
+    pub fn mean_service_s(&self, p: PlatformId) -> f64 {
+        let total = self.total_weight();
+        self.entries
+            .iter()
+            .map(|(c, w)| w * mean_service_s(*c, p))
+            .sum::<f64>()
+            / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PlatformId::*;
+
+    #[test]
+    fn wimpy_cores_cost_more_per_request() {
+        // analytics and RPC requests are strictly more expensive on every
+        // DPU than on a host core (sw_core_factor / TCP stack calibration)
+        for dpu in PlatformId::DPUS {
+            assert!(
+                mean_service_s(RequestClass::Analytics, dpu)
+                    > mean_service_s(RequestClass::Analytics, HostEpyc),
+                "{dpu}"
+            );
+            assert!(
+                mean_service_s(RequestClass::NetRpc, dpu)
+                    > mean_service_s(RequestClass::NetRpc, HostEpyc),
+                "{dpu}"
+            );
+            // index gets follow the Fig. 14 per-thread calibration; only
+            // require a sane positive magnitude here
+            let s = mean_service_s(RequestClass::IndexGet, dpu);
+            assert!(s > 1e-7 && s < 1e-3, "{dpu}: {s}");
+        }
+    }
+
+    #[test]
+    fn analytics_tracks_sw_core_factor() {
+        let host = mean_service_s(RequestClass::Analytics, HostEpyc);
+        let bf2 = mean_service_s(RequestClass::Analytics, Bf2);
+        assert!((bf2 / host - 1.0 / 0.30).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_modes_behave() {
+        let mut rng = Pcg::new(3);
+        let mean = mean_service_s(RequestClass::NetRpc, Bf2);
+        assert_eq!(
+            sample_service_s(RequestClass::NetRpc, Bf2, ServiceJitter::None, &mut rng),
+            mean
+        );
+        // tail samples are >= 90% of the mean and average to ~mean
+        let n = 20_000;
+        let sum: f64 = (0..n)
+            .map(|_| sample_service_s(RequestClass::NetRpc, Bf2, ServiceJitter::Tail, &mut rng))
+            .sum();
+        let avg = sum / n as f64;
+        assert!((avg / mean - 1.0).abs() < 0.05, "{avg} vs {mean}");
+        let exp_sum: f64 = (0..n)
+            .map(|_| {
+                sample_service_s(RequestClass::NetRpc, Bf2, ServiceJitter::Exponential, &mut rng)
+            })
+            .sum();
+        assert!((exp_sum / n as f64 / mean - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn mix_sampling_tracks_weights() {
+        let mix = Mix::from_name("mixed").unwrap();
+        let mut rng = Pcg::new(9);
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            match mix.sample(&mut rng) {
+                RequestClass::Analytics => counts[0] += 1,
+                RequestClass::IndexGet => counts[1] += 1,
+                RequestClass::NetRpc => counts[2] += 1,
+            }
+        }
+        let frac = |c: usize| c as f64 / n as f64;
+        assert!((frac(counts[0]) - 0.2).abs() < 0.02, "{counts:?}");
+        assert!((frac(counts[1]) - 0.5).abs() < 0.02, "{counts:?}");
+        assert!((frac(counts[2]) - 0.3).abs() < 0.02, "{counts:?}");
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for c in RequestClass::ALL {
+            assert_eq!(RequestClass::from_name(c.name()), Some(c));
+            assert!(Mix::from_name(c.name()).is_some());
+        }
+        assert!(Mix::from_name("mixed").is_some());
+        assert!(Mix::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn mix_mean_is_weighted() {
+        let mix = Mix::new(vec![
+            (RequestClass::IndexGet, 1.0),
+            (RequestClass::NetRpc, 1.0),
+        ]);
+        let expect = 0.5
+            * (mean_service_s(RequestClass::IndexGet, Bf3)
+                + mean_service_s(RequestClass::NetRpc, Bf3));
+        assert!((mix.mean_service_s(Bf3) - expect).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,306 @@
+//! Placement scheduler: worker pools, per-core FIFO queues, and the
+//! pluggable routing policies that decide host vs DPU.
+//!
+//! A deployment has a host [`Pool`] and (on DPU platforms) a DPU [`Pool`].
+//! Each pool is a set of worker cores; every core owns a FIFO queue and
+//! serves one request at a time (non-preemptive). Within a pool, requests
+//! always join the least-loaded core (deterministic tie-break on index).
+//! Across pools, the [`Policy`] decides:
+//!
+//!  - `host-only` / `dpu-only` — static pinning (the paper's two
+//!    batch-benchmark configurations, now under load);
+//!  - `static-split` — a fixed fraction of requests to the DPU
+//!    (range-partition style, like Fig. 14's 10:1 index split);
+//!  - `queue-aware` — dynamic: join the pool with the smaller estimated
+//!    completion time (queue depth × mean service + service), which lets
+//!    the DPU absorb load until its wimpy cores saturate and then spills
+//!    to the host.
+
+use std::collections::VecDeque;
+
+use crate::platform::PlatformId;
+use crate::util::rng::Pcg;
+
+use super::request::RequestClass;
+
+/// Placement policy for incoming requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    HostOnly,
+    DpuOnly,
+    StaticSplit { dpu_fraction: f64 },
+    QueueAware,
+}
+
+impl Policy {
+    /// The canonical policy set a sweep covers.
+    pub const ALL: [Policy; 4] = [
+        Policy::HostOnly,
+        Policy::DpuOnly,
+        Policy::StaticSplit { dpu_fraction: 0.5 },
+        Policy::QueueAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::HostOnly => "host-only",
+            Policy::DpuOnly => "dpu-only",
+            Policy::StaticSplit { .. } => "static-split",
+            Policy::QueueAware => "queue-aware",
+        }
+    }
+
+    /// Parse a policy name (`static-split` defaults to a 50/50 split; the
+    /// serving task exposes a `dpu_fraction` parameter to change it).
+    pub fn from_name(s: &str) -> Option<Policy> {
+        Some(match s {
+            "host-only" | "host_only" | "host" => Policy::HostOnly,
+            "dpu-only" | "dpu_only" | "dpu" => Policy::DpuOnly,
+            "static-split" | "static_split" | "split" => {
+                Policy::StaticSplit { dpu_fraction: 0.5 }
+            }
+            "queue-aware" | "queue_aware" | "dynamic" => Policy::QueueAware,
+            _ => return None,
+        })
+    }
+}
+
+/// One admitted request.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub class: RequestClass,
+    /// Virtual arrival time (seconds).
+    pub arrived_s: f64,
+    /// Sampled service time on the pool that accepted it (seconds).
+    pub service_s: f64,
+}
+
+/// One worker core: the in-service request plus its FIFO backlog.
+#[derive(Debug, Default)]
+pub struct Core {
+    pub current: Option<Job>,
+    pub queue: VecDeque<Job>,
+}
+
+impl Core {
+    /// Requests on this core (in service + queued).
+    pub fn depth(&self) -> usize {
+        self.queue.len() + usize::from(self.current.is_some())
+    }
+}
+
+/// A worker pool on one platform.
+#[derive(Debug)]
+pub struct Pool {
+    pub platform: PlatformId,
+    pub cores: Vec<Core>,
+    /// Accumulated busy (service) seconds across all cores.
+    pub busy_s: f64,
+    /// Requests completed by this pool.
+    pub served: u64,
+}
+
+impl Pool {
+    pub fn new(platform: PlatformId, workers: u32) -> Pool {
+        Pool {
+            platform,
+            cores: (0..workers.max(1)).map(|_| Core::default()).collect(),
+            busy_s: 0.0,
+            served: 0,
+        }
+    }
+
+    /// Pool sized to the platform's schedulable threads (§4 testbed).
+    pub fn for_platform(p: PlatformId) -> Pool {
+        Pool::new(p, p.spec().max_threads)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Index of the least-loaded core; ties resolve to the lowest index so
+    /// routing is deterministic.
+    pub fn least_loaded_core(&self) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.cores.len() {
+            if self.cores[i].depth() < self.cores[best].depth() {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Requests currently in the pool (all cores, in service + queued).
+    pub fn backlog(&self) -> usize {
+        self.cores.iter().map(Core::depth).sum()
+    }
+
+    /// Estimated queueing wait if a request joined the best core now.
+    pub fn est_wait_s(&self, mean_service_s: f64) -> f64 {
+        self.cores[self.least_loaded_core()].depth() as f64 * mean_service_s
+    }
+}
+
+/// Routing decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolSel {
+    Host,
+    Dpu,
+}
+
+/// Pick the pool for one incoming request. `dpu` is `None` on a host-only
+/// deployment (every policy then degenerates to the host).
+pub fn route(
+    policy: Policy,
+    host: &Pool,
+    dpu: Option<&Pool>,
+    host_mean_s: f64,
+    dpu_mean_s: f64,
+    rng: &mut Pcg,
+) -> PoolSel {
+    if dpu.is_none() {
+        return PoolSel::Host;
+    }
+    match policy {
+        Policy::HostOnly => PoolSel::Host,
+        Policy::DpuOnly => PoolSel::Dpu,
+        Policy::StaticSplit { dpu_fraction } => {
+            if rng.f64() < dpu_fraction {
+                PoolSel::Dpu
+            } else {
+                PoolSel::Host
+            }
+        }
+        Policy::QueueAware => {
+            let d = dpu.expect("checked above");
+            let host_eta = host.est_wait_s(host_mean_s) + host_mean_s;
+            let dpu_eta = d.est_wait_s(dpu_mean_s) + dpu_mean_s;
+            // strict <: ties keep work on the host (beefy cores drain it
+            // faster if service estimates are off)
+            if dpu_eta < host_eta {
+                PoolSel::Dpu
+            } else {
+                PoolSel::Host
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::RequestClass::*;
+    use PlatformId::*;
+
+    fn job(svc: f64) -> Job {
+        Job {
+            class: IndexGet,
+            arrived_s: 0.0,
+            service_s: svc,
+        }
+    }
+
+    fn loaded_pool(p: PlatformId, workers: u32, depths: &[usize]) -> Pool {
+        let mut pool = Pool::new(p, workers);
+        for (i, &d) in depths.iter().enumerate() {
+            for k in 0..d {
+                if k == 0 {
+                    pool.cores[i].current = Some(job(1.0));
+                } else {
+                    pool.cores[i].queue.push_back(job(1.0));
+                }
+            }
+        }
+        pool
+    }
+
+    #[test]
+    fn least_loaded_prefers_lowest_index_on_ties() {
+        let pool = loaded_pool(HostEpyc, 4, &[2, 1, 1, 3]);
+        assert_eq!(pool.least_loaded_core(), 1);
+        let empty = Pool::new(HostEpyc, 4);
+        assert_eq!(empty.least_loaded_core(), 0);
+        assert_eq!(pool.backlog(), 7);
+    }
+
+    #[test]
+    fn static_policies_pin() {
+        let host = Pool::new(HostEpyc, 2);
+        let dpu = Pool::new(Bf2, 2);
+        let mut rng = crate::util::rng::Pcg::new(1);
+        assert_eq!(
+            route(Policy::HostOnly, &host, Some(&dpu), 1.0, 1.0, &mut rng),
+            PoolSel::Host
+        );
+        assert_eq!(
+            route(Policy::DpuOnly, &host, Some(&dpu), 1.0, 1.0, &mut rng),
+            PoolSel::Dpu
+        );
+        // without a DPU pool everything lands on the host
+        assert_eq!(
+            route(Policy::DpuOnly, &host, None, 1.0, 1.0, &mut rng),
+            PoolSel::Host
+        );
+    }
+
+    #[test]
+    fn static_split_tracks_fraction() {
+        let host = Pool::new(HostEpyc, 2);
+        let dpu = Pool::new(Bf2, 2);
+        let mut rng = crate::util::rng::Pcg::new(5);
+        let n = 20_000;
+        let to_dpu = (0..n)
+            .filter(|_| {
+                route(
+                    Policy::StaticSplit { dpu_fraction: 0.25 },
+                    &host,
+                    Some(&dpu),
+                    1.0,
+                    1.0,
+                    &mut rng,
+                ) == PoolSel::Dpu
+            })
+            .count();
+        let frac = to_dpu as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn queue_aware_balances_by_estimated_wait() {
+        let mut rng = crate::util::rng::Pcg::new(2);
+        // loaded host + idle dpu, equal service → go to dpu
+        let host = loaded_pool(HostEpyc, 2, &[3, 3]);
+        let dpu = Pool::new(Bf2, 2);
+        assert_eq!(
+            route(Policy::QueueAware, &host, Some(&dpu), 1.0, 1.0, &mut rng),
+            PoolSel::Dpu
+        );
+        // idle host + loaded dpu → host
+        let host2 = Pool::new(HostEpyc, 2);
+        let dpu2 = loaded_pool(Bf2, 2, &[2, 2]);
+        assert_eq!(
+            route(Policy::QueueAware, &host2, Some(&dpu2), 1.0, 1.0, &mut rng),
+            PoolSel::Host
+        );
+        // both idle but dpu service 3x slower → host (smaller ETA)
+        let dpu3 = Pool::new(Bf2, 2);
+        assert_eq!(
+            route(Policy::QueueAware, &host2, Some(&dpu3), 1.0, 3.0, &mut rng),
+            PoolSel::Host
+        );
+        // both idle, dpu faster for this mix → dpu
+        assert_eq!(
+            route(Policy::QueueAware, &host2, Some(&dpu3), 3.0, 1.0, &mut rng),
+            PoolSel::Dpu
+        );
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()).map(|q| q.name()), Some(p.name()));
+        }
+        assert_eq!(Policy::from_name("warp-speed"), None);
+    }
+}

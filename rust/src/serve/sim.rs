@@ -1,0 +1,393 @@
+//! The serving event loop: arrivals → placement → per-core FIFO service,
+//! driven through [`crate::sim::Engine`].
+//!
+//! Request lifecycle (DESIGN.md §7):
+//!
+//! ```text
+//!   load generator ──Arrive──▶ policy.route() ──▶ pool.least_loaded_core()
+//!        ▲                                            │
+//!        │ (closed loop: completion                   ├─ core idle → start
+//!        │  schedules the next request)               ├─ queue < cap → FIFO
+//!        │                                            └─ queue full → reject
+//!   Depart ◀── engine fires at start + service ◀──────┘
+//! ```
+//!
+//! Everything is deterministic under a fixed seed: the three RNG streams
+//! (arrivals, class sampling + routing, service jitter) are independent
+//! `Pcg` streams, the engine breaks ties FIFO, and in-pool core selection
+//! is deterministic.
+
+use crate::platform::PlatformId;
+use crate::sim::engine::Engine;
+use crate::util::rng::Pcg;
+
+use super::load::Arrivals;
+use super::request::{sample_service_s, Mix, ServiceJitter};
+use super::scheduler::{route, Job, Policy, Pool, PoolSel};
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// The DPU side of the deployment (`None` → host-only deployment;
+    /// every policy then degenerates to host placement).
+    pub dpu: Option<PlatformId>,
+    /// Host worker cores (default: the host's schedulable threads).
+    pub host_workers: u32,
+    /// DPU worker cores (default: the DPU's schedulable threads).
+    pub dpu_workers: u32,
+    pub policy: Policy,
+    pub mix: Mix,
+    pub arrivals: Arrivals,
+    pub jitter: ServiceJitter,
+    /// Total requests to generate.
+    pub total_requests: usize,
+    /// Per-core admission cap: a request arriving at a core whose FIFO
+    /// already holds this many queued requests is rejected.
+    pub queue_cap: usize,
+    /// Latency SLO (µs) used for the violation-rate metric.
+    pub slo_us: f64,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// A deployment serving `mix` under `policy`, with defaults for the
+    /// knobs a sweep rarely changes.
+    pub fn new(dpu: Option<PlatformId>, policy: Policy, mix: Mix, seed: u64) -> ServeConfig {
+        if let Some(p) = dpu {
+            assert!(p.is_dpu(), "dpu side of a deployment must be a DPU");
+        }
+        let host_workers = PlatformId::HostEpyc.spec().max_threads;
+        let dpu_workers = dpu.map(|p| p.spec().max_threads).unwrap_or(0);
+        let slo_us = 10.0 * mix.mean_service_s(PlatformId::HostEpyc) * 1e6;
+        ServeConfig {
+            dpu,
+            host_workers,
+            dpu_workers,
+            policy,
+            mix,
+            arrivals: Arrivals::OpenPoisson { rate_rps: 1000.0 },
+            jitter: ServiceJitter::Tail,
+            total_requests: 3000,
+            queue_cap: 64,
+            slo_us,
+            seed,
+        }
+    }
+}
+
+/// Raw outcome of one serving run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOutcome {
+    pub completed: u64,
+    pub rejected: u64,
+    /// Virtual time from first arrival to last completion (seconds).
+    pub elapsed_s: f64,
+    /// Per-request end-to-end latency (µs), completion order.
+    pub latencies_us: Vec<f64>,
+    /// Per-request queueing wait (µs), service-start order.
+    pub waits_us: Vec<f64>,
+    pub host_busy_s: f64,
+    pub dpu_busy_s: f64,
+    pub host_served: u64,
+    pub dpu_served: u64,
+}
+
+enum Ev {
+    Arrive,
+    Depart { dpu_side: bool, core: usize },
+}
+
+/// Run one serving simulation to completion.
+pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
+    let total = cfg.total_requests.max(1);
+    let mut rng_arrive = Pcg::with_stream(cfg.seed, 0x5e7_a001);
+    let mut rng_class = Pcg::with_stream(cfg.seed, 0x5e7_a002);
+    let mut rng_route = Pcg::with_stream(cfg.seed, 0x5e7_a003);
+    let mut rng_service = Pcg::with_stream(cfg.seed, 0x5e7_a004);
+
+    let mut host = Pool::new(PlatformId::HostEpyc, cfg.host_workers);
+    let mut dpu = cfg.dpu.map(|p| Pool::new(p, cfg.dpu_workers.max(1)));
+    let host_mean = cfg.mix.mean_service_s(host.platform);
+    let dpu_mean = dpu
+        .as_ref()
+        .map(|d| cfg.mix.mean_service_s(d.platform))
+        .unwrap_or(f64::INFINITY);
+
+    let mut eng: Engine<Ev> = Engine::new();
+    let mut issued = 0usize;
+    match cfg.arrivals {
+        Arrivals::ClosedLoop { clients, .. } => {
+            let k = (clients.max(1) as usize).min(total);
+            for _ in 0..k {
+                eng.schedule_in(0.0, Ev::Arrive);
+            }
+            issued = k;
+        }
+        _ => {
+            eng.schedule_in(0.0, Ev::Arrive);
+            issued = 1;
+        }
+    }
+
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    let mut latencies_us = Vec::with_capacity(total);
+    let mut waits_us = Vec::with_capacity(total);
+
+    while let Some((now, ev)) = eng.next_event() {
+        match ev {
+            Ev::Arrive => {
+                // open loop: keep the arrival stream going
+                if cfg.arrivals.is_open() && issued < total {
+                    let gap = cfg.arrivals.sample_gap_s(&mut rng_arrive);
+                    eng.schedule_in(gap, Ev::Arrive);
+                    issued += 1;
+                }
+
+                let class = cfg.mix.sample(&mut rng_class);
+                let sel = route(
+                    cfg.policy,
+                    &host,
+                    dpu.as_ref(),
+                    host_mean,
+                    dpu_mean,
+                    &mut rng_route,
+                );
+                let dpu_side = sel == PoolSel::Dpu;
+                let pool = if dpu_side {
+                    dpu.as_mut().expect("router never picks an absent pool")
+                } else {
+                    &mut host
+                };
+                let service = sample_service_s(class, pool.platform, cfg.jitter, &mut rng_service);
+                let ci = pool.least_loaded_core();
+                let job = Job {
+                    class,
+                    arrived_s: now,
+                    service_s: service,
+                };
+                if pool.cores[ci].current.is_none() {
+                    pool.busy_s += service;
+                    pool.cores[ci].current = Some(job);
+                    waits_us.push(0.0);
+                    eng.schedule_in(service, Ev::Depart { dpu_side, core: ci });
+                } else if pool.cores[ci].queue.len() >= cfg.queue_cap {
+                    // admission control: shed rather than queue unboundedly
+                    rejected += 1;
+                    // closed loop: rejection completes the client's request
+                    // cycle too — it thinks, then issues the next one (the
+                    // client population must not shrink on rejection)
+                    if let Arrivals::ClosedLoop { think_s, .. } = cfg.arrivals {
+                        if issued < total {
+                            eng.schedule_in(think_s.max(0.0), Ev::Arrive);
+                            issued += 1;
+                        }
+                    }
+                } else {
+                    pool.cores[ci].queue.push_back(job);
+                }
+            }
+            Ev::Depart { dpu_side, core: ci } => {
+                let pool = if dpu_side {
+                    dpu.as_mut().expect("departure from an absent pool")
+                } else {
+                    &mut host
+                };
+                let done = pool.cores[ci]
+                    .current
+                    .take()
+                    .expect("departure from an idle core");
+                latencies_us.push((now - done.arrived_s) * 1e6);
+                pool.served += 1;
+                completed += 1;
+                if let Some(next) = pool.cores[ci].queue.pop_front() {
+                    waits_us.push((now - next.arrived_s) * 1e6);
+                    pool.busy_s += next.service_s;
+                    let svc = next.service_s;
+                    pool.cores[ci].current = Some(next);
+                    eng.schedule_in(svc, Ev::Depart { dpu_side, core: ci });
+                }
+                // closed loop: the client thinks, then issues its next request
+                if let Arrivals::ClosedLoop { think_s, .. } = cfg.arrivals {
+                    if issued < total {
+                        eng.schedule_in(think_s.max(0.0), Ev::Arrive);
+                        issued += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    debug_assert_eq!(completed + rejected, issued as u64);
+    ServeOutcome {
+        completed,
+        rejected,
+        elapsed_s: eng.now().max(f64::MIN_POSITIVE),
+        latencies_us,
+        waits_us,
+        host_busy_s: host.busy_s,
+        dpu_busy_s: dpu.as_ref().map(|d| d.busy_s).unwrap_or(0.0),
+        host_served: host.served,
+        dpu_served: dpu.as_ref().map(|d| d.served).unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::{mean_service_s, RequestClass};
+
+    fn single_core_cfg(rate_rps: f64, jitter: ServiceJitter) -> ServeConfig {
+        let mut cfg = ServeConfig::new(
+            None,
+            Policy::HostOnly,
+            Mix::single(RequestClass::IndexGet),
+            1,
+        );
+        cfg.host_workers = 1;
+        cfg.arrivals = Arrivals::Paced { rate_rps };
+        cfg.jitter = jitter;
+        cfg.queue_cap = usize::MAX;
+        cfg
+    }
+
+    #[test]
+    fn fifo_wait_accounting_matches_lindley_recursion() {
+        // single worker, deterministic service s, paced arrivals every d<s:
+        // W_i = i*(s-d), latency_i = s + i*(s-d)  (Lindley recursion).
+        let s = mean_service_s(RequestClass::IndexGet, PlatformId::HostEpyc);
+        let d = 0.6 * s;
+        let mut cfg = single_core_cfg(1.0 / d, ServiceJitter::None);
+        cfg.total_requests = 12;
+        let out = run_serve(&cfg);
+        assert_eq!(out.completed, 12);
+        assert_eq!(out.rejected, 0);
+        for (i, lat) in out.latencies_us.iter().enumerate() {
+            let expect_us = (s + i as f64 * (s - d)) * 1e6;
+            assert!(
+                (lat - expect_us).abs() < 1e-6,
+                "req {i}: {lat} vs {expect_us}"
+            );
+        }
+        // waits are the latencies minus one service time
+        for (i, w) in out.waits_us.iter().enumerate() {
+            let expect_us = (i as f64 * (s - d)) * 1e6;
+            assert!((w - expect_us).abs() < 1e-6, "req {i}: {w} vs {expect_us}");
+        }
+    }
+
+    #[test]
+    fn mm1_mean_latency_matches_theory_at_half_utilization() {
+        // M/M/1 at rho = 0.5: E[T] = s / (1 - rho) = 2s.
+        let s = mean_service_s(RequestClass::IndexGet, PlatformId::HostEpyc);
+        let mut cfg = single_core_cfg(0.5 / s, ServiceJitter::Exponential);
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 0.5 / s };
+        cfg.total_requests = 30_000;
+        let out = run_serve(&cfg);
+        assert_eq!(out.rejected, 0);
+        let mean_s =
+            out.latencies_us.iter().sum::<f64>() / out.latencies_us.len() as f64 / 1e6;
+        let theory = 2.0 * s;
+        assert!(
+            (mean_s / theory - 1.0).abs() < 0.2,
+            "simulated {mean_s} vs M/M/1 {theory}"
+        );
+    }
+
+    #[test]
+    fn admission_control_sheds_overload() {
+        let s = mean_service_s(RequestClass::IndexGet, PlatformId::HostEpyc);
+        let mut cfg = single_core_cfg(4.0 / s, ServiceJitter::None); // 4x capacity
+        cfg.queue_cap = 4;
+        cfg.total_requests = 2000;
+        let out = run_serve(&cfg);
+        assert!(out.rejected > 1000, "rejected {}", out.rejected);
+        assert_eq!(out.completed + out.rejected, 2000);
+        // admitted latency is bounded by the queue cap
+        let max_lat = out.latencies_us.iter().cloned().fold(0.0, f64::max);
+        assert!(max_lat <= (cfg.queue_cap as f64 + 2.0) * s * 1e6);
+    }
+
+    #[test]
+    fn closed_loop_obeys_littles_law() {
+        // closed loop, zero think time: concurrency = clients, so
+        // throughput * mean latency ≈ clients.
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf3),
+            Policy::QueueAware,
+            Mix::single(RequestClass::NetRpc),
+            7,
+        );
+        cfg.arrivals = Arrivals::ClosedLoop {
+            clients: 32,
+            think_s: 0.0,
+        };
+        cfg.total_requests = 20_000;
+        let out = run_serve(&cfg);
+        assert_eq!(out.rejected, 0);
+        let tput = out.completed as f64 / out.elapsed_s;
+        let mean_lat_s =
+            out.latencies_us.iter().sum::<f64>() / out.latencies_us.len() as f64 / 1e6;
+        let l = tput * mean_lat_s;
+        assert!((l - 32.0).abs() / 32.0 < 0.15, "L = {l}");
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            Policy::QueueAware,
+            Mix::from_name("mixed").unwrap(),
+            42,
+        );
+        cfg.total_requests = 2000;
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 20_000.0 };
+        let a = run_serve(&cfg);
+        let b = run_serve(&cfg);
+        assert_eq!(a, b);
+        // a different seed produces a different sample path
+        cfg.seed = 43;
+        let c = run_serve(&cfg);
+        assert_ne!(a.latencies_us, c.latencies_us);
+    }
+
+    #[test]
+    fn dpu_only_routes_everything_to_the_dpu() {
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            Policy::DpuOnly,
+            Mix::single(RequestClass::NetRpc),
+            5,
+        );
+        cfg.total_requests = 1000;
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 50_000.0 };
+        let out = run_serve(&cfg);
+        assert_eq!(out.host_served, 0);
+        assert!(out.dpu_served > 0);
+        assert_eq!(out.host_busy_s, 0.0);
+    }
+
+    #[test]
+    fn queue_aware_uses_both_pools_under_pressure() {
+        // IndexGet is the class where the Fig. 14 calibration makes a DPU
+        // core attractive per-request, so queue-aware sends traffic to the
+        // idle DPU first, then spills to the host as the 16 wimpy cores
+        // queue up — twice the DPU's lone capacity forces both pools into
+        // play while staying far below the combined capacity.
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf3),
+            Policy::QueueAware,
+            Mix::single(RequestClass::IndexGet),
+            11,
+        );
+        cfg.total_requests = 5000;
+        let dpu_cap = cfg.dpu_workers as f64
+            / mean_service_s(RequestClass::IndexGet, PlatformId::Bf3);
+        cfg.arrivals = Arrivals::OpenPoisson {
+            rate_rps: 2.0 * dpu_cap,
+        };
+        let out = run_serve(&cfg);
+        assert!(out.host_served > 0 && out.dpu_served > 0, "{out:?}");
+        assert_eq!(out.rejected, 0, "queue-aware should absorb 2x dpu load");
+    }
+}

@@ -1,0 +1,290 @@
+//! The `serving` coordinator task: the serve subsystem behind the
+//! standard dpBento task abstraction, so boxes can sweep
+//! policy × workload × offered load × platform through the same
+//! cross-product machinery as every other benchmark (and `dpbento serve`
+//! gives it a first-class CLI).
+//!
+//! The box `platforms` list selects the DPU side of the deployment: on a
+//! DPU platform the deployment is host + that DPU; on `host` the
+//! deployment has no DPU and every policy degenerates to host-only (the
+//! baseline column).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::util::json::Value;
+
+use super::load::Arrivals;
+use super::metrics::{host_only_capacity_rps, point};
+use super::request::Mix;
+use super::scheduler::Policy;
+use super::sim::{run_serve, ServeConfig};
+
+pub struct ServingTask;
+
+impl Task for ServingTask {
+    fn name(&self) -> &'static str {
+        "serving"
+    }
+    fn description(&self) -> &'static str {
+        "multi-tenant offload serving: load generator + placement scheduler -> throughput/latency"
+    }
+    fn params(&self) -> Vec<ParamDef> {
+        vec![
+            ParamDef::new(
+                "policy",
+                "host-only | dpu-only | static-split | queue-aware placement",
+                "[\"host-only\", \"queue-aware\"]",
+            ),
+            ParamDef::new(
+                "workload",
+                "analytics | index_get | net_rpc | mixed request mix",
+                "[\"mixed\"]",
+            ),
+            ParamDef::new(
+                "load",
+                "offered load as a fraction of the host-only capacity",
+                "[0.2, 0.5, 0.8]",
+            ),
+            ParamDef::new("offered_rps", "absolute offered load (overrides 'load')", "50000"),
+            ParamDef::new("mode", "open (Poisson) | closed (fixed clients)", "\"open\""),
+            ParamDef::new("clients", "closed-loop client count", "64"),
+            ParamDef::new("think_us", "closed-loop think time (µs)", "0"),
+            ParamDef::new("requests", "requests per test", "3000"),
+            ParamDef::new("slo_us", "latency SLO (µs; default 10x host mean service)", "200"),
+            ParamDef::new("queue_cap", "per-core admission queue cap", "64"),
+            ParamDef::new("dpu_fraction", "static-split DPU share", "0.5"),
+        ]
+    }
+    fn metrics(&self) -> Vec<&'static str> {
+        vec![
+            "offered_rps",
+            "achieved_rps",
+            "mean_lat_us",
+            "p95_lat_us",
+            "p99_lat_us",
+            "slo_violation_rate",
+            "rejected_frac",
+            "host_busy_frac",
+            "dpu_busy_frac",
+            "host_cpu_us_per_req",
+        ]
+    }
+    fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        ctx.log(format!(
+            "serving: deployment host{}",
+            if ctx.platform.is_dpu() {
+                format!(" + {}", ctx.platform)
+            } else {
+                " only (no DPU side)".to_string()
+            }
+        ));
+        Ok(())
+    }
+    fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
+        let policy_name = test.str_or("policy", "queue-aware");
+        let mut policy = Policy::from_name(policy_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
+        if let Policy::StaticSplit { .. } = policy {
+            let f = test.f64_or("dpu_fraction", 0.5);
+            anyhow::ensure!((0.0..=1.0).contains(&f), "dpu_fraction must be in [0,1]");
+            policy = Policy::StaticSplit { dpu_fraction: f };
+        }
+        let workload = test.str_or("workload", "mixed");
+        let mix = Mix::from_name(workload)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}'"))?;
+        let requests = test.usize_or("requests", 3000);
+        anyhow::ensure!(
+            (1..=2_000_000).contains(&requests),
+            "requests out of range"
+        );
+
+        let dpu = if ctx.platform.is_dpu() {
+            Some(ctx.platform)
+        } else {
+            None
+        };
+        let mut cfg = ServeConfig::new(dpu, policy, mix, ctx.seed);
+        cfg.total_requests = requests;
+        cfg.queue_cap = test.usize_or("queue_cap", 64).max(1);
+        if let Some(slo) = test.get("slo_us").and_then(Value::as_f64) {
+            anyhow::ensure!(slo > 0.0, "slo_us must be positive");
+            cfg.slo_us = slo;
+        }
+
+        // offered load: absolute, or relative to the host-only capacity so
+        // boxes stay meaningful across workloads
+        let host_only_cap = host_only_capacity_rps(&cfg);
+        let load_frac = test.f64_or("load", 0.5);
+        anyhow::ensure!(load_frac > 0.0, "load must be positive");
+        let offered = match test.get("offered_rps").and_then(Value::as_f64) {
+            Some(r) => {
+                anyhow::ensure!(r > 0.0, "offered_rps must be positive");
+                r
+            }
+            None => load_frac * host_only_cap,
+        };
+
+        let mode = test.str_or("mode", "open");
+        cfg.arrivals = match mode {
+            "open" => Arrivals::OpenPoisson { rate_rps: offered },
+            "closed" => Arrivals::ClosedLoop {
+                clients: test.usize_or("clients", 64).max(1) as u32,
+                think_s: test.f64_or("think_us", 0.0).max(0.0) * 1e-6,
+            },
+            m => anyhow::bail!("mode must be open|closed, got '{m}'"),
+        };
+
+        let out = run_serve(&cfg);
+        let p = point(&cfg, offered, &out);
+        ctx.log(format!(
+            "serving[{}] {} {} load={:.2}: {:.0}/s achieved, mean {:.1}us, p99 {:.1}us, slo_viol {:.3}",
+            ctx.platform,
+            cfg.policy.name(),
+            workload,
+            offered / host_only_cap,
+            p.achieved_rps,
+            p.mean_us,
+            p.p99_us,
+            p.slo_violation_rate,
+        ));
+
+        Ok(BTreeMap::from([
+            ("offered_rps".to_string(), p.offered_rps),
+            ("achieved_rps".to_string(), p.achieved_rps),
+            ("mean_lat_us".to_string(), p.mean_us),
+            ("p95_lat_us".to_string(), p.p95_us),
+            ("p99_lat_us".to_string(), p.p99_us),
+            ("slo_violation_rate".to_string(), p.slo_violation_rate),
+            ("rejected_frac".to_string(), p.rejected_frac),
+            ("host_busy_frac".to_string(), p.host_busy_frac),
+            ("dpu_busy_frac".to_string(), p.dpu_busy_frac),
+            ("host_cpu_us_per_req".to_string(), p.host_cpu_us_per_req),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformId;
+
+    fn spec(pairs: &[(&str, Value)]) -> TestSpec {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect()
+    }
+
+    fn run_one(p: PlatformId, pairs: &[(&str, Value)]) -> TestResult {
+        let t = ServingTask;
+        let mut ctx = TaskContext::new(p, 42);
+        t.prepare(&mut ctx).unwrap();
+        t.run(&mut ctx, &spec(pairs)).unwrap()
+    }
+
+    #[test]
+    fn low_load_serves_at_service_latency() {
+        let r = run_one(
+            PlatformId::Bf3,
+            &[
+                ("policy", Value::str("queue-aware")),
+                ("workload", Value::str("net_rpc")),
+                ("load", Value::Num(0.2)),
+                ("requests", Value::Num(1500.0)),
+            ],
+        );
+        assert!(r["achieved_rps"] > 0.0);
+        assert_eq!(r["rejected_frac"], 0.0);
+        assert!(r["mean_lat_us"] < 50.0, "{}", r["mean_lat_us"]);
+        assert!(r["p99_lat_us"] >= r["p95_lat_us"]);
+    }
+
+    #[test]
+    fn dpu_only_overloads_where_queue_aware_does_not() {
+        let args = |policy: &str| {
+            vec![
+                ("policy".to_string(), Value::str(policy)),
+                ("workload".to_string(), Value::str("mixed")),
+                ("load".to_string(), Value::Num(0.5)),
+                ("requests".to_string(), Value::Num(3000.0)),
+            ]
+        };
+        let t = ServingTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 42);
+        t.prepare(&mut ctx).unwrap();
+        let dpu_only = t
+            .run(&mut ctx, &args("dpu-only").into_iter().collect())
+            .unwrap();
+        let qa = t
+            .run(&mut ctx, &args("queue-aware").into_iter().collect())
+            .unwrap();
+        // half the *host* capacity swamps the BF-2 pool outright
+        assert!(dpu_only["slo_violation_rate"] > 0.5, "{dpu_only:?}");
+        assert!(qa["slo_violation_rate"] < 0.2, "{qa:?}");
+        assert!(qa["achieved_rps"] > 2.0 * dpu_only["achieved_rps"]);
+    }
+
+    #[test]
+    fn host_platform_is_a_degenerate_deployment() {
+        let r = run_one(
+            PlatformId::HostEpyc,
+            &[
+                ("policy", Value::str("dpu-only")),
+                ("workload", Value::str("index_get")),
+                ("load", Value::Num(0.3)),
+                ("requests", Value::Num(1500.0)),
+            ],
+        );
+        assert_eq!(r["dpu_busy_frac"], 0.0);
+        assert!(r["host_busy_frac"] > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_mode_runs() {
+        let r = run_one(
+            PlatformId::Bf3,
+            &[
+                ("mode", Value::str("closed")),
+                ("clients", Value::Num(16.0)),
+                ("workload", Value::str("net_rpc")),
+                ("requests", Value::Num(2000.0)),
+            ],
+        );
+        assert!(r["achieved_rps"] > 0.0);
+        assert_eq!(r["rejected_frac"], 0.0);
+    }
+
+    #[test]
+    fn bad_params_rejected() {
+        let t = ServingTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        assert!(t
+            .run(&mut ctx, &spec(&[("policy", Value::str("psychic"))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("workload", Value::str("nope"))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("mode", Value::str("sideways"))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("requests", Value::Num(0.0))]))
+            .is_err());
+    }
+
+    #[test]
+    fn deterministic_through_the_task_interface() {
+        let args = [
+            ("policy", Value::str("static-split")),
+            ("workload", Value::str("mixed")),
+            ("load", Value::Num(0.6)),
+            ("requests", Value::Num(2000.0)),
+        ];
+        let a = run_one(PlatformId::Bf3, &args);
+        let b = run_one(PlatformId::Bf3, &args);
+        assert_eq!(a, b);
+    }
+}

@@ -31,11 +31,14 @@ impl<T> PartialOrd for Event<T> {
 }
 impl<T> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
+        // BinaryHeap is a max-heap; invert for earliest-first. total_cmp
+        // keeps the order total even for non-finite times (a NaN would
+        // otherwise compare Equal to everything and silently corrupt the
+        // heap invariant); `schedule_at` rejects non-finite times up front
+        // in debug builds.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -81,8 +84,11 @@ impl<T> Engine<T> {
         self.schedule_at(self.now + delay, payload);
     }
 
-    /// Schedule `payload` at absolute time `time` (must not be in the past).
+    /// Schedule `payload` at absolute time `time` (must be finite and not
+    /// in the past). A NaN or infinite time is a model bug — caught here
+    /// in debug builds rather than surfacing as misordered events.
     pub fn schedule_at(&mut self, time: SimTime, payload: T) {
+        debug_assert!(time.is_finite(), "non-finite event time {time}");
         debug_assert!(time >= self.now, "schedule into the past");
         self.seq += 1;
         self.heap.push(Event {
@@ -152,6 +158,48 @@ mod tests {
             }
         }
         assert!(count > 10);
+    }
+
+    #[test]
+    fn comparator_is_total_even_for_nan_times() {
+        // Direct comparator check: a NaN time must order consistently
+        // (antisymmetric, reflexive-equal) instead of collapsing to Equal
+        // against everything, so a release-build heap stays a heap.
+        let a = Event {
+            time: f64::NAN,
+            seq: 1,
+            payload: (),
+        };
+        let b = Event {
+            time: 1.0,
+            seq: 2,
+            payload: (),
+        };
+        assert_eq!(a.cmp(&b), b.cmp(&a).reverse());
+        assert_eq!(a.cmp(&a), Ordering::Equal);
+        // equal times still tie-break FIFO by sequence
+        let c = Event {
+            time: 1.0,
+            seq: 3,
+            payload: (),
+        };
+        assert_eq!(b.cmp(&c), Ordering::Greater); // lower seq pops first
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_schedule_rejected_in_debug() {
+        let mut e = Engine::new();
+        e.schedule_at(f64::NAN, 0u32);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_schedule_rejected_in_debug() {
+        let mut e = Engine::new();
+        e.schedule_in(f64::INFINITY, 0u32);
     }
 
     #[test]

@@ -39,6 +39,7 @@ fn list_tasks_covers_table1() {
         "pred_pushdown",
         "index_offload",
         "dbms",
+        "serving",
         "compression",
         "decompression",
         "regex",
@@ -122,5 +123,49 @@ fn sample_shell_plugin_loads_and_runs() {
 fn clean_command_reports_tasks() {
     let o = dpbento(&["clean", "--platform", "bf3"]);
     assert!(o.status.success());
-    assert!(stdout(&o).contains("cleaned 11 tasks on bf3"));
+    assert!(stdout(&o).contains("cleaned 12 tasks on bf3"));
+}
+
+#[test]
+fn serve_command_prints_deterministic_sweep() {
+    let args = [
+        "serve",
+        "--platforms",
+        "bf2",
+        "--policy",
+        "all",
+        "--workload",
+        "mixed",
+        "--loads",
+        "0.3,0.8",
+        "--requests",
+        "400",
+        "--seed",
+        "7",
+    ];
+    let a = dpbento(&args);
+    assert!(
+        a.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let s = stdout(&a);
+    // one table per policy, with the throughput-latency columns
+    for policy in ["host-only", "dpu-only", "static-split", "queue-aware"] {
+        assert!(s.contains(policy), "missing table for {policy}");
+    }
+    assert!(s.contains("offered/s"));
+    assert!(s.contains("p99_us"));
+    // fixed seed → byte-identical report
+    let b = dpbento(&args);
+    assert_eq!(s, stdout(&b));
+}
+
+#[test]
+fn serve_command_rejects_bad_arguments() {
+    let o = dpbento(&["serve", "--policy", "warp"]);
+    assert!(!o.status.success());
+    assert!(String::from_utf8_lossy(&o.stderr).contains("unknown policy"));
+    let p = dpbento(&["serve", "--platforms", "vax"]);
+    assert!(!p.status.success());
 }

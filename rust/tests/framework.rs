@@ -68,6 +68,7 @@ fn every_builtin_task_runs_with_defaults_on_every_platform() {
             "pred_pushdown",
             "index_offload",
             "dbms",
+            "serving",
             "rdma",
         ] {
             let cfg = BoxConfig::parse(&format!(
@@ -80,6 +81,7 @@ fn every_builtin_task_runs_with_defaults_on_every_platform() {
                     "pred_pushdown" => r#"{"scale": [0.1], "engine": ["native"]}"#,
                     "dbms" => r#"{"scale": [0.5], "query": ["q6"]}"#,
                     "index_offload" => r#"{"record_count": [200000]}"#,
+                    "serving" => r#"{"requests": [500]}"#,
                     _ => "{}",
                 }
             ))

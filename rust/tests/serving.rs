@@ -1,0 +1,196 @@
+//! Integration tests for the serving subsystem: determinism under fixed
+//! seeds, sane queueing behaviour (latency monotone in offered load), the
+//! headline saturation ordering (dpu-only saturates before host-only),
+//! and the coordinator surface (`serving` task boxes).
+
+use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
+use dpbento::platform::PlatformId;
+use dpbento::serve::{
+    capacity_rps, host_only_capacity_rps, run_serve, sweep, Arrivals, Mix, Policy, ServeConfig,
+};
+
+fn base_cfg(dpu: PlatformId, policy: Policy, workload: &str, seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::new(
+        Some(dpu),
+        policy,
+        Mix::from_name(workload).expect("known workload"),
+        seed,
+    );
+    cfg.total_requests = 4000;
+    cfg
+}
+
+#[test]
+fn sweep_is_deterministic_under_fixed_seed() {
+    for policy in Policy::ALL {
+        let cfg = base_cfg(PlatformId::Bf2, policy, "mixed", 42);
+        let host_cap = host_only_capacity_rps(&cfg);
+        let rates = [0.3 * host_cap, 0.9 * host_cap];
+        let a = sweep(&cfg, &rates);
+        let b = sweep(&cfg, &rates);
+        assert_eq!(a, b, "{} sweep must be bit-stable", policy.name());
+    }
+}
+
+#[test]
+fn latency_monotone_nondecreasing_in_offered_load() {
+    // Host-only keeps the service-time sample path identical across
+    // offered loads (same rng streams, same platform), so queueing is the
+    // only thing that changes: mean latency must rise with offered load.
+    let cfg = base_cfg(PlatformId::Bf3, Policy::HostOnly, "mixed", 7);
+    let cap = capacity_rps(&cfg);
+    let rates: Vec<f64> = [0.2, 0.4, 0.6, 0.8, 0.95, 1.1, 1.3]
+        .iter()
+        .map(|l| l * cap)
+        .collect();
+    let points = sweep(&cfg, &rates);
+    for w in points.windows(2) {
+        assert!(
+            w[1].mean_us >= w[0].mean_us * 0.98,
+            "mean latency dipped: {} -> {} ({}/s -> {}/s)",
+            w[0].mean_us,
+            w[1].mean_us,
+            w[0].offered_rps,
+            w[1].offered_rps
+        );
+    }
+    // and the rise is real: past the knee the queueing term dominates
+    assert!(
+        points.last().unwrap().mean_us > 2.0 * points[0].mean_us,
+        "saturation should inflate latency: {points:?}"
+    );
+}
+
+#[test]
+fn dpu_only_saturates_at_lower_offered_load_than_host_only() {
+    for dpu in [PlatformId::Bf2, PlatformId::Bf3] {
+        let dpu_cfg = base_cfg(dpu, Policy::DpuOnly, "mixed", 21);
+        let host_cfg = base_cfg(dpu, Policy::HostOnly, "mixed", 21);
+        // analytically: the knee of dpu-only sits far below host-only
+        let dpu_cap = capacity_rps(&dpu_cfg);
+        let host_cap = capacity_rps(&host_cfg);
+        assert!(
+            dpu_cap < 0.5 * host_cap,
+            "{dpu}: dpu cap {dpu_cap} vs host cap {host_cap}"
+        );
+
+        // empirically: at a load several times the DPU knee but well below
+        // the host knee, dpu-only collapses while host-only keeps up
+        let rate = (3.0 * dpu_cap).min(0.5 * host_cap);
+        let dpu_pt = sweep(&dpu_cfg, &[rate])[0].clone();
+        let host_pt = sweep(&host_cfg, &[rate])[0].clone();
+        assert!(
+            host_pt.achieved_rps > 1.5 * dpu_pt.achieved_rps,
+            "{dpu}: host {} vs dpu {}",
+            host_pt.achieved_rps,
+            dpu_pt.achieved_rps
+        );
+        assert!(
+            dpu_pt.slo_violation_rate > host_pt.slo_violation_rate + 0.2,
+            "{dpu}: slo {} vs {}",
+            dpu_pt.slo_violation_rate,
+            host_pt.slo_violation_rate
+        );
+        assert!(dpu_pt.rejected_frac > 0.0, "{dpu}: overload must shed load");
+    }
+}
+
+#[test]
+fn queue_aware_frees_host_cpu_without_collapsing() {
+    // At moderate load on an index-get workload the queue-aware policy
+    // offloads a real share of requests to the DPU, spending less host CPU
+    // per request than host-only at the same offered load.
+    let qa = base_cfg(PlatformId::Bf3, Policy::QueueAware, "index_get", 9);
+    let host_only = base_cfg(PlatformId::Bf3, Policy::HostOnly, "index_get", 9);
+    let rate = 0.5 * capacity_rps(&host_only);
+    let qa_pt = sweep(&qa, &[rate])[0].clone();
+    let host_pt = sweep(&host_only, &[rate])[0].clone();
+    assert_eq!(qa_pt.rejected_frac, 0.0);
+    assert!(qa_pt.dpu_busy_frac > 0.0, "{qa_pt:?}");
+    assert!(
+        qa_pt.host_cpu_us_per_req < host_pt.host_cpu_us_per_req,
+        "queue-aware should free host CPU: {} vs {}",
+        qa_pt.host_cpu_us_per_req,
+        host_pt.host_cpu_us_per_req
+    );
+}
+
+#[test]
+fn closed_loop_throughput_scales_with_clients_until_saturation() {
+    let mut cfg = base_cfg(PlatformId::Bf2, Policy::DpuOnly, "net_rpc", 3);
+    cfg.total_requests = 8000;
+    let tput = |clients: u32| {
+        let mut c = cfg.clone();
+        c.arrivals = Arrivals::ClosedLoop {
+            clients,
+            think_s: 0.0,
+        };
+        let out = run_serve(&c);
+        out.completed as f64 / out.elapsed_s
+    };
+    let t1 = tput(1);
+    let t4 = tput(4);
+    let t8 = tput(8);
+    let t32 = tput(32);
+    assert!(t4 > 2.5 * t1, "t1={t1} t4={t4}");
+    assert!(t8 > 1.5 * t4, "t4={t4} t8={t8}");
+    // 8 BF-2 cores: beyond 8 clients throughput is pinned at saturation
+    assert!((t32 / t8 - 1.0).abs() < 0.1, "t8={t8} t32={t32}");
+}
+
+#[test]
+fn serving_boxes_cover_policies_classes_platforms_deterministically() {
+    // the acceptance matrix: 4 policies x 2 request classes x 2 DPU
+    // platforms (+ host baseline), through the coordinator cross-product
+    let box_json = r#"{
+      "name": "serving_matrix",
+      "platforms": ["bf2", "bf3", "host"],
+      "seed": 1234,
+      "tasks": [{
+        "task": "serving",
+        "params": {
+          "policy": ["host-only", "dpu-only", "static-split", "queue-aware"],
+          "workload": ["index_get", "net_rpc"],
+          "load": [0.4],
+          "requests": [800]
+        },
+        "metrics": ["offered_rps", "achieved_rps", "mean_lat_us", "p99_lat_us",
+                     "slo_violation_rate", "host_busy_frac", "dpu_busy_frac"]
+      }]
+    }"#;
+    let cfg = BoxConfig::parse(box_json).unwrap();
+    let registry = Registry::builtin();
+    let a = run_box(&registry, &cfg, &ExecOptions::default()).unwrap();
+    assert_eq!(a.failure_count(), 0, "{}", a.render());
+    // 3 platforms x (4 policies x 2 workloads) records
+    assert_eq!(a.tasks.len(), 3);
+    for t in &a.tasks {
+        assert_eq!(t.records.len(), 8, "{}", t.platform);
+        for rec in &t.records {
+            assert!(rec.result["achieved_rps"] > 0.0);
+            assert!(rec.result["mean_lat_us"] > 0.0);
+        }
+    }
+    // deterministic end to end (JSON report is byte-identical)
+    let b = run_box(&registry, &cfg, &ExecOptions::default()).unwrap();
+    assert_eq!(a.to_json().to_compact(), b.to_json().to_compact());
+
+    // the parallel executor path produces the same records in the same order
+    let par = run_box(
+        &registry,
+        &cfg,
+        &ExecOptions {
+            parallel: true,
+            ..ExecOptions::default()
+        },
+    )
+    .unwrap();
+    let strip_logs = |r: &dpbento::coordinator::BoxReport| {
+        r.tasks
+            .iter()
+            .flat_map(|t| t.records.iter())
+            .map(|rec| format!("{:?}{:?}", rec.spec, rec.result))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(strip_logs(&a), strip_logs(&par));
+}

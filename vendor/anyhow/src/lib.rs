@@ -1,0 +1,242 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access (DESIGN.md §8), so this
+//! vendored crate reimplements the small `anyhow` surface dpBento uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics match upstream where dpBento relies on them:
+//!  - `Display` shows the outermost context message only;
+//!  - alternate `Display` (`{:#}`) shows the whole chain joined by `": "`;
+//!  - `?` converts any `std::error::Error + Send + Sync + 'static`;
+//!  - `.context(..)` / `.with_context(..)` wrap errors (and turn `None`
+//!    into an error).
+
+use std::fmt::{self, Debug, Display};
+
+/// An error chain: `chain[0]` is the outermost (most recently attached)
+/// context message, later entries are the causes.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — the crate-standard fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a single printable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        for cause in &self.chain[1..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`; that
+// keeps the blanket `From` below coherent (same trick as upstream anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Private extension unifying "attach context" over both std errors and
+/// [`Error`] itself (the same architecture upstream anyhow uses, which
+/// keeps a single `Context` impl for `Result` and so avoids any method
+/// resolution ambiguity).
+mod ext {
+    use super::*;
+
+    pub trait StdError {
+        fn ext_context(self, context: String) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context(self, context: String) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    // Coherent with the blanket impl above because `Error` does not
+    // implement std::error::Error.
+    impl StdError for Error {
+        fn ext_context(self, context: String) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.ext_context(context.to_string()))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::Error::msg(format!($($arg)+)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)+)));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading config")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn option_context_makes_error() {
+        let e = None::<u32>.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative x: {x}");
+            ensure!(x != 1);
+            if x == 2 {
+                bail!("two is right out");
+            }
+            Ok(x)
+        }
+        assert!(fails(-1).unwrap_err().to_string().contains("negative x"));
+        assert!(fails(1).unwrap_err().to_string().contains("condition failed"));
+        assert!(fails(2).unwrap_err().to_string().contains("right out"));
+        assert_eq!(fails(3).unwrap(), 3);
+        let e = anyhow!("ad-hoc {}", 7);
+        assert_eq!(e.to_string(), "ad-hoc 7");
+    }
+
+    #[test]
+    fn context_stacks_in_order() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.chain().count(), 3);
+    }
+}

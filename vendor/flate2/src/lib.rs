@@ -1,0 +1,336 @@
+//! Offline stand-in for the `flate2` crate.
+//!
+//! The build environment has no crates.io access (DESIGN.md §8), so this
+//! vendored crate provides the write-API subset dpBento uses
+//! (`write::ZlibEncoder` / `write::ZlibDecoder` over in-memory sinks)
+//! backed by a real LZ77 codec: greedy hash-table matching over a 64 KB
+//! window with flag-grouped literal/match tokens.
+//!
+//! The wire format is *not* RFC 1950 zlib — both ends of every round-trip
+//! in this repository go through this crate, and the compression plugin
+//! only needs (a) lossless round-trips and (b) genuine compression of
+//! dbgen-style text, both of which this codec delivers.
+
+/// Compression level selector (accepted for API compatibility; the codec
+/// has a single operating point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+const MAGIC: [u8; 4] = *b"DPLZ";
+/// Shortest match worth a 3-byte token.
+const MIN_MATCH: usize = 4;
+/// Longest encodable match: MIN_MATCH + u8::MAX.
+const MAX_MATCH: usize = MIN_MATCH + 255;
+/// Match window (distances fit in a u16).
+const WINDOW: usize = 65_535;
+const HASH_SIZE: usize = 1 << 16;
+/// Hash-chain candidates examined per position (longest match wins —
+/// this is what lifts word-shuffled text well past 2x).
+const MAX_CHAIN: usize = 16;
+const EMPTY: u32 = u32::MAX;
+
+fn hash3(a: u8, b: u8, c: u8) -> usize {
+    let key = (a as u32) << 16 | (b as u32) << 8 | c as u32;
+    (key.wrapping_mul(2_654_435_761) >> 15) as usize & (HASH_SIZE - 1)
+}
+
+/// Compress `data` into the DPLZ container.
+fn compress_bytes(data: &[u8]) -> Vec<u8> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+
+    // hash chains: head[h] = most recent position with that 3-gram hash,
+    // prev[pos] = previous position on the same chain
+    let mut head = vec![EMPTY; HASH_SIZE];
+    let mut prev = vec![EMPTY; n];
+    let insert = |head: &mut [u32], prev: &mut [u32], pos: usize| {
+        if pos + 3 <= n {
+            let h = hash3(data[pos], data[pos + 1], data[pos + 2]);
+            prev[pos] = head[h];
+            head[h] = pos as u32;
+        }
+    };
+
+    let mut flags = 0u8;
+    let mut nflags = 0usize;
+    let mut group: Vec<u8> = Vec::with_capacity(1 + 8 * 3);
+    let mut i = 0usize;
+    while i < n {
+        // find the longest match among the most recent chain candidates
+        let mut best_len = 0usize;
+        let mut best_pos = 0usize;
+        if i + MIN_MATCH <= n {
+            let max_len = MAX_MATCH.min(n - i);
+            let h = hash3(data[i], data[i + 1], data[i + 2]);
+            let mut cand = head[h];
+            let mut steps = 0;
+            while cand != EMPTY && steps < MAX_CHAIN {
+                let pos = cand as usize;
+                let dist = i - pos;
+                if dist > WINDOW {
+                    break; // chain positions only get older
+                }
+                // quick reject: a longer match must improve on best_len
+                if best_len == 0 || data[pos + best_len] == data[i + best_len] {
+                    let mut len = 0;
+                    while len < max_len && data[pos + len] == data[i + len] {
+                        len += 1;
+                    }
+                    if len > best_len {
+                        best_len = len;
+                        best_pos = pos;
+                        if len == max_len {
+                            break;
+                        }
+                    }
+                }
+                cand = prev[pos];
+                steps += 1;
+            }
+        }
+
+        if best_len >= MIN_MATCH {
+            let dist = i - best_pos;
+            flags |= 1 << nflags;
+            group.push((dist & 0xFF) as u8);
+            group.push((dist >> 8) as u8);
+            group.push((best_len - MIN_MATCH) as u8);
+            let end = i + best_len;
+            while i < end {
+                insert(&mut head, &mut prev, i);
+                i += 1;
+            }
+        } else {
+            group.push(data[i]);
+            insert(&mut head, &mut prev, i);
+            i += 1;
+        }
+        nflags += 1;
+        if nflags == 8 {
+            out.push(flags);
+            out.extend_from_slice(&group);
+            flags = 0;
+            nflags = 0;
+            group.clear();
+        }
+    }
+    if nflags > 0 {
+        out.push(flags);
+        out.extend_from_slice(&group);
+    }
+    out
+}
+
+/// Decompress a DPLZ container.
+fn decompress_bytes(data: &[u8]) -> std::io::Result<Vec<u8>> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    if data.len() < 12 || data[..4] != MAGIC {
+        return Err(bad("not a DPLZ stream"));
+    }
+    let mut len_bytes = [0u8; 8];
+    len_bytes.copy_from_slice(&data[4..12]);
+    let n = u64::from_le_bytes(len_bytes) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut p = 12usize;
+    while out.len() < n {
+        let flags = *data.get(p).ok_or_else(|| bad("truncated flags"))?;
+        p += 1;
+        for bit in 0..8 {
+            if out.len() == n {
+                break;
+            }
+            if flags >> bit & 1 == 1 {
+                if p + 3 > data.len() {
+                    return Err(bad("truncated match token"));
+                }
+                let dist = data[p] as usize | (data[p + 1] as usize) << 8;
+                let len = data[p + 2] as usize + MIN_MATCH;
+                p += 3;
+                if dist == 0 || dist > out.len() {
+                    return Err(bad("match distance out of range"));
+                }
+                if out.len() + len > n {
+                    return Err(bad("match overruns declared length"));
+                }
+                let start = out.len() - dist;
+                // byte-by-byte: overlapping matches replicate correctly
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            } else {
+                out.push(*data.get(p).ok_or_else(|| bad("truncated literal"))?);
+                p += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Write-side codecs (the only flate2 interface dpBento uses).
+pub mod write {
+    use std::io::{self, Write};
+
+    /// Buffering compressor: bytes written in are compressed on `finish`
+    /// and the packed stream is written to the inner sink.
+    pub struct ZlibEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+        _level: crate::Compression,
+    }
+
+    impl<W: Write> ZlibEncoder<W> {
+        pub fn new(inner: W, level: crate::Compression) -> ZlibEncoder<W> {
+            ZlibEncoder {
+                inner,
+                buf: Vec::new(),
+                _level: level,
+            }
+        }
+
+        /// Compress everything written so far and return the inner sink.
+        pub fn finish(mut self) -> io::Result<W> {
+            let packed = crate::compress_bytes(&self.buf);
+            self.inner.write_all(&packed)?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for ZlibEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Buffering decompressor: the packed stream written in is decoded on
+    /// `finish` and the original bytes are written to the inner sink.
+    pub struct ZlibDecoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> ZlibDecoder<W> {
+        pub fn new(inner: W) -> ZlibDecoder<W> {
+            ZlibDecoder {
+                inner,
+                buf: Vec::new(),
+            }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let out = crate::decompress_bytes(&self.buf)?;
+            self.inner.write_all(&out)?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for ZlibDecoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::write::{ZlibDecoder, ZlibEncoder};
+    use super::*;
+    use std::io::Write;
+
+    fn roundtrip(data: &[u8]) -> (Vec<u8>, Vec<u8>) {
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(data).unwrap();
+        let packed = enc.finish().unwrap();
+        let mut dec = ZlibDecoder::new(Vec::new());
+        dec.write_all(&packed).unwrap();
+        let back = dec.finish().unwrap();
+        (packed, back)
+    }
+
+    #[test]
+    fn roundtrips_exactly() {
+        for data in [
+            b"".to_vec(),
+            b"a".to_vec(),
+            b"abcabcabcabcabcabc".to_vec(),
+            (0u8..=255).cycle().take(10_000).collect::<Vec<u8>>(),
+        ] {
+            let (_, back) = roundtrip(&data);
+            assert_eq!(back, data);
+        }
+    }
+
+    #[test]
+    fn repetitive_text_compresses_well() {
+        let data: Vec<u8> = b"the quick brown fox jumps over the lazy dog "
+            .iter()
+            .copied()
+            .cycle()
+            .take(100_000)
+            .collect();
+        let (packed, back) = roundtrip(&data);
+        assert_eq!(back, data);
+        assert!(
+            (data.len() as f64 / packed.len() as f64) > 4.0,
+            "ratio {}",
+            data.len() as f64 / packed.len() as f64
+        );
+    }
+
+    #[test]
+    fn overlapping_matches_replicate() {
+        // runs force dist < len copies
+        let data = vec![7u8; 5000];
+        let (packed, back) = roundtrip(&data);
+        assert_eq!(back, data);
+        assert!(packed.len() < 200, "{}", packed.len());
+    }
+
+    #[test]
+    fn incompressible_data_survives() {
+        // pseudo-random bytes: no 3-gram repeats to speak of
+        let mut x: u32 = 0x1234_5678;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                (x >> 24) as u8
+            })
+            .collect();
+        let (_, back) = roundtrip(&data);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn corrupt_stream_is_io_error() {
+        let mut dec = ZlibDecoder::new(Vec::new());
+        dec.write_all(b"not a stream at all").unwrap();
+        assert!(dec.finish().is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Offline stand-in for the `regex` crate.
+//!
+//! The build environment has no crates.io access (DESIGN.md §8). dpBento's
+//! only pattern is the SQL-LIKE-shaped `"special.*requests"` (TPC-H Q13),
+//! so this vendored crate supports exactly the unanchored
+//! literal-segments-joined-by-`.*` subset: a pattern is split on `.*` and a
+//! haystack matches when every literal segment occurs in order. Patterns
+//! using any other regex metacharacter are rejected at construction.
+
+use std::fmt;
+
+/// Pattern-compilation error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "regex parse error: {}", self.0)
+    }
+}
+impl std::error::Error for Error {}
+
+fn split_segments(pattern: &str) -> Result<Vec<Vec<u8>>, Error> {
+    const META: &[char] = &['[', ']', '(', ')', '{', '}', '^', '$', '|', '?', '+', '\\'];
+    let mut segments = Vec::new();
+    for seg in pattern.split(".*") {
+        if seg.contains(META) || seg.contains('.') || seg.contains('*') {
+            return Err(Error(format!(
+                "unsupported pattern '{pattern}' (offline subset: literals joined by `.*`)"
+            )));
+        }
+        if !seg.is_empty() {
+            segments.push(seg.as_bytes().to_vec());
+        }
+    }
+    Ok(segments)
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() {
+        return Some(0);
+    }
+    if haystack.len() < needle.len() {
+        return None;
+    }
+    haystack
+        .windows(needle.len())
+        .position(|w| w == needle)
+}
+
+fn segments_match(segments: &[Vec<u8>], text: &[u8]) -> bool {
+    let mut pos = 0usize;
+    for seg in segments {
+        match find(&text[pos..], seg) {
+            Some(p) => pos += p + seg.len(),
+            None => return false,
+        }
+    }
+    true
+}
+
+/// Byte-oriented matcher (mirrors `regex::bytes`).
+pub mod bytes {
+    /// Compiled pattern over the supported subset.
+    #[derive(Debug, Clone)]
+    pub struct Regex {
+        pattern: String,
+        segments: Vec<Vec<u8>>,
+    }
+
+    impl Regex {
+        pub fn new(pattern: &str) -> Result<Regex, crate::Error> {
+            Ok(Regex {
+                pattern: pattern.to_string(),
+                segments: crate::split_segments(pattern)?,
+            })
+        }
+
+        pub fn is_match(&self, text: &[u8]) -> bool {
+            crate::segments_match(&self.segments, text)
+        }
+
+        pub fn as_str(&self) -> &str {
+            &self.pattern
+        }
+    }
+}
+
+/// UTF-8 string matcher (mirrors `regex::Regex`).
+#[derive(Debug, Clone)]
+pub struct Regex {
+    inner: bytes::Regex,
+}
+
+impl Regex {
+    pub fn new(pattern: &str) -> Result<Regex, Error> {
+        Ok(Regex {
+            inner: bytes::Regex::new(pattern)?,
+        })
+    }
+    pub fn is_match(&self, text: &str) -> bool {
+        self.inner.is_match(text.as_bytes())
+    }
+    pub fn as_str(&self) -> &str {
+        self.inner.as_str()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn like_pattern_semantics() {
+        let re = bytes::Regex::new("special.*requests").unwrap();
+        assert!(re.is_match(b"very special packages requests here"));
+        assert!(re.is_match(b"specialrequests"));
+        assert!(!re.is_match(b"requests then special"));
+        assert!(!re.is_match(b"special but nothing else"));
+        assert!(!re.is_match(b""));
+    }
+
+    #[test]
+    fn single_literal_and_empty_pattern() {
+        let lit = bytes::Regex::new("fox").unwrap();
+        assert!(lit.is_match(b"the quick fox"));
+        assert!(!lit.is_match(b"the quick cat"));
+        // ".*" alone matches everything
+        let any = bytes::Regex::new(".*").unwrap();
+        assert!(any.is_match(b""));
+        assert!(any.is_match(b"whatever"));
+    }
+
+    #[test]
+    fn overlapping_segment_starts() {
+        // the second segment must start strictly after the first ends
+        let re = bytes::Regex::new("aba.*aba").unwrap();
+        assert!(!re.is_match(b"ababa")); // second "aba" overlaps the first
+        assert!(re.is_match(b"abaXaba"));
+        assert!(re.is_match(b"abaaba"));
+    }
+
+    #[test]
+    fn unsupported_patterns_rejected() {
+        for p in ["a+b", "a|b", "[ab]", "a.b", "a*", "(ab)"] {
+            assert!(bytes::Regex::new(p).is_err(), "{p}");
+        }
+    }
+
+    #[test]
+    fn str_wrapper_agrees() {
+        let re = Regex::new("special.*requests").unwrap();
+        assert!(re.is_match("special packages requests"));
+        assert!(!re.is_match("requests special"));
+        assert_eq!(re.as_str(), "special.*requests");
+    }
+}
