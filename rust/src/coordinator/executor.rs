@@ -5,15 +5,19 @@
 //! after each task ... a command line is provided for users to explicitly
 //! clean up").
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::obs::trace::Tracer;
+use crate::obs::Obs;
 use crate::platform::PlatformId;
 
 use super::box_config::{BoxConfig, TaskEntry};
 use super::crossproduct::{cardinality, expand};
 use super::registry::Registry;
 use super::report::{BoxReport, TaskReport};
-use super::task::{Task, TaskContext, TestRecord};
+use super::task::{LogEntry, Task, TaskContext, TestRecord};
 
 /// Guard against combinatorially absurd boxes: the cross-product of one
 /// task entry may not exceed this many tests.
@@ -34,6 +38,10 @@ pub struct ExecOptions {
     /// boxes and serving sweeps; prepare runs once *per worker*, so keep
     /// it off for tasks with very expensive preparation.
     pub parallel: bool,
+    /// Observability instruments (span tracer + metrics registry) the
+    /// executor records into. The default carries a disabled tracer, so
+    /// spans cost nothing unless `--trace` builds an `Obs::recording()`.
+    pub obs: Arc<Obs>,
 }
 
 impl Default for ExecOptions {
@@ -42,6 +50,7 @@ impl Default for ExecOptions {
             filter_metrics: true,
             verbose: false,
             parallel: false,
+            obs: Arc::new(Obs::disabled()),
         }
     }
 }
@@ -50,6 +59,13 @@ impl Default for ExecOptions {
 /// report, not fatal; configuration errors (unknown task, absurd
 /// cross-products, unknown metric names) fail fast.
 pub fn run_box(registry: &Registry, cfg: &BoxConfig, opts: &ExecOptions) -> Result<BoxReport> {
+    if opts.verbose {
+        crate::obs::log::raise_to(crate::obs::log::Level::Debug);
+    }
+    let box_span = opts.obs.tracer.span("box", format!("box {}", cfg.name));
+    box_span.attr_num("platforms", cfg.platforms.len() as f64);
+    box_span.attr_num("task_entries", cfg.tasks.len() as f64);
+
     // validate everything before running anything
     for entry in &cfg.tasks {
         let task = registry.get(&entry.task)?;
@@ -76,9 +92,11 @@ pub fn run_box(registry: &Registry, cfg: &BoxConfig, opts: &ExecOptions) -> Resu
             reports.push(run_task_on(registry, cfg, entry, *platform, opts)?);
         }
     }
+    drop(box_span);
     Ok(BoxReport {
         box_name: cfg.name.clone(),
         tasks: reports,
+        metrics: opts.obs.metrics.snapshot(),
     })
 }
 
@@ -90,11 +108,14 @@ fn run_task_on(
     opts: &ExecOptions,
 ) -> Result<TaskReport> {
     let task = registry.get(&entry.task)?;
-    let mut ctx = TaskContext::new(platform, cfg.seed);
+    let obs = &opts.obs;
+    let mut ctx = TaskContext::with_clock(platform, cfg.seed, obs.tracer.clock());
 
     if !task.supports(platform) {
         // §3.2: plugins may not be portable; report the skip instead of
         // failing the box.
+        obs.metrics.inc("exec.tasks_skipped");
+        crate::log_debug!("skip {} on {platform}: unsupported", entry.task);
         return Ok(TaskReport {
             task: entry.task.clone(),
             platform,
@@ -108,12 +129,17 @@ fn run_task_on(
         });
     }
 
+    let task_span = obs.tracer.span("task", format!("{} on {platform}", entry.task));
+    obs.metrics.inc("exec.tasks_run");
+
     // ① prepare once for all tests of this task
-    if opts.verbose {
-        eprintln!("[dpbento] prepare {} on {platform}", entry.task);
+    crate::log_debug!("prepare {} on {platform}", entry.task);
+    {
+        let _prepare = obs.tracer.span("prepare", format!("prepare {}", entry.task));
+        task.prepare(&mut ctx)?;
     }
-    task.prepare(&mut ctx)?;
     ctx.mark_prepared();
+    obs.metrics.inc("exec.prepares");
 
     // ② run every generated test
     let tests = expand(&entry.params);
@@ -123,23 +149,29 @@ fn run_task_on(
         let mut records = Vec::with_capacity(tests.len());
         let mut failures = Vec::new();
         for (i, spec) in tests.iter().enumerate() {
-            if opts.verbose {
-                eprintln!(
-                    "[dpbento]   test {}/{} {}",
-                    i + 1,
-                    tests.len(),
-                    spec_string(spec)
-                );
-            }
+            crate::log_debug!("  test {}/{} {}", i + 1, tests.len(), spec_string(spec));
+            let span = if obs.tracer.is_enabled() {
+                let g = obs.tracer.span("run", format!("{} test {i}", entry.task));
+                g.attr_str("spec", spec_string(spec));
+                Some(g)
+            } else {
+                None
+            };
             run_one_test(task.as_ref(), &mut ctx, entry, spec, opts, &mut records, &mut failures);
+            drop(span);
         }
         (records, failures, Vec::new())
     };
 
     // ③ report
-    let rendered = task.report(&ctx, &records);
+    let rendered = {
+        let _report = obs.tracer.span("report", format!("report {}", entry.task));
+        task.report(&ctx, &records)
+    };
+    task_span.attr_num("tests", tests.len() as f64);
+    task_span.attr_num("failures", failures.len() as f64);
     let mut logs = ctx.logs().to_vec();
-    logs.extend(worker_logs);
+    logs.extend(worker_logs.into_iter().map(|(_, line)| line));
     Ok(TaskReport {
         task: entry.task.clone(),
         platform,
@@ -165,20 +197,35 @@ fn run_one_test(
             if opts.filter_metrics && !entry.metrics.is_empty() {
                 result.retain(|k, _| entry.metrics.iter().any(|m| m == k));
             }
+            opts.obs.metrics.inc("exec.tests_run");
             records.push(TestRecord {
                 spec: spec.clone(),
                 result,
             });
         }
-        Err(e) => failures.push((spec_string(spec), format!("{e:#}"))),
+        Err(e) => {
+            opts.obs.metrics.inc("exec.tests_failed");
+            crate::log_debug!("  test failed [{}]: {e:#}", spec_string(spec));
+            failures.push((spec_string(spec), format!("{e:#}")));
+        }
     }
 }
 
-type ParallelOut = (Vec<TestRecord>, Vec<(String, String)>, Vec<String>);
+/// Worker-thread output: records, failures, and log lines tagged with the
+/// global index of the test that produced them (so merged logs interleave
+/// in deterministic test order, not raw append order).
+type ParallelOut = (
+    Vec<TestRecord>,
+    Vec<(String, String)>,
+    Vec<(usize, LogEntry)>,
+);
 
 /// Opt-in parallel execution path: chunk the expanded tests across worker
 /// threads, each preparing a private context, then stitch the results back
-/// in test order so reports are byte-identical run to run.
+/// in test order so reports are byte-identical run to run. Each worker
+/// records spans into a private tracer on the shared epoch; workers are
+/// absorbed back in chunk order (track id = chunk index + 1), keeping the
+/// exported trace event sequence deterministic.
 fn run_tests_parallel(
     task: &dyn Task,
     cfg: &BoxConfig,
@@ -193,20 +240,21 @@ fn run_tests_parallel(
         .clamp(1, tests.len());
     let chunk_len = tests.len().div_ceil(workers);
     let chunks: Vec<&[super::task::TestSpec]> = tests.chunks(chunk_len).collect();
-    if opts.verbose {
-        eprintln!(
-            "[dpbento]   running {} tests across {} workers",
-            tests.len(),
-            chunks.len()
-        );
-    }
+    crate::log_debug!(
+        "  running {} tests across {} workers",
+        tests.len(),
+        chunks.len()
+    );
 
-    let outcomes: Vec<Result<ParallelOut>> = std::thread::scope(|scope| {
+    let obs = &opts.obs;
+    let outcomes: Vec<Result<(ParallelOut, Tracer)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = chunks
             .iter()
-            .map(|chunk| {
-                scope.spawn(move || -> Result<ParallelOut> {
-                    let mut ctx = TaskContext::new(platform, cfg.seed);
+            .enumerate()
+            .map(|(chunk_idx, chunk)| {
+                let tracer = Tracer::with_clock(obs.tracer.clock(), obs.tracer.is_enabled());
+                scope.spawn(move || -> Result<(ParallelOut, Tracer)> {
+                    let mut ctx = TaskContext::with_clock(platform, cfg.seed, tracer.clock());
                     task.prepare(&mut ctx)?;
                     ctx.mark_prepared();
                     // the main context already contributed the prepare log
@@ -214,10 +262,25 @@ fn run_tests_parallel(
                     let prepare_logs = ctx.logs().len();
                     let mut records = Vec::with_capacity(chunk.len());
                     let mut failures = Vec::new();
-                    for spec in *chunk {
+                    let mut logs: Vec<(usize, LogEntry)> = Vec::new();
+                    for (offset, spec) in chunk.iter().enumerate() {
+                        let test_idx = chunk_idx * chunk_len + offset;
+                        let before = ctx.logs().len();
+                        let span = if tracer.is_enabled() {
+                            let g =
+                                tracer.span("run", format!("{} test {test_idx}", entry.task));
+                            g.attr_str("spec", spec_string(spec));
+                            Some(g)
+                        } else {
+                            None
+                        };
                         run_one_test(task, &mut ctx, entry, spec, opts, &mut records, &mut failures);
+                        drop(span);
+                        for line in &ctx.logs()[before.max(prepare_logs)..] {
+                            logs.push((test_idx, line.clone()));
+                        }
                     }
-                    Ok((records, failures, ctx.logs()[prepare_logs..].to_vec()))
+                    Ok(((records, failures, logs), tracer))
                 })
             })
             .collect();
@@ -229,13 +292,16 @@ fn run_tests_parallel(
 
     let mut records = Vec::with_capacity(tests.len());
     let mut failures = Vec::new();
-    let mut logs = Vec::new();
-    for outcome in outcomes {
-        let (r, f, l) = outcome?;
+    let mut logs: Vec<(usize, LogEntry)> = Vec::new();
+    for (chunk_idx, outcome) in outcomes.into_iter().enumerate() {
+        let ((r, f, l), tracer) = outcome?;
+        obs.tracer.absorb(tracer, chunk_idx as u64 + 1);
         records.extend(r);
         failures.extend(f);
         logs.extend(l);
     }
+    // stable sort: lines from the same test keep their emission order
+    logs.sort_by_key(|(test_idx, _)| *test_idx);
     Ok((records, failures, logs))
 }
 
@@ -327,7 +393,21 @@ mod tests {
         // metric filtering keeps only the requested metric
         assert!(rep.tasks[0].records[0].result.contains_key("doubled"));
         assert!(!rep.tasks[0].records[0].result.contains_key("tripled"));
-        assert_eq!(rep.tasks[0].logs, vec!["prepared"]);
+        let lines: Vec<&str> = rep.tasks[0].logs.iter().map(|l| l.line.as_str()).collect();
+        assert_eq!(lines, vec!["prepared"]);
+    }
+
+    #[test]
+    fn exec_metrics_counted_and_embedded_in_report() {
+        let c = cfg(r#"{"tasks":[{"task":"probe","params":{"x":[-1,1,2]}}]}"#);
+        let opts = ExecOptions::default();
+        let rep = run_box(&quiet_registry(), &c, &opts).unwrap();
+        assert_eq!(opts.obs.metrics.counter("exec.tests_run"), 2);
+        assert_eq!(opts.obs.metrics.counter("exec.tests_failed"), 1);
+        assert_eq!(opts.obs.metrics.counter("exec.prepares"), 1);
+        let snap = rep.to_json();
+        let counters = snap.get("obs_metrics").unwrap().get("counters").unwrap();
+        assert_eq!(counters.get("exec.tests_run").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]
@@ -466,6 +546,60 @@ mod tests {
         assert_eq!(specs(&serial), specs(&p1));
         assert_eq!(specs(&p1), specs(&p2));
         assert_eq!(p1.tasks[0].records.len(), 40);
+    }
+
+    /// Like [`QuietProbe`] but logging one line per run, to pin down the
+    /// worker-log merge order.
+    struct ChattyProbe;
+    impl Task for ChattyProbe {
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+        fn description(&self) -> &'static str {
+            "test double (logs per run)"
+        }
+        fn params(&self) -> Vec<ParamDef> {
+            vec![ParamDef::new("x", "value", "[1,2]")]
+        }
+        fn metrics(&self) -> Vec<&'static str> {
+            vec!["doubled"]
+        }
+        fn prepare(&self, ctx: &mut crate::coordinator::task::TaskContext) -> anyhow::Result<()> {
+            ctx.log("prepared");
+            Ok(())
+        }
+        fn run(
+            &self,
+            ctx: &mut crate::coordinator::task::TaskContext,
+            test: &TestSpec,
+        ) -> anyhow::Result<TestResult> {
+            let x = test.get("x").and_then(Value::as_f64).unwrap_or(0.0);
+            ctx.log(format!("ran x={x}"));
+            Ok(BTreeMap::from([("doubled".to_string(), 2.0 * x)]))
+        }
+    }
+
+    #[test]
+    fn parallel_worker_logs_interleave_in_test_order() {
+        let values: Vec<String> = (0..24).map(|i| i.to_string()).collect();
+        let json = format!(
+            r#"{{"tasks":[{{"task":"probe","params":{{"x":[{}]}}}}]}}"#,
+            values.join(",")
+        );
+        let c = cfg(&json);
+        let mut reg = Registry::empty();
+        reg.register(Arc::new(ChattyProbe));
+        let opts = ExecOptions {
+            parallel: true,
+            ..ExecOptions::default()
+        };
+        let rep = run_box(&reg, &c, &opts).unwrap();
+        let lines: Vec<&str> = rep.tasks[0].logs.iter().map(|l| l.line.as_str()).collect();
+        // the main context's prepare line first, then exactly one line per
+        // test in cross-product order regardless of worker scheduling
+        let mut expected = vec!["prepared".to_string()];
+        expected.extend((0..24).map(|i| format!("ran x={i}")));
+        assert_eq!(lines, expected.iter().map(|s| s.as_str()).collect::<Vec<_>>());
     }
 
     #[test]

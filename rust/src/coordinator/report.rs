@@ -5,7 +5,7 @@
 use crate::platform::PlatformId;
 use crate::util::json::Value;
 
-use super::task::TestRecord;
+use super::task::{LogEntry, TestRecord};
 
 /// Results of one (task × platform) execution.
 #[derive(Debug, Clone)]
@@ -15,8 +15,11 @@ pub struct TaskReport {
     pub records: Vec<TestRecord>,
     /// The task's own rendered report section.
     pub rendered: String,
-    /// Intermediate log lines cached during the run.
-    pub logs: Vec<String>,
+    /// Intermediate log lines cached during the run, timestamped on the
+    /// tracer clock. The wall-clock offsets surface on diagnostic
+    /// surfaces only; the JSON dump carries just the lines so reports
+    /// stay byte-stable under a fixed seed (DESIGN.md §5, §9).
+    pub logs: Vec<LogEntry>,
     /// Tests that failed (spec + error), kept for the summary.
     pub failures: Vec<(String, String)>,
 }
@@ -26,6 +29,10 @@ pub struct TaskReport {
 pub struct BoxReport {
     pub box_name: String,
     pub tasks: Vec<TaskReport>,
+    /// Snapshot of the run's `obs` metrics registry (counters, gauges,
+    /// histograms). Everything in it derives from the seeded execution,
+    /// never from wall time, so embedding it keeps `to_json` byte-stable.
+    pub metrics: Value,
 }
 
 impl BoxReport {
@@ -100,6 +107,7 @@ impl BoxReport {
             .collect();
         Value::obj([
             ("box".to_string(), Value::str(self.box_name.clone())),
+            ("obs_metrics".to_string(), self.metrics.clone()),
             ("tasks".to_string(), Value::Arr(tasks)),
         ])
     }
@@ -137,9 +145,13 @@ mod tests {
                     result: BTreeMap::from([("ops_per_sec".to_string(), 1.69e9)]),
                 }],
                 rendered: "## task compute on bf3\n".into(),
-                logs: vec!["prepared".into()],
+                logs: vec![crate::coordinator::task::LogEntry {
+                    t_s: 0.0,
+                    line: "prepared".into(),
+                }],
                 failures: vec![("op=div".into(), "boom".into())],
             }],
+            metrics: crate::obs::Metrics::new().snapshot(),
         }
     }
 
@@ -163,6 +175,11 @@ mod tests {
             rec.get("metrics").unwrap().get("ops_per_sec").unwrap().as_f64(),
             Some(1.69e9)
         );
+        // the obs metrics snapshot is embedded with its three sections
+        let obs = reparsed.get("obs_metrics").unwrap();
+        assert!(obs.get("counters").is_some());
+        assert!(obs.get("gauges").is_some());
+        assert!(obs.get("histograms").is_some());
     }
 
     #[test]

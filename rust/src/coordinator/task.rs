@@ -12,8 +12,27 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::obs::Clock;
 use crate::platform::PlatformId;
 use crate::util::json::Value;
+
+/// One cached log line stamped with its offset (seconds) on the tracer
+/// clock — the same epoch the trace spans use, so log lines line up with
+/// the exported timeline. Timestamps are wall-clock and therefore live
+/// only on diagnostic surfaces (debug log, trace); the byte-stable
+/// report JSON carries just the lines (DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    pub t_s: f64,
+    pub line: String,
+}
+
+impl LogEntry {
+    /// Render as `[+12.345ms] line`.
+    pub fn render(&self) -> String {
+        format!("[+{:.3}ms] {}", self.t_s * 1e3, self.line)
+    }
+}
 
 /// One concrete test: a full assignment of task parameters.
 pub type TestSpec = BTreeMap<String, Value>;
@@ -44,17 +63,25 @@ impl ParamDef {
 pub struct TaskContext {
     pub platform: PlatformId,
     pub seed: u64,
+    clock: Clock,
     state: BTreeMap<String, Box<dyn Any>>,
-    logs: Vec<String>,
+    logs: Vec<LogEntry>,
     prepared: bool,
     cleaned: bool,
 }
 
 impl TaskContext {
     pub fn new(platform: PlatformId, seed: u64) -> TaskContext {
+        TaskContext::with_clock(platform, seed, Clock::new())
+    }
+
+    /// Context whose log timestamps share an existing tracer epoch, so
+    /// cached log lines align with the exported span timeline.
+    pub fn with_clock(platform: PlatformId, seed: u64, clock: Clock) -> TaskContext {
         TaskContext {
             platform,
             seed,
+            clock,
             state: BTreeMap::new(),
             logs: Vec::new(),
             prepared: false,
@@ -89,12 +116,16 @@ impl TaskContext {
         self.state.contains_key(key)
     }
 
-    /// Append an intermediate log line (cached, surfaced by reports).
+    /// Append an intermediate log line (cached, surfaced by reports),
+    /// timestamped on the context's clock.
     pub fn log(&mut self, line: impl Into<String>) {
-        self.logs.push(line.into());
+        self.logs.push(LogEntry {
+            t_s: self.clock.elapsed_s(),
+            line: line.into(),
+        });
     }
 
-    pub fn logs(&self) -> &[String] {
+    pub fn logs(&self) -> &[LogEntry] {
         &self.logs
     }
 
@@ -264,6 +295,20 @@ mod tests {
         assert!(rep.contains("task echo on bf3"));
         assert!(rep.contains("x=1"));
         assert!(rep.contains("value=11"));
+    }
+
+    #[test]
+    fn log_entries_are_timestamped_on_the_clock() {
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 1);
+        ctx.log("first");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        ctx.log("second");
+        let logs = ctx.logs();
+        assert_eq!(logs[0].line, "first");
+        assert!(logs[1].t_s >= logs[0].t_s);
+        assert!(logs[1].t_s > 0.0);
+        assert!(logs[0].render().starts_with("[+"));
+        assert!(logs[0].render().ends_with("first"));
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod db;
 pub mod index;
 pub mod net;
+pub mod obs;
 pub mod platform;
 pub mod plugins;
 pub mod runtime;

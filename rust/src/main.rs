@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics] [--parallel]
+//!             [--trace FILE] [--log-level LVL]
 //! dpbento serve [--platforms LIST] [--policy NAME|all] [--workload MIX] [--loads CSV] ...
 //! dpbento list-tasks
 //! dpbento clean [--platform NAME]
@@ -12,11 +13,19 @@
 //! tests → prepare → run → report; the rendered report goes to stdout and,
 //! with `--out`, to `<DIR>/<box>.{txt,json}`. `clean` is the explicit
 //! cleanup command the paper defers to the user (§3.3 step ④).
+//!
+//! Observability (DESIGN.md §9): `--trace FILE` records the run as Chrome
+//! `trace_event` JSON (open in `chrome://tracing` / Perfetto);
+//! `--log-level error|warn|info|debug|trace` tunes the stderr log facade
+//! (`DPBENTO_LOG` is the env equivalent; `--verbose` is shorthand for
+//! `--log-level debug`).
 
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use dpbento::coordinator::{clean_all, plugin::ShellTask, run_box, BoxConfig, ExecOptions, Registry};
 use dpbento::coordinator::Task as _;
+use dpbento::obs::{self, log::Level, Obs};
 use dpbento::platform::PlatformId;
 
 fn main() -> ExitCode {
@@ -24,7 +33,7 @@ fn main() -> ExitCode {
     match run(args) {
         Ok(code) => code,
         Err(e) => {
-            eprintln!("dpbento: error: {e:#}");
+            dpbento::log_error!("{e:#}");
             ExitCode::FAILURE
         }
     }
@@ -48,7 +57,7 @@ fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
             Ok(ExitCode::SUCCESS)
         }
         other => {
-            eprintln!("dpbento: unknown command '{other}'\n");
+            dpbento::log_error!("unknown command '{other}'");
             print_help();
             Ok(ExitCode::FAILURE)
         }
@@ -61,9 +70,10 @@ fn print_help() {
 
 USAGE:
   dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics] [--parallel]
+                [--trace FILE] [--log-level LVL]
   dpbento serve [--platforms bf2,bf3] [--policy all|host-only|dpu-only|static-split|queue-aware]
                 [--workload mixed|analytics|index_get|net_rpc] [--loads 0.2,0.5,0.8,1.0,1.2]
-                [--requests N] [--seed N]
+                [--requests N] [--seed N] [--trace FILE] [--log-level LVL]
   dpbento list-tasks
   dpbento clean [--platform host|bf2|bf3|octeon]
   dpbento example-box         print the paper's Fig. 2 box to stdout
@@ -76,7 +86,18 @@ SERVING:
   sweep (fractions of the host-only capacity) through each placement
   policy on each host+DPU deployment, printing one throughput-latency
   table per (platform, policy). The same engine is available to boxes as
-  the `serving` task (see `dpbento list-tasks`)."
+  the `serving` task (see `dpbento list-tasks`).
+
+OBSERVABILITY (DESIGN.md §9):
+  --trace FILE      export the run as Chrome trace_event JSON: wall-clock
+                    prepare/run/report spans for `run`, sim-time
+                    per-request lifecycle spans for `serve`; a per-phase
+                    time breakdown is logged at info level on completion.
+  --log-level LVL   error|warn|info|debug|trace for the stderr log facade
+                    (env: DPBENTO_LOG; --verbose = --log-level debug,
+                    --log-level wins when both are given). The `run`
+                    report JSON embeds the run's metrics registry
+                    snapshot under \"obs_metrics\"."
     );
 }
 
@@ -107,11 +128,7 @@ fn load_registry(plugins_dir: Option<&str>) -> anyhow::Result<Registry> {
             let path = entry?.path();
             if path.is_dir() && path.join("plugin.json").exists() {
                 let task = ShellTask::load(&path)?;
-                eprintln!(
-                    "[dpbento] loaded plugin '{}' from {}",
-                    task.name(),
-                    path.display()
-                );
+                dpbento::log_info!("loaded plugin '{}' from {}", task.name(), path.display());
                 registry.register(std::sync::Arc::new(task));
             }
         }
@@ -119,10 +136,41 @@ fn load_registry(plugins_dir: Option<&str>) -> anyhow::Result<Registry> {
     Ok(registry)
 }
 
+/// Handle the shared observability flags: `--log-level` (wins) and
+/// `--verbose` (raises to debug), plus `--trace FILE`. Returns the trace
+/// destination and whether `--verbose` was given.
+fn obs_flags(args: &mut Vec<String>) -> anyhow::Result<(Option<String>, bool)> {
+    let trace = take_opt(args, "--trace");
+    let verbose = take_flag(args, "--verbose");
+    let explicit = take_opt(args, "--log-level");
+    if verbose {
+        obs::log::raise_to(Level::Debug);
+    }
+    if let Some(lvl) = &explicit {
+        let l = Level::from_name(lvl).ok_or_else(|| {
+            anyhow::anyhow!("unknown log level '{lvl}' (error|warn|info|debug|trace)")
+        })?;
+        obs::log::set_level(l);
+    }
+    // an explicit --log-level wins over --verbose's debug mapping, so the
+    // executor must not re-raise the level on its behalf
+    Ok((trace, verbose && explicit.is_none()))
+}
+
+/// Write the recorded trace and log the per-phase breakdown.
+fn finish_trace(obs: &Obs, path: &str) -> anyhow::Result<()> {
+    std::fs::write(path, obs.tracer.to_chrome_json().to_pretty())?;
+    dpbento::log_info!("trace with {} spans written to {path}", obs.tracer.len());
+    for line in obs.tracer.render_breakdown().lines() {
+        dpbento::log_info!("{line}");
+    }
+    Ok(())
+}
+
 fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     let out_dir = take_opt(&mut args, "--out");
     let plugins = take_opt(&mut args, "--plugins");
-    let verbose = take_flag(&mut args, "--verbose");
+    let (trace, verbose) = obs_flags(&mut args)?;
     let all_metrics = take_flag(&mut args, "--all-metrics");
     let parallel = take_flag(&mut args, "--parallel");
     let path = args
@@ -131,16 +179,25 @@ fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
 
     let cfg = BoxConfig::load(path)?;
     let registry = load_registry(plugins.as_deref())?;
+    let obs = Arc::new(if trace.is_some() {
+        Obs::recording()
+    } else {
+        Obs::disabled()
+    });
     let opts = ExecOptions {
         filter_metrics: !all_metrics,
         verbose,
         parallel,
+        obs: Arc::clone(&obs),
     };
     let report = run_box(&registry, &cfg, &opts)?;
     print!("{}", report.render());
     if let Some(dir) = out_dir {
         report.write_to(&dir)?;
         println!("report written to {dir}/{}.{{txt,json}}", cfg.name);
+    }
+    if let Some(trace_path) = trace {
+        finish_trace(&obs, &trace_path)?;
     }
     Ok(if report.failure_count() == 0 {
         ExitCode::SUCCESS
@@ -154,9 +211,10 @@ fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
 fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     use dpbento::platform::PlatformId;
     use dpbento::serve::{
-        capacity_rps, host_only_capacity_rps, render_sweep, sweep, Mix, Policy, ServeConfig,
+        capacity_rps, host_only_capacity_rps, render_sweep, sweep_obs, Mix, Policy, ServeConfig,
     };
 
+    let (trace, _verbose) = obs_flags(&mut args)?;
     let platforms: Vec<PlatformId> = take_opt(&mut args, "--platforms")
         .unwrap_or_else(|| "bf2,bf3".to_string())
         .split(',')
@@ -206,6 +264,11 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
         "dpBento serving sweep: workload '{workload}', {requests} requests/point, seed {seed}"
     );
     println!("load factors are fractions of the host-only capacity\n");
+    let obs = if trace.is_some() {
+        Obs::recording()
+    } else {
+        Obs::disabled()
+    };
     for platform in &platforms {
         let dpu = if platform.is_dpu() { Some(*platform) } else { None };
         for policy in &policies {
@@ -213,7 +276,8 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
             cfg.total_requests = requests;
             let host_cap = host_only_capacity_rps(&cfg);
             let rates: Vec<f64> = loads.iter().map(|l| l * host_cap).collect();
-            let points = sweep(&cfg, &rates);
+            dpbento::log_debug!("sweeping {} under {}", platform, policy.name());
+            let points = sweep_obs(&cfg, &rates, &obs);
             let title = format!(
                 "{} · {} (capacity {:.0}/s, host-only {:.0}/s)",
                 platform,
@@ -224,6 +288,9 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
             print!("{}", render_sweep(&title, &points));
             println!();
         }
+    }
+    if let Some(trace_path) = trace {
+        finish_trace(&obs, &trace_path)?;
     }
     Ok(ExitCode::SUCCESS)
 }

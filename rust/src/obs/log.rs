@@ -1,0 +1,201 @@
+//! Leveled log facade — the single sink for framework diagnostics.
+//!
+//! Every diagnostic that used to be a raw `eprintln!` flows through the
+//! `log_error!`/`log_warn!`/`log_info!`/`log_debug!`/`log_trace!` macros
+//! and is filtered by a process-wide level: the `DPBENTO_LOG`
+//! environment variable (`error|warn|info|debug|trace`) sets the
+//! default, `--log-level` overrides it, and `--verbose` raises it to
+//! `debug` (preserving the old CLI behavior). Output goes to stderr so
+//! stdout stays a pure report surface. Tests can divert emission into an
+//! in-memory capture buffer.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// Log severity, most severe first. Filtering keeps levels `<=` the
+/// configured one (`Level::Debug` shows error..debug).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Level> {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "err" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" | "verbose" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+
+}
+
+/// Sentinel meaning "not configured yet — consult `DPBENTO_LOG`".
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Test capture: when active, emitted lines are pushed here instead of
+/// being written to stderr.
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+/// The effective level (initializing from `DPBENTO_LOG` on first use;
+/// default `info`).
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            4 => Level::Trace,
+            _ => Level::Info,
+        };
+    }
+    let from_env = std::env::var("DPBENTO_LOG")
+        .ok()
+        .and_then(|s| Level::from_name(&s))
+        .unwrap_or(Level::Info);
+    LEVEL.store(from_env as u8, Ordering::Relaxed);
+    from_env
+}
+
+/// Set the level explicitly (`--log-level`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Raise verbosity to at least `l` (`--verbose` → debug) without
+/// lowering an already-more-verbose setting.
+pub fn raise_to(l: Level) {
+    if level() < l {
+        set_level(l);
+    }
+}
+
+/// Whether a message at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit one line (already level-checked by the macros; re-checked here
+/// for direct callers).
+pub fn emit(l: Level, args: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let line = format!("[dpbento {:5}] {args}", l.name());
+    let mut cap = CAPTURE.lock().unwrap_or_else(|e| e.into_inner());
+    match cap.as_mut() {
+        Some(buf) => buf.push(line),
+        None => eprintln!("{line}"),
+    }
+}
+
+/// Begin capturing emitted lines in memory (tests). Nested captures are
+/// not supported; the existing buffer is replaced.
+pub fn capture_begin() {
+    *CAPTURE.lock().unwrap_or_else(|e| e.into_inner()) = Some(Vec::new());
+}
+
+/// Stop capturing and return what was emitted since `capture_begin`.
+pub fn capture_end() -> Vec<String> {
+    CAPTURE
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .take()
+        .unwrap_or_default()
+}
+
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($lvl) {
+            $crate::obs::log::emit($lvl, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::log_at!($crate::obs::log::Level::Error, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::obs::log::Level::Warn, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::obs::log::Level::Info, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::obs::log::Level::Debug, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => { $crate::log_at!($crate::obs::log::Level::Trace, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The level and capture buffer are process-global and other tests in
+    // this binary may log concurrently, so assertions filter on a marker
+    // unique to this test.
+    #[test]
+    fn level_filtering_and_capture() {
+        let marker = "obs_log_test_7f3a";
+        capture_begin();
+        set_level(Level::Warn);
+        crate::log_info!("{marker} dropped info");
+        crate::log_debug!("{marker} dropped debug");
+        crate::log_warn!("{marker} kept warn");
+        crate::log_error!("{marker} kept error");
+        set_level(Level::Trace);
+        crate::log_trace!("{marker} kept trace");
+        set_level(Level::Info);
+        let lines: Vec<String> = capture_end()
+            .into_iter()
+            .filter(|l| l.contains(marker))
+            .collect();
+        assert_eq!(lines.len(), 3, "{lines:?}");
+        assert!(lines[0].contains("warn") && lines[0].contains("kept warn"));
+        assert!(lines[1].contains("error"));
+        assert!(lines[2].contains("trace"));
+    }
+
+    #[test]
+    fn names_roundtrip_and_order() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Level::from_name("verbose"), Some(Level::Debug));
+        assert_eq!(Level::from_name("loud"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+}

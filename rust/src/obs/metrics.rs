@@ -1,0 +1,327 @@
+//! Metrics registry: named counters, gauges, and log-bucketed
+//! histograms with a byte-stable JSON snapshot.
+//!
+//! Histograms bucket values at `2^(k/16)` boundaries, so a recovered
+//! quantile is within one half-bucket (≈±2.2% relative) of the exact
+//! nearest-rank percentile `util::stats` computes — close enough for
+//! latency reporting at a fraction of the memory. Quantile extraction
+//! uses the same nearest-rank math as [`crate::util::stats`], which the
+//! unit tests exploit as an oracle.
+//!
+//! Snapshots serialize through ordered maps (`BTreeMap` →
+//! `util::json::Value`), so a snapshot of deterministic measurements is
+//! byte-stable — the executor embeds one in every `BoxReport` JSON
+//! without breaking report determinism (§5).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Value;
+
+/// Sub-buckets per doubling: bucket k covers `[2^(k/16), 2^((k+1)/16))`.
+const BUCKETS_PER_DOUBLING: f64 = 16.0;
+
+/// Bucket index for non-positive observations (kept distinct so zeros
+/// do not pollute the geometric buckets).
+const ZERO_BUCKET: i32 = i32::MIN;
+
+/// A log-bucketed histogram.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    buckets: BTreeMap<i32, u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return; // non-finite samples are model bugs; never corrupt stats
+        }
+        let b = if v <= 0.0 {
+            ZERO_BUCKET
+        } else {
+            (v.log2() * BUCKETS_PER_DOUBLING).floor() as i32
+        };
+        *self.buckets.entry(b).or_insert(0) += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile (`pct` in (0, 100]) resolved to the
+    /// geometric midpoint of the owning bucket, clamped to the observed
+    /// [min, max]. Same rank math as `util::stats::percentile_sorted`.
+    pub fn percentile(&self, pct: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((pct / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut cum = 0u64;
+        for (&b, &n) in &self.buckets {
+            cum += n;
+            if cum >= rank {
+                let mid = if b == ZERO_BUCKET {
+                    0.0
+                } else {
+                    2f64.powf((b as f64 + 0.5) / BUCKETS_PER_DOUBLING)
+                };
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj([
+            ("count".to_string(), Value::Num(self.count as f64)),
+            ("max".to_string(), Value::Num(self.max)),
+            ("mean".to_string(), Value::Num(self.mean())),
+            ("min".to_string(), Value::Num(self.min)),
+            ("p50".to_string(), Value::Num(self.percentile(50.0))),
+            ("p95".to_string(), Value::Num(self.percentile(95.0))),
+            ("p99".to_string(), Value::Num(self.percentile(99.0))),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histo(Histogram),
+}
+
+/// Thread-safe registry of named metrics. Names are dotted paths
+/// (`exec.tests_run`, `serve.latency_us`); a name keeps the kind of its
+/// first use (debug-asserted on mismatch, ignored in release).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `n`.
+    pub fn add(&self, name: &str, n: u64) {
+        let mut m = self.lock();
+        match m
+            .entry(name.to_string())
+            .or_insert(Metric::Counter(0))
+        {
+            Metric::Counter(c) => *c += n,
+            other => debug_assert!(false, "{name} is not a counter: {other:?}"),
+        }
+    }
+
+    /// Set a gauge to `v`.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m.entry(name.to_string()).or_insert(Metric::Gauge(v)) {
+            Metric::Gauge(g) => *g = v,
+            other => debug_assert!(false, "{name} is not a gauge: {other:?}"),
+        }
+    }
+
+    /// Raise a gauge to at least `v` (high-water marks).
+    pub fn gauge_max(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m.entry(name.to_string()).or_insert(Metric::Gauge(v)) {
+            Metric::Gauge(g) => *g = g.max(v),
+            other => debug_assert!(false, "{name} is not a gauge: {other:?}"),
+        }
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histo(Histogram::default()))
+        {
+            Metric::Histo(h) => h.observe(v),
+            other => debug_assert!(false, "{name} is not a histogram: {other:?}"),
+        }
+    }
+
+    /// Read a counter (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.lock().get(name) {
+            Some(Metric::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Read a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.lock().get(name) {
+            Some(Metric::Gauge(g)) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// Read a histogram percentile.
+    pub fn percentile(&self, name: &str, pct: f64) -> Option<f64> {
+        match self.lock().get(name) {
+            Some(Metric::Histo(h)) => Some(h.percentile(pct)),
+            _ => None,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Byte-stable JSON snapshot:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+    pub fn snapshot(&self) -> Value {
+        let m = self.lock();
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut histos = BTreeMap::new();
+        for (k, v) in m.iter() {
+            match v {
+                Metric::Counter(c) => {
+                    counters.insert(k.clone(), Value::Num(*c as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(k.clone(), Value::Num(*g));
+                }
+                Metric::Histo(h) => {
+                    histos.insert(k.clone(), h.to_json());
+                }
+            }
+        }
+        Value::obj([
+            ("counters".to_string(), Value::Obj(counters)),
+            ("gauges".to_string(), Value::Obj(gauges)),
+            ("histograms".to_string(), Value::Obj(histos)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile_sorted;
+
+    #[test]
+    fn counters_gauges_basicness() {
+        let m = Metrics::new();
+        m.inc("a.count");
+        m.add("a.count", 4);
+        m.gauge_set("a.level", 2.5);
+        m.gauge_max("a.hwm", 3.0);
+        m.gauge_max("a.hwm", 1.0); // lower value must not win
+        assert_eq!(m.counter("a.count"), 5);
+        assert_eq!(m.gauge("a.level"), Some(2.5));
+        assert_eq!(m.gauge("a.hwm"), Some(3.0));
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauge("missing"), None);
+    }
+
+    #[test]
+    fn histogram_quantiles_agree_with_stats_oracle_on_random_data() {
+        // log-bucket resolution is 2^(1/16) per bucket; the midpoint
+        // estimate is within 2^(1/32)-1 ≈ 2.2% of any value in the
+        // bucket. Check p50/p95/p99 against the exact nearest-rank
+        // oracle over random heavy-tailed data.
+        crate::util::prop::check(25, |g| {
+            let n = 100 + g.usize(2000);
+            let mut h = Histogram::default();
+            let mut samples = Vec::with_capacity(n);
+            for _ in 0..n {
+                // exponential-ish spread across ~4 decades
+                let v = 10f64.powf(g.f64_in(-1.0, 3.0));
+                h.observe(v);
+                samples.push(v);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pct in [50.0, 90.0, 95.0, 99.0] {
+                let exact = percentile_sorted(&samples, pct);
+                let est = h.percentile(pct);
+                crate::util::prop::expect(
+                    (est / exact - 1.0).abs() < 0.05,
+                    format!("p{pct}: est {est} vs exact {exact}"),
+                )?;
+            }
+            crate::util::prop::expect(h.count() == n as u64, "count")
+        });
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        let mut h = Histogram::default();
+        assert_eq!(h.percentile(99.0), 0.0);
+        h.observe(0.0); // zero lands in the dedicated bucket
+        h.observe(f64::NAN); // dropped
+        h.observe(5.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(1.0), 0.0);
+        assert_eq!(h.percentile(100.0), 5.0);
+        assert_eq!(h.mean(), 2.5);
+    }
+
+    #[test]
+    fn snapshot_is_byte_stable_and_parses() {
+        let build = || {
+            let m = Metrics::new();
+            m.add("z.count", 7);
+            m.gauge_set("a.gauge", 1.5);
+            for i in 1..=100 {
+                m.observe("lat_us", i as f64);
+            }
+            m.snapshot().to_compact()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        let v = crate::util::json::parse(&a).unwrap();
+        assert_eq!(
+            v.get("counters").unwrap().get("z.count").unwrap().as_f64(),
+            Some(7.0)
+        );
+        assert_eq!(
+            v.get("histograms")
+                .unwrap()
+                .get("lat_us")
+                .unwrap()
+                .get("count")
+                .unwrap()
+                .as_f64(),
+            Some(100.0)
+        );
+    }
+}

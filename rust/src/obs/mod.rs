@@ -1,0 +1,64 @@
+//! `obs` — first-party observability: tracing, metrics, and logging.
+//!
+//! dpBento's premise is *automated performance testing and reporting*
+//! (paper §3), which demands visibility into where time goes inside a
+//! box run, a serving sweep, and the event loop — not just end results.
+//! Per the offline vendor policy (DESIGN.md §8) this layer is built
+//! in-tree; see DESIGN.md §9 for semantics. Three pillars:
+//!
+//!  - [`trace`]: nestable timed spans with key/value attributes,
+//!    recording **wall-clock** and (for the serving event loop)
+//!    **sim-time**, exported as Chrome `trace_event` JSON — loadable in
+//!    `chrome://tracing` / Perfetto — plus a rendered per-phase time
+//!    breakdown. Surfaced as `dpbento run|serve --trace <file>`.
+//!  - [`metrics`]: a registry of named counters, gauges, and
+//!    log-bucketed histograms (quantiles agree with the `util::stats`
+//!    oracle to within one bucket), snapshotted as byte-stable JSON and
+//!    embedded in the `BoxReport`.
+//!  - [`log`]: the leveled log facade (`error/warn/info/debug/trace`,
+//!    filtered by `DPBENTO_LOG` or `--log-level`) that every diagnostic
+//!    call site routes through — raw `eprintln!` outside the facade is
+//!    grep-enforced away by `tests/obs.rs`.
+//!
+//! Determinism contract (§5 extended): everything derived from the
+//! seeded simulation — span names, categories, attributes, sim-time
+//! timestamps, and metric values — is byte-stable under a fixed seed.
+//! Only wall-clock `ts`/`dur` fields vary run to run, so two seeded
+//! traces are identical modulo those fields (asserted in tests).
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::Metrics;
+pub use trace::{Clock, SpanGuard, Tracer};
+
+/// The instrument bundle threaded through the executor and the serving
+/// event loop: one tracer plus one metrics registry.
+///
+/// Metrics always record (they are cheap and deterministic); the tracer
+/// records only when constructed with [`Obs::recording`], so the default
+/// (`ExecOptions::default()`, plain `run_serve`) costs nothing per span.
+#[derive(Debug, Default)]
+pub struct Obs {
+    pub tracer: Tracer,
+    pub metrics: Metrics,
+}
+
+impl Obs {
+    /// Instruments with an enabled span tracer (the `--trace` path).
+    pub fn recording() -> Obs {
+        Obs {
+            tracer: Tracer::new(),
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Metrics-only instruments: spans are no-ops.
+    pub fn disabled() -> Obs {
+        Obs {
+            tracer: Tracer::disabled(),
+            metrics: Metrics::new(),
+        }
+    }
+}

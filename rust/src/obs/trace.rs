@@ -1,0 +1,441 @@
+//! Span tracer: nestable timed spans exported as Chrome `trace_event`
+//! JSON (open the file in `chrome://tracing` or Perfetto) plus a
+//! rendered per-phase time breakdown.
+//!
+//! Two clocks coexist (DESIGN.md §9): guard-based spans ([`Tracer::span`])
+//! are **wall-clock** — real time measured from the tracer's epoch — and
+//! are the right tool for the executor's prepare/run/report phases.
+//! Complete spans placed explicitly on the virtual timeline
+//! ([`Tracer::span_sim`]) are **sim-time** — fully deterministic under a
+//! fixed seed — and carry the serving layer's per-request lifecycle.
+//! Exported events tag which clock they are on (`args.clock`), so the
+//! determinism contract is checkable: strip the wall `ts`/`dur` fields
+//! and two seeded traces are byte-identical.
+//!
+//! Thread model: a `Tracer` is internally locked; nesting state is a
+//! single open-span stack, so guard spans from concurrent threads must
+//! not interleave on one tracer. The parallel executor gives each worker
+//! its own tracer (sharing the parent's epoch) and merges them back in
+//! deterministic chunk order via [`Tracer::absorb`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// A wall-clock epoch shared by a tracer and anything that wants
+/// timestamps aligned with its spans (e.g. `TaskContext` log lines).
+#[derive(Debug, Clone, Copy)]
+pub struct Clock {
+    epoch: Instant,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock {
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Seconds since the epoch.
+    pub fn elapsed_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Microseconds since the epoch (the trace_event unit).
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::new()
+    }
+}
+
+/// One recorded span.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    pub name: String,
+    /// Phase category (`task`/`prepare`/`run`/`report`/`request`/...).
+    pub cat: &'static str,
+    /// Track id in the exported trace (0 = main, 1.. = workers/cores).
+    pub tid: u64,
+    pub wall_ts_us: f64,
+    pub wall_dur_us: f64,
+    /// Sim-time placement (µs); `Some` only for [`Tracer::span_sim`].
+    pub sim_ts_us: Option<f64>,
+    pub sim_dur_us: Option<f64>,
+    pub args: BTreeMap<String, Value>,
+}
+
+impl SpanRec {
+    fn on_sim_clock(&self) -> bool {
+        self.sim_ts_us.is_some()
+    }
+
+    /// The duration on whichever clock the span lives on (µs).
+    pub fn dur_us(&self) -> f64 {
+        self.sim_dur_us.unwrap_or(self.wall_dur_us)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    events: Vec<SpanRec>,
+    /// Indices of begun-but-unfinished guard spans (nesting stack).
+    open: Vec<usize>,
+}
+
+/// The span recorder. Disabled tracers make every call a cheap no-op.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    clock: Clock,
+    tid: u64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::disabled()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::with_clock(Clock::new(), true)
+    }
+
+    pub fn disabled() -> Tracer {
+        Tracer::with_clock(Clock::new(), false)
+    }
+
+    /// A tracer on an existing epoch — worker tracers share the parent's
+    /// so merged timestamps stay comparable.
+    pub fn with_clock(clock: Clock, enabled: bool) -> Tracer {
+        Tracer {
+            enabled,
+            clock,
+            tid: 0,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn clock(&self) -> Clock {
+        self.clock
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Begin a nested wall-clock span; it ends when the guard drops.
+    pub fn span(&self, cat: &'static str, name: impl Into<String>) -> SpanGuard<'_> {
+        if !self.enabled {
+            return SpanGuard {
+                tracer: self,
+                idx: None,
+            };
+        }
+        let ts = self.clock.elapsed_us();
+        let mut inner = self.lock();
+        let idx = inner.events.len();
+        inner.events.push(SpanRec {
+            name: name.into(),
+            cat,
+            tid: self.tid,
+            wall_ts_us: ts,
+            wall_dur_us: 0.0,
+            sim_ts_us: None,
+            sim_dur_us: None,
+            args: BTreeMap::new(),
+        });
+        inner.open.push(idx);
+        SpanGuard {
+            tracer: self,
+            idx: Some(idx),
+        }
+    }
+
+    /// Record a complete span on the **sim-time** axis (seconds in, µs
+    /// recorded). Deterministic under a fixed seed; `tid` picks the
+    /// rendered track (e.g. one per worker core).
+    pub fn span_sim(
+        &self,
+        cat: &'static str,
+        name: impl Into<String>,
+        tid: u64,
+        sim_start_s: f64,
+        sim_dur_s: f64,
+        args: &[(&str, Value)],
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let wall = self.clock.elapsed_us();
+        self.lock().events.push(SpanRec {
+            name: name.into(),
+            cat,
+            tid,
+            wall_ts_us: wall,
+            wall_dur_us: 0.0,
+            sim_ts_us: Some(sim_start_s * 1e6),
+            sim_dur_us: Some(sim_dur_s * 1e6),
+            args: args
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        });
+    }
+
+    /// Merge a worker tracer's spans onto this one under track `tid`.
+    /// Callers absorb workers in a deterministic order (chunk order) so
+    /// the exported event sequence is byte-stable.
+    pub fn absorb(&self, worker: Tracer, tid: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut events = std::mem::take(&mut worker.lock().events);
+        for ev in &mut events {
+            ev.tid = tid;
+        }
+        self.lock().events.extend(events);
+    }
+
+    /// Number of recorded spans.
+    pub fn len(&self) -> usize {
+        self.lock().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the recorded spans (tests, breakdown rendering).
+    pub fn events(&self) -> Vec<SpanRec> {
+        self.lock().events.clone()
+    }
+
+    /// Export as a Chrome `trace_event` JSON document (the "JSON Object
+    /// Format": `{"traceEvents": [...]}`; every event is a complete `X`
+    /// event). Sim-time spans use their virtual timestamps; wall spans
+    /// use real ones. `args.clock` says which.
+    pub fn to_chrome_json(&self) -> Value {
+        let events: Vec<Value> = self
+            .lock()
+            .events
+            .iter()
+            .map(|ev| {
+                let mut args = ev.args.clone();
+                args.insert(
+                    "clock".to_string(),
+                    Value::str(if ev.on_sim_clock() { "sim" } else { "wall" }),
+                );
+                Value::obj([
+                    ("args".to_string(), Value::Obj(args)),
+                    ("cat".to_string(), Value::str(ev.cat)),
+                    ("dur".to_string(), Value::Num(ev.dur_us())),
+                    ("name".to_string(), Value::str(ev.name.clone())),
+                    ("ph".to_string(), Value::str("X")),
+                    ("pid".to_string(), Value::Num(1.0)),
+                    ("tid".to_string(), Value::Num(ev.tid as f64)),
+                    (
+                        "ts".to_string(),
+                        Value::Num(ev.sim_ts_us.unwrap_or(ev.wall_ts_us)),
+                    ),
+                ])
+            })
+            .collect();
+        Value::obj([
+            ("displayTimeUnit".to_string(), Value::str("ms")),
+            ("traceEvents".to_string(), Value::Arr(events)),
+        ])
+    }
+
+    /// Aggregate per-phase (category) time breakdown, rendered as an
+    /// aligned table — the quick "where did the time go" view.
+    pub fn render_breakdown(&self) -> String {
+        let inner = self.lock();
+        let mut agg: BTreeMap<&'static str, (u64, f64)> = BTreeMap::new();
+        for ev in &inner.events {
+            let e = agg.entry(ev.cat).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += ev.dur_us();
+        }
+        let total: f64 = agg.values().map(|(_, us)| us).sum();
+        let mut out = format!(
+            "phase breakdown ({} spans):\n{:>12} {:>8} {:>12} {:>7}\n",
+            inner.events.len(),
+            "phase",
+            "spans",
+            "total_ms",
+            "share"
+        );
+        for (cat, (n, us)) in &agg {
+            out.push_str(&format!(
+                "{:>12} {:>8} {:>12.3} {:>6.1}%\n",
+                cat,
+                n,
+                us / 1e3,
+                if total > 0.0 { 100.0 * us / total } else { 0.0 }
+            ));
+        }
+        out
+    }
+}
+
+/// RAII handle for a wall-clock span: finishes on drop.
+pub struct SpanGuard<'a> {
+    tracer: &'a Tracer,
+    idx: Option<usize>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach a key/value attribute to the span.
+    pub fn attr(&self, key: &str, value: Value) {
+        if let Some(i) = self.idx {
+            self.tracer.lock().events[i]
+                .args
+                .insert(key.to_string(), value);
+        }
+    }
+
+    pub fn attr_num(&self, key: &str, v: f64) {
+        self.attr(key, Value::Num(v));
+    }
+
+    pub fn attr_str(&self, key: &str, v: impl Into<String>) {
+        self.attr(key, Value::str(v.into()));
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(i) = self.idx {
+            let end = self.tracer.clock.elapsed_us();
+            let mut inner = self.tracer.lock();
+            let started = inner.events[i].wall_ts_us;
+            inner.events[i].wall_dur_us = end - started;
+            // guards drop LIFO in straight-line code; tolerate (rather
+            // than corrupt) out-of-order drops by removing by value
+            if let Some(pos) = inner.open.iter().rposition(|&x| x == i) {
+                inner.open.remove(pos);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_and_time_contains_children() {
+        let t = Tracer::new();
+        {
+            let parent = t.span("task", "outer");
+            parent.attr_str("k", "v");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _child = t.span("run", "inner");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        let (outer, inner) = (&evs[0], &evs[1]);
+        assert_eq!(outer.name, "outer");
+        assert_eq!(outer.args["k"], Value::str("v"));
+        // parent interval contains the child's
+        assert!(outer.wall_ts_us <= inner.wall_ts_us);
+        assert!(
+            outer.wall_ts_us + outer.wall_dur_us >= inner.wall_ts_us + inner.wall_dur_us,
+            "{outer:?} vs {inner:?}"
+        );
+        assert!(inner.wall_dur_us > 0.0);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        {
+            let g = t.span("task", "x");
+            g.attr_num("n", 1.0);
+        }
+        t.span_sim("request", "r", 1, 0.0, 1.0, &[]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn sim_spans_are_deterministic_and_tagged() {
+        let mk = || {
+            let t = Tracer::new();
+            t.span_sim(
+                "request",
+                "req:0",
+                3,
+                1.25e-3,
+                0.5e-3,
+                &[("class", Value::str("rpc"))],
+            );
+            t.to_chrome_json().to_compact()
+        };
+        let a = mk();
+        assert_eq!(a, mk(), "sim-only traces must be byte-identical");
+        assert!(a.contains("\"clock\":\"sim\""));
+        assert!(a.contains("\"ts\":1250"));
+        assert!(a.contains("\"dur\":500"));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Tracer::new();
+        drop(t.span("prepare", "p"));
+        let v = t.to_chrome_json();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("cat").unwrap().as_str(), Some("prepare"));
+        assert_eq!(
+            evs[0].get("args").unwrap().get("clock").unwrap().as_str(),
+            Some("wall")
+        );
+        // reparses as valid JSON
+        assert!(crate::util::json::parse(&v.to_pretty()).is_ok());
+    }
+
+    #[test]
+    fn absorb_retids_and_appends_in_call_order() {
+        let main = Tracer::new();
+        drop(main.span("task", "main"));
+        let w1 = Tracer::with_clock(main.clock(), true);
+        drop(w1.span("run", "w1"));
+        let w2 = Tracer::with_clock(main.clock(), true);
+        drop(w2.span("run", "w2"));
+        main.absorb(w1, 1);
+        main.absorb(w2, 2);
+        let evs = main.events();
+        let names: Vec<(&str, u64)> =
+            evs.iter().map(|e| (e.name.as_str(), e.tid)).collect();
+        assert_eq!(names, vec![("main", 0), ("w1", 1), ("w2", 2)]);
+    }
+
+    #[test]
+    fn breakdown_aggregates_by_phase() {
+        let t = Tracer::new();
+        drop(t.span("prepare", "a"));
+        drop(t.span("run", "b"));
+        drop(t.span("run", "c"));
+        let b = t.render_breakdown();
+        assert!(b.contains("3 spans"));
+        assert!(b.contains("prepare"));
+        assert!(b.contains("run"));
+    }
+}

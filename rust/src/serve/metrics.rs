@@ -3,12 +3,13 @@
 //! achieved throughput, avg/p95/p99 latency, SLO-violation rate, and how
 //! much host CPU the placement policy freed.
 
+use crate::obs::Obs;
 use crate::platform::PlatformId;
 use crate::util::stats::Summary;
 
 use super::load::Arrivals;
 use super::scheduler::Policy;
-use super::sim::{run_serve, ServeConfig, ServeOutcome};
+use super::sim::{run_serve_obs, ServeConfig, ServeOutcome};
 
 /// One point on a throughput–latency curve.
 #[derive(Debug, Clone, PartialEq)]
@@ -107,12 +108,23 @@ pub fn host_only_capacity_rps(cfg: &ServeConfig) -> f64 {
 
 /// Run an offered-load sweep: one open-loop Poisson run per rate.
 pub fn sweep(base: &ServeConfig, offered_rps: &[f64]) -> Vec<LoadPoint> {
+    sweep_obs(base, offered_rps, &Obs::disabled())
+}
+
+/// [`sweep`] with observability: each rate runs under a wall-clock span
+/// (how long the sweep point took to simulate) while the per-request
+/// lifecycle spans and serving metrics land on `obs` in sim-time.
+pub fn sweep_obs(base: &ServeConfig, offered_rps: &[f64], obs: &Obs) -> Vec<LoadPoint> {
     offered_rps
         .iter()
         .map(|&rate| {
             let mut cfg = base.clone();
             cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
-            let out = run_serve(&cfg);
+            let span = obs.tracer.span("sweep", format!("offered {rate:.0} rps"));
+            let out = run_serve_obs(&cfg, obs);
+            span.attr_num("completed", out.completed as f64);
+            span.attr_num("rejected", out.rejected as f64);
+            drop(span);
             point(&cfg, rate, &out)
         })
         .collect()

@@ -34,8 +34,10 @@ pub mod sim;
 pub mod task;
 
 pub use load::Arrivals;
-pub use metrics::{capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, LoadPoint};
+pub use metrics::{
+    capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, sweep_obs, LoadPoint,
+};
 pub use request::{Mix, RequestClass, ServiceJitter};
 pub use scheduler::{Policy, Pool};
-pub use sim::{run_serve, ServeConfig, ServeOutcome};
+pub use sim::{run_serve, run_serve_obs, ServeConfig, ServeOutcome};
 pub use task::ServingTask;

@@ -68,6 +68,9 @@ impl Policy {
 /// One admitted request.
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Request sequence number (arrival order) — names the request's
+    /// lifecycle spans in the exported trace.
+    pub id: u64,
     pub class: RequestClass,
     /// Virtual arrival time (seconds).
     pub arrived_s: f64,
@@ -195,6 +198,7 @@ mod tests {
 
     fn job(svc: f64) -> Job {
         Job {
+            id: 0,
             class: IndexGet,
             arrived_s: 0.0,
             service_s: svc,

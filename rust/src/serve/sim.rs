@@ -17,13 +17,20 @@
 //! `Pcg` streams, the engine breaks ties FIFO, and in-pool core selection
 //! is deterministic.
 
+use crate::obs::Obs;
 use crate::platform::PlatformId;
 use crate::sim::engine::Engine;
+use crate::util::json::Value;
 use crate::util::rng::Pcg;
 
 use super::load::Arrivals;
 use super::request::{sample_service_s, Mix, ServiceJitter};
 use super::scheduler::{route, Job, Policy, Pool, PoolSel};
+
+/// Trace track ids: host core `i` renders on tid `HOST_TID0 + i`, DPU
+/// core `i` on `DPU_TID0 + i`, so the two pools group visually.
+const HOST_TID0: u64 = 1;
+const DPU_TID0: u64 = 1001;
 
 /// Configuration of one serving run.
 #[derive(Debug, Clone)]
@@ -99,6 +106,15 @@ enum Ev {
 
 /// Run one serving simulation to completion.
 pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
+    run_serve_obs(cfg, &Obs::disabled())
+}
+
+/// [`run_serve`] with observability instruments: per-request lifecycle
+/// spans (`request`/`queue`/`service`) placed on the **sim-time** axis,
+/// pool-backlog high-water gauges, and rejection/SLO counters. Everything
+/// recorded derives from the seeded simulation, so traces and metrics are
+/// byte-stable under a fixed seed (DESIGN.md §9).
+pub fn run_serve_obs(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
     let total = cfg.total_requests.max(1);
     let mut rng_arrive = Pcg::with_stream(cfg.seed, 0x5e7_a001);
     let mut rng_class = Pcg::with_stream(cfg.seed, 0x5e7_a002);
@@ -131,6 +147,7 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
 
     let mut completed = 0u64;
     let mut rejected = 0u64;
+    let mut next_id = 0u64;
     let mut latencies_us = Vec::with_capacity(total);
     let mut waits_us = Vec::with_capacity(total);
 
@@ -145,6 +162,9 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
                 }
 
                 let class = cfg.mix.sample(&mut rng_class);
+                let id = next_id;
+                next_id += 1;
+                obs.metrics.inc("serve.arrived");
                 let sel = route(
                     cfg.policy,
                     &host,
@@ -161,7 +181,9 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
                 };
                 let service = sample_service_s(class, pool.platform, cfg.jitter, &mut rng_service);
                 let ci = pool.least_loaded_core();
+                let tid = if dpu_side { DPU_TID0 } else { HOST_TID0 } + ci as u64;
                 let job = Job {
+                    id,
                     class,
                     arrived_s: now,
                     service_s: service,
@@ -170,10 +192,23 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
                     pool.busy_s += service;
                     pool.cores[ci].current = Some(job);
                     waits_us.push(0.0);
+                    obs.metrics.observe("serve.wait_us", 0.0);
                     eng.schedule_in(service, Ev::Depart { dpu_side, core: ci });
                 } else if pool.cores[ci].queue.len() >= cfg.queue_cap {
                     // admission control: shed rather than queue unboundedly
                     rejected += 1;
+                    obs.metrics.inc("serve.rejected");
+                    if obs.tracer.is_enabled() {
+                        // zero-duration marker on the rejecting core's track
+                        obs.tracer.span_sim(
+                            "reject",
+                            format!("req:{id} reject"),
+                            tid,
+                            now,
+                            0.0,
+                            &[("class", Value::str(class.name()))],
+                        );
+                    }
                     // closed loop: rejection completes the client's request
                     // cycle too — it thinks, then issues the next one (the
                     // client population must not shrink on rejection)
@@ -186,6 +221,14 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
                 } else {
                     pool.cores[ci].queue.push_back(job);
                 }
+                obs.metrics.gauge_max(
+                    if dpu_side {
+                        "serve.dpu_backlog_hwm"
+                    } else {
+                        "serve.host_backlog_hwm"
+                    },
+                    pool.backlog() as f64,
+                );
             }
             Ev::Depart { dpu_side, core: ci } => {
                 let pool = if dpu_side {
@@ -197,11 +240,55 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
                     .current
                     .take()
                     .expect("departure from an idle core");
-                latencies_us.push((now - done.arrived_s) * 1e6);
+                let latency_us = (now - done.arrived_s) * 1e6;
+                latencies_us.push(latency_us);
                 pool.served += 1;
                 completed += 1;
+                obs.metrics.inc("serve.completed");
+                obs.metrics.observe("serve.latency_us", latency_us);
+                if latency_us > cfg.slo_us {
+                    obs.metrics.inc("serve.slo_violations");
+                }
+                if obs.tracer.is_enabled() {
+                    // the full arrive→depart lifecycle in sim-time, split
+                    // into its queue-wait and service segments
+                    let tid = if dpu_side { DPU_TID0 } else { HOST_TID0 } + ci as u64;
+                    let svc_start_s = now - done.service_s;
+                    let wait_s = (svc_start_s - done.arrived_s).max(0.0);
+                    obs.tracer.span_sim(
+                        "request",
+                        format!("req:{}", done.id),
+                        tid,
+                        done.arrived_s,
+                        now - done.arrived_s,
+                        &[
+                            ("class", Value::str(done.class.name())),
+                            ("wait_us", Value::Num(wait_s * 1e6)),
+                        ],
+                    );
+                    if wait_s > 0.0 {
+                        obs.tracer.span_sim(
+                            "queue",
+                            format!("req:{} queued", done.id),
+                            tid,
+                            done.arrived_s,
+                            wait_s,
+                            &[],
+                        );
+                    }
+                    obs.tracer.span_sim(
+                        "service",
+                        format!("req:{} service", done.id),
+                        tid,
+                        svc_start_s,
+                        done.service_s,
+                        &[],
+                    );
+                }
                 if let Some(next) = pool.cores[ci].queue.pop_front() {
-                    waits_us.push((now - next.arrived_s) * 1e6);
+                    let wait_us = (now - next.arrived_s) * 1e6;
+                    waits_us.push(wait_us);
+                    obs.metrics.observe("serve.wait_us", wait_us);
                     pool.busy_s += next.service_s;
                     let svc = next.service_s;
                     pool.cores[ci].current = Some(next);
@@ -217,6 +304,11 @@ pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
             }
         }
     }
+
+    // engine-level stats: queue dynamics of the event loop itself
+    obs.metrics.add("sim.events_processed", eng.processed());
+    obs.metrics.gauge_max("sim.heap_hwm", eng.heap_high_water() as f64);
+    obs.metrics.gauge_max("sim.elapsed_s", eng.now());
 
     debug_assert_eq!(completed + rejected, issued as u64);
     ServeOutcome {
@@ -349,6 +441,66 @@ mod tests {
         cfg.seed = 43;
         let c = run_serve(&cfg);
         assert_ne!(a.latencies_us, c.latencies_us);
+    }
+
+    #[test]
+    fn obs_trace_and_metrics_are_seed_deterministic() {
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            Policy::QueueAware,
+            Mix::from_name("mixed").unwrap(),
+            9,
+        );
+        cfg.total_requests = 400;
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 30_000.0 };
+        let run = || {
+            let obs = Obs::recording();
+            let out = run_serve_obs(&cfg, &obs);
+            (
+                out,
+                obs.tracer.to_chrome_json().to_compact(),
+                obs.metrics.snapshot().to_compact(),
+            )
+        };
+        let (out_a, trace_a, metrics_a) = run();
+        let (out_b, trace_b, metrics_b) = run();
+        // serve spans live on the sim clock, so the whole trace document
+        // is byte-identical across runs — not just modulo wall time
+        assert_eq!(trace_a, trace_b);
+        assert_eq!(metrics_a, metrics_b);
+        assert!(trace_a.contains("\"clock\":\"sim\""));
+        assert!(trace_a.contains("\"cat\":\"request\""));
+        assert!(trace_a.contains("\"cat\":\"service\""));
+        // counters agree with the outcome the caller sees
+        let obs = Obs::recording();
+        let out = run_serve_obs(&cfg, &obs);
+        assert_eq!(out_a, out);
+        assert_eq!(obs.metrics.counter("serve.completed"), out.completed);
+        assert_eq!(obs.metrics.counter("serve.rejected"), out.rejected);
+        assert_eq!(
+            obs.metrics.counter("serve.arrived"),
+            out.completed + out.rejected
+        );
+        // every completion observed one latency sample
+        assert!(obs.metrics.percentile("serve.latency_us", 50.0).is_some());
+        assert!(obs.metrics.gauge("sim.heap_hwm").unwrap_or(0.0) >= 1.0);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn disabled_obs_changes_nothing() {
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf3),
+            Policy::StaticSplit { dpu_fraction: 0.5 },
+            Mix::single(RequestClass::IndexGet),
+            3,
+        );
+        cfg.total_requests = 500;
+        let plain = run_serve(&cfg);
+        let obs = Obs::recording();
+        let traced = run_serve_obs(&cfg, &obs);
+        assert_eq!(plain, traced, "instrumentation must not perturb the sim");
+        assert!(!obs.tracer.is_empty());
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub struct Engine<T> {
     now: SimTime,
     seq: u64,
     processed: u64,
+    heap_hwm: usize,
 }
 
 impl<T> Default for Engine<T> {
@@ -65,6 +66,7 @@ impl<T> Engine<T> {
             now: 0.0,
             seq: 0,
             processed: 0,
+            heap_hwm: 0,
         }
     }
 
@@ -96,6 +98,7 @@ impl<T> Engine<T> {
             seq: self.seq,
             payload,
         });
+        self.heap_hwm = self.heap_hwm.max(self.heap.len());
     }
 
     /// Pop the next event, advancing the clock. `None` when drained.
@@ -113,6 +116,11 @@ impl<T> Engine<T> {
     pub fn pending(&self) -> usize {
         self.heap.len()
     }
+    /// Most events ever simultaneously pending — the queue-dynamics
+    /// high-water mark reported through `obs` metrics.
+    pub fn heap_high_water(&self) -> usize {
+        self.heap_hwm
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +137,21 @@ mod tests {
         assert_eq!(order, vec!["a", "b", "c"]);
         assert_eq!(e.now(), 3.0);
         assert_eq!(e.processed(), 3);
+        assert_eq!(e.heap_high_water(), 3);
+    }
+
+    #[test]
+    fn heap_high_water_tracks_peak_not_current() {
+        let mut e = Engine::new();
+        e.schedule_in(1.0, 0u32);
+        e.schedule_in(2.0, 1u32);
+        assert_eq!(e.heap_high_water(), 2);
+        e.next_event();
+        e.next_event();
+        assert!(e.is_empty());
+        assert_eq!(e.heap_high_water(), 2, "hwm must not shrink on pop");
+        e.schedule_in(1.0, 2u32);
+        assert_eq!(e.heap_high_water(), 2);
     }
 
     #[test]

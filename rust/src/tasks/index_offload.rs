@@ -174,7 +174,7 @@ mod tests {
         let built_twice = ctx
             .logs()
             .iter()
-            .filter(|l| l.contains("built trees"))
+            .filter(|l| l.line.contains("built trees"))
             .count();
         assert_eq!(built_twice, 1);
         assert!(ctx.logs().len() > logs_after_first);

@@ -123,7 +123,7 @@ impl BenchTable {
         print!("{}", self.render());
         match self.write_csv(csv_name) {
             Ok(p) => println!("   -> {}", p.display()),
-            Err(e) => eprintln!("   csv write failed: {e}"),
+            Err(e) => crate::log_warn!("csv write failed: {e}"),
         }
     }
 }

@@ -162,6 +162,98 @@ fn serve_command_prints_deterministic_sweep() {
 }
 
 #[test]
+fn run_with_trace_writes_valid_chrome_trace() {
+    let box_out = dpbento(&["example-box"]);
+    assert!(box_out.status.success());
+    let dir = std::env::temp_dir().join("dpbento_cli_trace");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let box_path = dir.join("box.json");
+    std::fs::write(&box_path, &box_out.stdout).unwrap();
+    let trace_path = dir.join("trace.json");
+
+    let run = dpbento(&[
+        "run",
+        box_path.to_str().unwrap(),
+        "--trace",
+        trace_path.to_str().unwrap(),
+        "--log-level",
+        "debug",
+    ]);
+    assert!(
+        run.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&run.stderr)
+    );
+    // the facade logged through the configured level
+    let err = String::from_utf8_lossy(&run.stderr);
+    assert!(err.contains("[dpbento debug]"), "{err}");
+    assert!(err.contains("trace with"), "{err}");
+
+    // the trace file is valid Chrome trace_event JSON with the expected
+    // phase structure
+    let raw = std::fs::read_to_string(&trace_path).unwrap();
+    let v = dpbento::util::json::parse(&raw).expect("trace parses as JSON");
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let cats: Vec<&str> = events
+        .iter()
+        .map(|e| e.get("cat").unwrap().as_str().unwrap())
+        .collect();
+    for cat in ["box", "task", "prepare", "run", "report"] {
+        assert!(cats.contains(&cat), "no '{cat}' spans in {cats:?}");
+    }
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("args").unwrap().get("clock").unwrap().as_str(), Some("wall"));
+    }
+}
+
+#[test]
+fn serve_with_trace_records_sim_time_lifecycle() {
+    let dir = std::env::temp_dir().join("dpbento_cli_serve_trace");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("serve_trace.json");
+    let o = dpbento(&[
+        "serve",
+        "--platforms",
+        "bf2",
+        "--policy",
+        "queue-aware",
+        "--loads",
+        "0.5",
+        "--requests",
+        "200",
+        "--trace",
+        trace_path.to_str().unwrap(),
+    ]);
+    assert!(
+        o.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+    let raw = std::fs::read_to_string(&trace_path).unwrap();
+    let v = dpbento::util::json::parse(&raw).expect("trace parses as JSON");
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    // request lifecycle spans ride the sim clock; the sweep spans wall
+    let request_spans: Vec<_> = events
+        .iter()
+        .filter(|e| e.get("cat").unwrap().as_str() == Some("request"))
+        .collect();
+    assert!(!request_spans.is_empty());
+    for e in &request_spans {
+        assert_eq!(e.get("args").unwrap().get("clock").unwrap().as_str(), Some("sim"));
+    }
+    assert!(events
+        .iter()
+        .any(|e| e.get("cat").unwrap().as_str() == Some("service")));
+    assert!(events
+        .iter()
+        .any(|e| e.get("cat").unwrap().as_str() == Some("sweep")));
+}
+
+#[test]
 fn serve_command_rejects_bad_arguments() {
     let o = dpbento(&["serve", "--policy", "warp"]);
     assert!(!o.status.success());

@@ -147,6 +147,12 @@ fn report_json_round_trips() {
     let json = report.to_json().to_pretty();
     let parsed = dpbento::util::json::parse(&json).unwrap();
     assert_eq!(parsed.get("box").unwrap().as_str().unwrap(), "json_rt");
+    // the obs metrics snapshot rides along in every report
+    let obs = parsed.get("obs_metrics").unwrap();
+    assert_eq!(
+        obs.get("counters").unwrap().get("exec.tests_run").unwrap().as_f64(),
+        Some(2.0)
+    );
     let dir = std::env::temp_dir().join("dpbento_it_report");
     let _ = std::fs::remove_dir_all(&dir);
     report.write_to(&dir).unwrap();

@@ -1,0 +1,169 @@
+//! Observability integration tests (DESIGN.md §9): trace-export
+//! determinism across whole box runs, the metrics snapshot embedded in
+//! report JSON, and the grep-enforced rule that every diagnostic flows
+//! through the `obs::log` facade.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
+use dpbento::obs::Obs;
+use dpbento::util::json::Value;
+
+fn exec_with_recording(parallel: bool) -> (dpbento::coordinator::BoxReport, Arc<Obs>) {
+    let cfg = BoxConfig::parse(
+        r#"{
+          "name": "obs_probe",
+          "platforms": ["bf2", "host"],
+          "seed": 7,
+          "tasks": [{
+            "task": "compute",
+            "params": {"data_type": ["int8"], "operation": ["add", "mul"]}
+          }]
+        }"#,
+    )
+    .unwrap();
+    let obs = Arc::new(Obs::recording());
+    let opts = ExecOptions {
+        parallel,
+        obs: Arc::clone(&obs),
+        ..ExecOptions::default()
+    };
+    let report = run_box(&Registry::builtin(), &cfg, &opts).unwrap();
+    (report, obs)
+}
+
+/// Rebuild a Chrome trace document with every wall-clock `ts`/`dur`
+/// zeroed. What remains — names, categories, track ids, attributes,
+/// event order, and all sim-time stamps — is the determinism contract.
+fn strip_wall_times(doc: &Value) -> Value {
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let stripped: Vec<Value> = events
+        .iter()
+        .map(|e| match e {
+            Value::Obj(map) => {
+                let mut map = map.clone();
+                let on_wall = map
+                    .get("args")
+                    .and_then(|a| a.get("clock"))
+                    .and_then(Value::as_str)
+                    == Some("wall");
+                if on_wall {
+                    map.insert("ts".to_string(), Value::Num(0.0));
+                    map.insert("dur".to_string(), Value::Num(0.0));
+                }
+                Value::Obj(map)
+            }
+            other => other.clone(),
+        })
+        .collect();
+    Value::obj([
+        (
+            "displayTimeUnit".to_string(),
+            doc.get("displayTimeUnit").unwrap().clone(),
+        ),
+        ("traceEvents".to_string(), Value::Arr(stripped)),
+    ])
+}
+
+#[test]
+fn box_trace_is_deterministic_modulo_wall_clock() {
+    let (rep_a, obs_a) = exec_with_recording(false);
+    let (rep_b, obs_b) = exec_with_recording(false);
+    let a = strip_wall_times(&obs_a.tracer.to_chrome_json()).to_compact();
+    let b = strip_wall_times(&obs_b.tracer.to_chrome_json()).to_compact();
+    assert_eq!(a, b, "stripped traces must be byte-identical");
+    // nesting structure survived the export: a task span wraps its
+    // prepare and run spans
+    assert!(a.contains("\"cat\":\"task\""));
+    assert!(a.contains("\"cat\":\"prepare\""));
+    assert!(a.contains("\"cat\":\"run\""));
+    // reports (with the embedded metrics snapshot) are byte-identical
+    assert_eq!(
+        rep_a.to_json().to_compact(),
+        rep_b.to_json().to_compact()
+    );
+}
+
+#[test]
+fn parallel_trace_merges_deterministically() {
+    let (_, obs_a) = exec_with_recording(true);
+    let (_, obs_b) = exec_with_recording(true);
+    let a = strip_wall_times(&obs_a.tracer.to_chrome_json()).to_compact();
+    let b = strip_wall_times(&obs_b.tracer.to_chrome_json()).to_compact();
+    assert_eq!(a, b, "worker absorption order must be deterministic");
+    // worker spans were re-tracked off the main thread's tid 0
+    let evs = obs_a.tracer.events();
+    assert!(evs.iter().any(|e| e.tid > 0), "no worker tracks recorded");
+}
+
+#[test]
+fn report_embeds_executor_metrics() {
+    let (report, obs) = exec_with_recording(false);
+    assert_eq!(obs.metrics.counter("exec.tasks_run"), 2);
+    assert_eq!(obs.metrics.counter("exec.tests_run"), 4);
+    let counters = report
+        .to_json()
+        .get("obs_metrics")
+        .unwrap()
+        .get("counters")
+        .unwrap()
+        .clone();
+    assert_eq!(counters.get("exec.tasks_run").unwrap().as_f64(), Some(2.0));
+}
+
+/// The grep-enforced facade rule: `eprintln!` appears only inside the
+/// facade's own sink, and `println!` only on the two intentional stdout
+/// surfaces (CLI reports and the bench harness table printer).
+#[test]
+fn no_raw_diagnostics_outside_the_log_facade() {
+    const EPRINTLN_ALLOWED: &[&str] = &["src/obs/log.rs"];
+    const PRINTLN_ALLOWED: &[&str] = &["src/main.rs", "src/util/bench.rs"];
+
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files);
+    assert!(files.len() > 20, "suspiciously few sources: {files:?}");
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let full = path.to_string_lossy().replace('\\', "/");
+        let rel_key = match full.rfind("/src/") {
+            Some(i) => full[i + 1..].to_string(),
+            None => full.clone(),
+        };
+        let text = std::fs::read_to_string(path).unwrap();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim_start().starts_with("//") {
+                continue; // prose may *mention* the macros
+            }
+            let has_eprintln = line.contains("eprintln!");
+            // `println!` not preceded by `e` (which would be eprintln!)
+            let has_println = line.match_indices("println!").any(|(i, _)| {
+                i == 0 || !line[..i].ends_with('e')
+            });
+            if has_eprintln && !EPRINTLN_ALLOWED.contains(&rel_key.as_str()) {
+                violations.push(format!("{rel_key}:{}: eprintln!", lineno + 1));
+            }
+            if has_println && !PRINTLN_ALLOWED.contains(&rel_key.as_str()) {
+                violations.push(format!("{rel_key}:{}: println!", lineno + 1));
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "raw diagnostics outside the obs::log facade:\n{}",
+        violations.join("\n")
+    );
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
