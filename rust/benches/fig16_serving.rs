@@ -1,51 +1,70 @@
 //! Fig. 16 (beyond the paper): the serving regime — throughput–latency
-//! curves for the offload service under every placement policy, on each
-//! host+DPU deployment.
+//! curves for the offload service under every registered scheduler, on
+//! each host+DPU deployment, plus the batching/goodput extension.
 //!
 //! The batch benchmarks (Figs. 4–15) ask "how fast is one offloaded
 //! run?"; this bench asks the production question: at what offered load
 //! does each deployment stop meeting its SLO, and how much host CPU does
 //! offloading free before that happens?
 
+use dpbento::obs::Obs;
 use dpbento::platform::PlatformId;
-use dpbento::serve::{capacity_rps, host_only_capacity_rps, sweep, Mix, Policy, ServeConfig};
+use dpbento::serve::{
+    capacity_rps, host_only_capacity_rps, scheduler, sweep, Mix, ServeConfig,
+};
 use dpbento::util::bench::BenchTable;
 
 const SEED: u64 = 16;
 const REQUESTS: usize = 4000;
 const LOADS: [f64; 5] = [0.2, 0.5, 0.8, 1.0, 1.2];
 
-fn run_policy(dpu: PlatformId, policy: Policy, mix: &Mix) -> Vec<dpbento::serve::LoadPoint> {
-    let mut cfg = ServeConfig::new(Some(dpu), policy, mix.clone(), SEED);
+fn run_sched(
+    dpu: PlatformId,
+    sched: &'static str,
+    mix: &Mix,
+    max_batch: usize,
+) -> Vec<dpbento::serve::LoadPoint> {
+    let mut cfg = ServeConfig::new(Some(dpu), sched, mix.clone(), SEED);
     cfg.total_requests = REQUESTS;
+    cfg.max_batch = max_batch;
     let host_cap = host_only_capacity_rps(&cfg);
     let rates: Vec<f64> = LOADS.iter().map(|l| l * host_cap).collect();
-    sweep(&cfg, &rates)
+    sweep(&cfg, &rates, &Obs::disabled())
 }
 
 fn main() {
     let mix = Mix::from_name("mixed").expect("mixed workload");
+    let names: Vec<&'static str> = scheduler::REGISTRY.iter().map(|i| i.name).collect();
 
     for dpu in [PlatformId::Bf2, PlatformId::Bf3] {
         let mut tput = BenchTable::new(
             format!("Fig. 16a — achieved throughput, host+{dpu} (mixed workload)"),
             "req/s",
         )
-        .columns(&["host-only", "dpu-only", "static-split", "queue-aware"]);
+        .columns(&names);
         let mut p99 = BenchTable::new(
             format!("Fig. 16b — p99 latency, host+{dpu} (mixed workload)"),
             "µs",
         )
-        .columns(&["host-only", "dpu-only", "static-split", "queue-aware"]);
+        .columns(&names);
         let mut freed = BenchTable::new(
             format!("Fig. 16c — host CPU per request, host+{dpu}"),
             "µs/req",
         )
-        .columns(&["host-only", "dpu-only", "static-split", "queue-aware"]);
+        .columns(&names);
+        let mut goodput = BenchTable::new(
+            format!("Fig. 16d — SLO-constrained goodput, host+{dpu} (max_batch 8)"),
+            "req/s",
+        )
+        .columns(&names);
 
-        let curves: Vec<Vec<dpbento::serve::LoadPoint>> = Policy::ALL
+        let curves: Vec<Vec<dpbento::serve::LoadPoint>> = names
             .iter()
-            .map(|p| run_policy(dpu, *p, &mix))
+            .map(|&s| run_sched(dpu, s, &mix, 1))
+            .collect();
+        let batched: Vec<Vec<dpbento::serve::LoadPoint>> = names
+            .iter()
+            .map(|&s| run_sched(dpu, s, &mix, 8))
             .collect();
         for (li, load) in LOADS.iter().enumerate() {
             let label = format!("{:.0}% host cap", load * 100.0);
@@ -58,20 +77,25 @@ fn main() {
                 &curves.iter().map(|c| c[li].p99_us).collect::<Vec<_>>(),
             );
             freed.row_f(
-                label,
+                label.clone(),
                 &curves
                     .iter()
                     .map(|c| c[li].host_cpu_us_per_req)
                     .collect::<Vec<_>>(),
             );
+            goodput.row_f(
+                label,
+                &batched.iter().map(|c| c[li].goodput_rps).collect::<Vec<_>>(),
+            );
         }
         tput.finish(&format!("fig16a_serving_tput_{dpu}"));
         p99.finish(&format!("fig16b_serving_p99_{dpu}"));
         freed.finish(&format!("fig16c_serving_hostcpu_{dpu}"));
+        goodput.finish(&format!("fig16d_serving_goodput_{dpu}"));
 
         // shape checks mirroring the serving integration tests
-        let dpu_only = &curves[1];
         let host_only = &curves[0];
+        let dpu_only = &curves[1];
         let qa = &curves[3];
         let high = LOADS.len() - 1;
         assert!(
@@ -84,14 +108,14 @@ fn main() {
         );
         println!(
             "\n{dpu}: dpu-only knee {:.0}/s, host-only knee {:.0}/s, queue-aware knee {:.0}/s",
-            run_capacity(dpu, Policy::DpuOnly, &mix),
-            run_capacity(dpu, Policy::HostOnly, &mix),
-            run_capacity(dpu, Policy::QueueAware, &mix),
+            run_capacity(dpu, "dpu-only", &mix),
+            run_capacity(dpu, "host-only", &mix),
+            run_capacity(dpu, "queue-aware", &mix),
         );
     }
     println!("\nfig16 shape checks passed: wimpy-core pools saturate early; dynamic placement holds the SLO");
 }
 
-fn run_capacity(dpu: PlatformId, policy: Policy, mix: &Mix) -> f64 {
-    capacity_rps(&ServeConfig::new(Some(dpu), policy, mix.clone(), SEED))
+fn run_capacity(dpu: PlatformId, sched: &'static str, mix: &Mix) -> f64 {
+    capacity_rps(&ServeConfig::new(Some(dpu), sched, mix.clone(), SEED))
 }

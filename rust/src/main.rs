@@ -65,14 +65,19 @@ fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
 }
 
 fn print_help() {
+    // the policy list is generated from the scheduler registry, so help
+    // text cannot drift from what `--policy` actually accepts
+    let policies = dpbento::serve::scheduler::help_names();
     println!(
         "dpBento: benchmarking DPUs for data processing (paper reproduction)
 
 USAGE:
   dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics] [--parallel]
                 [--trace FILE] [--log-level LVL]
-  dpbento serve [--platforms bf2,bf3] [--policy all|host-only|dpu-only|static-split|queue-aware]
+  dpbento serve [--platforms bf2,bf3] [--policy all|{policies}]
                 [--workload mixed|analytics|index_get|net_rpc] [--loads 0.2,0.5,0.8,1.0,1.2]
+                [--closed-loop N,N,...] [--max-batch N] [--linger-us F]
+                [--slo US | --slo class=US,...] [--dpu-fraction F] [--json FILE]
                 [--requests N] [--seed N] [--trace FILE] [--log-level LVL]
   dpbento list-tasks
   dpbento clean [--platform host|bf2|bf3|octeon]
@@ -84,9 +89,20 @@ metrics of interest, and target platforms. See `dpbento example-box`.
 SERVING:
   `dpbento serve` drives the offload-serving layer: an open-loop load
   sweep (fractions of the host-only capacity) through each placement
-  policy on each host+DPU deployment, printing one throughput-latency
-  table per (platform, policy). The same engine is available to boxes as
-  the `serving` task (see `dpbento list-tasks`).
+  scheduler on each host+DPU deployment, printing one throughput-latency
+  table per (platform, scheduler). The same engine is available to boxes
+  as the `serving` task (see `dpbento list-tasks`).
+  --closed-loop N,N,...  sweep closed-loop client counts instead of
+                         offered load (fixed population, think time 0)
+  --max-batch N          DPU-side per-class batch accumulators: flush at
+                         N requests; a batch of N costs setup + N*marginal
+                         (1 = batching off)
+  --linger-us F          partial-batch linger deadline in microseconds
+  --slo SPEC             per-class latency SLOs: a single number applies
+                         to every class; 'class=US' entries override the
+                         default 10x-host-mean headroom per class
+  --json FILE            write the sweeps (including per-class SLO
+                         accounting) as a JSON document
 
 OBSERVABILITY (DESIGN.md §9):
   --trace FILE      export the run as Chrome trace_event JSON: wall-clock
@@ -206,13 +222,45 @@ fn cmd_run(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     })
 }
 
-/// `dpbento serve`: sweep offered load through the serving layer for each
-/// requested (platform, policy) pair and print throughput–latency tables.
+/// Parse a `--slo` spec: a bare number is a uniform SLO for every class;
+/// `class=US[,class=US...]` overrides the per-class defaults.
+fn parse_slos(spec: &str) -> anyhow::Result<dpbento::serve::ClassSlos> {
+    use dpbento::serve::{ClassSlos, RequestClass};
+    if !spec.contains('=') {
+        let us: f64 = spec
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --slo '{spec}'"))?;
+        anyhow::ensure!(us > 0.0 && us.is_finite(), "--slo must be positive");
+        return Ok(ClassSlos::uniform(us));
+    }
+    let mut slos = ClassSlos::default_headroom();
+    for part in spec.split(',') {
+        let (name, v) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad --slo entry '{part}' (want class=US)"))?;
+        let class = RequestClass::from_name(name.trim())
+            .ok_or_else(|| anyhow::anyhow!("unknown request class '{name}' in --slo"))?;
+        let us: f64 = v
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --slo value '{v}'"))?;
+        anyhow::ensure!(us > 0.0 && us.is_finite(), "--slo values must be positive");
+        slos.set(class, us);
+    }
+    Ok(slos)
+}
+
+/// `dpbento serve`: sweep offered load (or, with `--closed-loop`, client
+/// count) through the serving layer for each requested
+/// (platform, scheduler) pair and print throughput–latency tables.
 fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     use dpbento::platform::PlatformId;
     use dpbento::serve::{
-        capacity_rps, host_only_capacity_rps, render_sweep, sweep_obs, Mix, Policy, ServeConfig,
+        capacity_rps, host_only_capacity_rps, render_sweep, scheduler, sweep, sweep_closed,
+        sweep_to_json, Mix, ServeConfig,
     };
+    use dpbento::util::json::Value;
 
     let (trace, _verbose) = obs_flags(&mut args)?;
     let platforms: Vec<PlatformId> = take_opt(&mut args, "--platforms")
@@ -224,11 +272,15 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
         })
         .collect::<anyhow::Result<_>>()?;
     let policy_arg = take_opt(&mut args, "--policy").unwrap_or_else(|| "all".to_string());
-    let policies: Vec<Policy> = if policy_arg == "all" {
-        Policy::ALL.to_vec()
+    let policies: Vec<&'static scheduler::SchedulerInfo> = if policy_arg == "all" {
+        scheduler::REGISTRY.iter().collect()
     } else {
-        vec![Policy::from_name(&policy_arg)
-            .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_arg}'"))?]
+        vec![scheduler::lookup(&policy_arg).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy '{policy_arg}' (available: {})",
+                scheduler::help_names()
+            )
+        })?]
     };
     let workload = take_opt(&mut args, "--workload").unwrap_or_else(|| "mixed".to_string());
     let mix = Mix::from_name(&workload)
@@ -246,6 +298,47 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
         loads.iter().all(|&l| l > 0.0 && l.is_finite()),
         "load factors must be positive"
     );
+    let closed_loop: Option<Vec<u32>> = take_opt(&mut args, "--closed-loop")
+        .map(|s| {
+            s.split(',')
+                .map(|c| {
+                    c.trim()
+                        .parse::<u32>()
+                        .map_err(|_| anyhow::anyhow!("bad --closed-loop client count '{c}'"))
+                        .and_then(|n| {
+                            anyhow::ensure!(n >= 1, "--closed-loop counts must be >= 1");
+                            Ok(n)
+                        })
+                })
+                .collect::<anyhow::Result<Vec<u32>>>()
+        })
+        .transpose()?;
+    let max_batch = take_opt(&mut args, "--max-batch")
+        .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --max-batch")))
+        .transpose()?
+        .unwrap_or(1);
+    anyhow::ensure!(
+        (1..=4096).contains(&max_batch),
+        "--max-batch must be in 1..=4096"
+    );
+    let linger_us = take_opt(&mut args, "--linger-us")
+        .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --linger-us")))
+        .transpose()?
+        .unwrap_or(20.0);
+    anyhow::ensure!(
+        linger_us >= 0.0 && linger_us.is_finite(),
+        "--linger-us must be finite and >= 0"
+    );
+    let slos = take_opt(&mut args, "--slo").map(|s| parse_slos(&s)).transpose()?;
+    let dpu_fraction = take_opt(&mut args, "--dpu-fraction")
+        .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --dpu-fraction")))
+        .transpose()?
+        .unwrap_or(0.5);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&dpu_fraction),
+        "--dpu-fraction must be in [0,1]"
+    );
+    let json_path = take_opt(&mut args, "--json");
     let requests = take_opt(&mut args, "--requests")
         .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --requests")))
         .transpose()?
@@ -263,31 +356,61 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     println!(
         "dpBento serving sweep: workload '{workload}', {requests} requests/point, seed {seed}"
     );
-    println!("load factors are fractions of the host-only capacity\n");
+    match &closed_loop {
+        Some(clients) => println!(
+            "closed loop: sweeping client counts {clients:?} (zero think time)\n"
+        ),
+        None => println!("load factors are fractions of the host-only capacity\n"),
+    }
     let obs = if trace.is_some() {
         Obs::recording()
     } else {
         Obs::disabled()
     };
+    let mut json_sweeps: Vec<Value> = Vec::new();
     for platform in &platforms {
         let dpu = if platform.is_dpu() { Some(*platform) } else { None };
-        for policy in &policies {
-            let mut cfg = ServeConfig::new(dpu, *policy, mix.clone(), seed);
+        for info in &policies {
+            let mut cfg = ServeConfig::new(dpu, info.name, mix.clone(), seed);
             cfg.total_requests = requests;
+            cfg.max_batch = max_batch;
+            cfg.linger_us = linger_us;
+            cfg.dpu_fraction = dpu_fraction;
+            if let Some(s) = slos {
+                cfg.slos = s;
+            }
+            cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
             let host_cap = host_only_capacity_rps(&cfg);
-            let rates: Vec<f64> = loads.iter().map(|l| l * host_cap).collect();
-            dpbento::log_debug!("sweeping {} under {}", platform, policy.name());
-            let points = sweep_obs(&cfg, &rates, &obs);
+            dpbento::log_debug!("sweeping {} under {}", platform, info.name);
+            let points = match &closed_loop {
+                Some(clients) => sweep_closed(&cfg, clients, &obs),
+                None => {
+                    let rates: Vec<f64> = loads.iter().map(|l| l * host_cap).collect();
+                    sweep(&cfg, &rates, &obs)
+                }
+            };
             let title = format!(
                 "{} · {} (capacity {:.0}/s, host-only {:.0}/s)",
                 platform,
-                policy.name(),
+                info.name,
                 capacity_rps(&cfg),
                 host_cap
             );
+            if json_path.is_some() {
+                json_sweeps.push(sweep_to_json(&title, info.name, &points));
+            }
             print!("{}", render_sweep(&title, &points));
             println!();
         }
+    }
+    if let Some(path) = json_path {
+        let doc = Value::obj([
+            ("workload".to_string(), Value::str(workload.as_str())),
+            ("seed".to_string(), Value::num(seed as f64)),
+            ("sweeps".to_string(), Value::arr(json_sweeps)),
+        ]);
+        std::fs::write(&path, doc.to_pretty())?;
+        println!("sweep JSON written to {path}");
     }
     if let Some(trace_path) = trace {
         finish_trace(&obs, &trace_path)?;

@@ -1,25 +1,44 @@
 //! Throughput–latency reporting: turn raw [`ServeOutcome`]s into the
 //! curves the serving question is actually about — offered load vs
-//! achieved throughput, avg/p95/p99 latency, SLO-violation rate, and how
-//! much host CPU the placement policy freed.
+//! achieved throughput, SLO-constrained *goodput*, avg/p95/p99 latency,
+//! per-class violation rates, and how much host CPU the placement
+//! scheduler freed.
 
 use crate::obs::Obs;
 use crate::platform::PlatformId;
+use crate::util::json::Value;
 use crate::util::stats::Summary;
 
 use super::load::Arrivals;
-use super::scheduler::Policy;
-use super::sim::{run_serve_obs, ServeConfig, ServeOutcome};
+use super::request::RequestClass;
+use super::sim::{run_serve, ServeConfig, ServeOutcome};
+
+/// Per-class slice of a curve point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassPoint {
+    pub class: RequestClass,
+    pub arrived: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Completions within the class SLO.
+    pub slo_met: u64,
+    /// Fraction of the class's arrivals that missed its SLO (late +
+    /// rejected). 0 when the class saw no traffic.
+    pub violation_rate: f64,
+}
 
 /// One point on a throughput–latency curve.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LoadPoint {
     pub offered_rps: f64,
     pub achieved_rps: f64,
+    /// Completions *within their class SLO* per second — the axis the
+    /// SLO-aware schedulers compete on.
+    pub goodput_rps: f64,
     pub mean_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
-    /// Fraction of requests that missed the SLO (late + rejected).
+    /// Fraction of requests that missed their class SLO (late + rejected).
     pub slo_violation_rate: f64,
     /// Fraction of requests shed by admission control.
     pub rejected_frac: f64,
@@ -28,33 +47,35 @@ pub struct LoadPoint {
     /// DPU pool utilization (0 on host-only deployments).
     pub dpu_busy_frac: f64,
     /// Host CPU spent per completed request (µs) — the "host CPU freed"
-    /// axis: compare against the host-only policy's value.
+    /// axis: compare against the host-only scheduler's value.
     pub host_cpu_us_per_req: f64,
+    /// Closed-loop client count, when this point came from a closed-loop
+    /// run (`None` on open-loop sweeps).
+    pub clients: Option<u32>,
+    /// One entry per [`RequestClass::ALL`] member, in that order.
+    pub per_class: Vec<ClassPoint>,
 }
 
 /// Summarize one run into a curve point.
 pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoint {
     let elapsed = out.elapsed_s.max(f64::MIN_POSITIVE);
     let total = (out.completed + out.rejected).max(1) as f64;
-    let (mean_us, p95_us, p99_us, late) = if out.latencies_us.is_empty() {
-        (0.0, 0.0, 0.0, 0u64)
+    let (mean_us, p95_us, p99_us) = if out.latencies_us.is_empty() {
+        (0.0, 0.0, 0.0)
     } else {
         let s = Summary::from_samples(&out.latencies_us);
-        let late = out
-            .latencies_us
-            .iter()
-            .filter(|&&l| l > cfg.slo_us)
-            .count() as u64;
-        (s.mean, s.p95, s.p99, late)
+        (s.mean, s.p95, s.p99)
     };
+    let slo_met = out.slo_met();
     let dpu_capacity_s = elapsed * cfg.dpu_workers.max(1) as f64;
     LoadPoint {
         offered_rps,
         achieved_rps: out.completed as f64 / elapsed,
+        goodput_rps: slo_met as f64 / elapsed,
         mean_us,
         p95_us,
         p99_us,
-        slo_violation_rate: (late + out.rejected) as f64 / total,
+        slo_violation_rate: (total - slo_met as f64) / total,
         rejected_frac: out.rejected as f64 / total,
         host_busy_frac: out.host_busy_s / (elapsed * cfg.host_workers.max(1) as f64),
         dpu_busy_frac: if cfg.dpu.is_some() {
@@ -63,65 +84,66 @@ pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoi
             0.0
         },
         host_cpu_us_per_req: out.host_busy_s * 1e6 / out.completed.max(1) as f64,
+        clients: match cfg.arrivals {
+            Arrivals::ClosedLoop { clients, .. } => Some(clients),
+            _ => None,
+        },
+        per_class: out
+            .per_class
+            .iter()
+            .map(|c| ClassPoint {
+                class: c.class,
+                arrived: c.arrived,
+                completed: c.completed,
+                rejected: c.rejected,
+                slo_met: c.slo_met,
+                violation_rate: if c.arrived > 0 {
+                    (c.arrived - c.slo_met) as f64 / c.arrived as f64
+                } else {
+                    0.0
+                },
+            })
+            .collect(),
     }
 }
 
 /// Analytic service capacity (requests/second) of a deployment under its
-/// policy: the knee a throughput–latency curve bends around.
+/// scheduler: the knee a throughput–latency curve bends around. The DPU
+/// side's drain rate uses the *batched* mean service time, so raising
+/// `max_batch` raises the analytic knee the same way it raises the
+/// simulated one.
 pub fn capacity_rps(cfg: &ServeConfig) -> f64 {
     let host_cap =
         cfg.host_workers.max(1) as f64 / cfg.mix.mean_service_s(PlatformId::HostEpyc);
     let dpu_cap = match cfg.dpu {
-        Some(p) => cfg.dpu_workers.max(1) as f64 / cfg.mix.mean_service_s(p),
+        Some(p) => {
+            cfg.dpu_workers.max(1) as f64 / cfg.mix.mean_batched_service_s(p, cfg.max_batch)
+        }
         None => 0.0,
     };
-    match cfg.policy {
-        Policy::HostOnly => host_cap,
-        Policy::DpuOnly => {
-            if cfg.dpu.is_some() {
-                dpu_cap
-            } else {
-                host_cap
-            }
-        }
-        Policy::StaticSplit { dpu_fraction } => {
-            if cfg.dpu.is_none() || dpu_fraction <= 0.0 {
-                host_cap
-            } else if dpu_fraction >= 1.0 {
-                dpu_cap
-            } else {
-                // the split saturates when either side saturates its share
-                (host_cap / (1.0 - dpu_fraction)).min(dpu_cap / dpu_fraction)
-            }
-        }
-        Policy::QueueAware => host_cap + dpu_cap,
-    }
+    cfg.build_scheduler().capacity_rps(host_cap, dpu_cap)
 }
 
 /// The host-only capacity of the same deployment — the common reference
 /// axis sweeps and the `load` box parameter are expressed against.
 pub fn host_only_capacity_rps(cfg: &ServeConfig) -> f64 {
     let mut c = cfg.clone();
-    c.policy = Policy::HostOnly;
+    c.scheduler = "host-only";
     capacity_rps(&c)
 }
 
-/// Run an offered-load sweep: one open-loop Poisson run per rate.
-pub fn sweep(base: &ServeConfig, offered_rps: &[f64]) -> Vec<LoadPoint> {
-    sweep_obs(base, offered_rps, &Obs::disabled())
-}
-
-/// [`sweep`] with observability: each rate runs under a wall-clock span
-/// (how long the sweep point took to simulate) while the per-request
-/// lifecycle spans and serving metrics land on `obs` in sim-time.
-pub fn sweep_obs(base: &ServeConfig, offered_rps: &[f64], obs: &Obs) -> Vec<LoadPoint> {
+/// Run an offered-load sweep: one open-loop Poisson run per rate. Each
+/// rate runs under a wall-clock span (how long the sweep point took to
+/// simulate) while the per-request lifecycle spans and serving metrics
+/// land on `obs` in sim-time; pass [`Obs::disabled`] for a plain sweep.
+pub fn sweep(base: &ServeConfig, offered_rps: &[f64], obs: &Obs) -> Vec<LoadPoint> {
     offered_rps
         .iter()
         .map(|&rate| {
             let mut cfg = base.clone();
             cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
             let span = obs.tracer.span("sweep", format!("offered {rate:.0} rps"));
-            let out = run_serve_obs(&cfg, obs);
+            let out = run_serve(&cfg, obs);
             span.attr_num("completed", out.completed as f64);
             span.attr_num("rejected", out.rejected as f64);
             drop(span);
@@ -130,18 +152,63 @@ pub fn sweep_obs(base: &ServeConfig, offered_rps: &[f64], obs: &Obs) -> Vec<Load
         .collect()
 }
 
-/// Render a sweep as an aligned text table (the CLI/report surface).
+/// Run a closed-loop sweep: one fixed-population run per client count
+/// (think time taken from `base` when it is already closed-loop). The
+/// reported `offered_rps` is the achieved rate — a closed loop offers
+/// exactly what it completes — and `clients` carries the swept value.
+pub fn sweep_closed(base: &ServeConfig, clients: &[u32], obs: &Obs) -> Vec<LoadPoint> {
+    let think_s = match base.arrivals {
+        Arrivals::ClosedLoop { think_s, .. } => think_s,
+        _ => 0.0,
+    };
+    clients
+        .iter()
+        .map(|&k| {
+            let mut cfg = base.clone();
+            cfg.arrivals = Arrivals::ClosedLoop {
+                clients: k.max(1),
+                think_s,
+            };
+            let span = obs.tracer.span("sweep", format!("clients {k}"));
+            let out = run_serve(&cfg, obs);
+            span.attr_num("completed", out.completed as f64);
+            span.attr_num("rejected", out.rejected as f64);
+            drop(span);
+            let achieved = out.completed as f64 / out.elapsed_s.max(f64::MIN_POSITIVE);
+            point(&cfg, achieved, &out)
+        })
+        .collect()
+}
+
+/// Render a sweep as an aligned text table (the CLI/report surface). The
+/// first column is the swept axis: offered load for open-loop sweeps,
+/// client count for closed-loop ones.
 pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
+    let closed = points.iter().any(|p| p.clients.is_some());
     let mut out = format!("== {title} ==\n");
     out.push_str(&format!(
-        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8}\n",
-        "offered/s", "achieved/s", "mean_us", "p95_us", "p99_us", "slo_viol", "reject", "host_bz", "dpu_bz"
+        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8}\n",
+        if closed { "clients" } else { "offered/s" },
+        "achieved/s",
+        "goodput/s",
+        "mean_us",
+        "p95_us",
+        "p99_us",
+        "slo_viol",
+        "reject",
+        "host_bz",
+        "dpu_bz"
     ));
     for p in points {
+        let axis = match p.clients {
+            Some(k) => format!("{k}"),
+            None => format!("{:.0}", p.offered_rps),
+        };
         out.push_str(&format!(
-            "{:>12.0} {:>12.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
-            p.offered_rps,
+            "{:>12} {:>12.0} {:>10.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
+            axis,
             p.achieved_rps,
+            p.goodput_rps,
             p.mean_us,
             p.p95_us,
             p.p99_us,
@@ -154,15 +221,67 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
     out
 }
 
+/// Serialize a sweep (with its per-class SLO accounting) as a JSON
+/// document — the `dpbento serve --json` artifact CI smoke-checks.
+pub fn sweep_to_json(title: &str, scheduler: &str, points: &[LoadPoint]) -> Value {
+    Value::obj([
+        ("title".to_string(), Value::str(title)),
+        ("scheduler".to_string(), Value::str(scheduler)),
+        (
+            "points".to_string(),
+            Value::arr(points.iter().map(|p| {
+                Value::obj([
+                    ("offered_rps".to_string(), Value::num(p.offered_rps)),
+                    ("achieved_rps".to_string(), Value::num(p.achieved_rps)),
+                    ("goodput_rps".to_string(), Value::num(p.goodput_rps)),
+                    ("mean_us".to_string(), Value::num(p.mean_us)),
+                    ("p95_us".to_string(), Value::num(p.p95_us)),
+                    ("p99_us".to_string(), Value::num(p.p99_us)),
+                    (
+                        "slo_violation_rate".to_string(),
+                        Value::num(p.slo_violation_rate),
+                    ),
+                    ("rejected_frac".to_string(), Value::num(p.rejected_frac)),
+                    (
+                        "clients".to_string(),
+                        match p.clients {
+                            Some(k) => Value::num(k as f64),
+                            None => Value::Null,
+                        },
+                    ),
+                    (
+                        "per_class".to_string(),
+                        Value::arr(p.per_class.iter().map(|c| {
+                            Value::obj([
+                                ("class".to_string(), Value::str(c.class.name())),
+                                ("arrived".to_string(), Value::num(c.arrived as f64)),
+                                ("completed".to_string(), Value::num(c.completed as f64)),
+                                ("rejected".to_string(), Value::num(c.rejected as f64)),
+                                ("slo_met".to_string(), Value::num(c.slo_met as f64)),
+                                (
+                                    "violation_rate".to_string(),
+                                    Value::num(c.violation_rate),
+                                ),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::Obs;
     use crate::serve::request::{mean_service_s, Mix, RequestClass};
+    use crate::serve::sim::ClassOutcome;
 
-    fn cfg(policy: Policy) -> ServeConfig {
+    fn cfg(sched: &str) -> ServeConfig {
         ServeConfig::new(
             Some(PlatformId::Bf2),
-            policy,
+            sched,
             Mix::single(RequestClass::NetRpc),
             3,
         )
@@ -172,39 +291,57 @@ mod tests {
     fn capacity_formulas() {
         let host_cap = 96.0 / mean_service_s(RequestClass::NetRpc, PlatformId::HostEpyc);
         let dpu_cap = 8.0 / mean_service_s(RequestClass::NetRpc, PlatformId::Bf2);
-        assert!((capacity_rps(&cfg(Policy::HostOnly)) - host_cap).abs() < 1e-6);
-        assert!((capacity_rps(&cfg(Policy::DpuOnly)) - dpu_cap).abs() < 1e-6);
-        assert!(
-            (capacity_rps(&cfg(Policy::QueueAware)) - (host_cap + dpu_cap)).abs() < 1e-6
-        );
+        assert!((capacity_rps(&cfg("host-only")) - host_cap).abs() < 1e-6);
+        assert!((capacity_rps(&cfg("dpu-only")) - dpu_cap).abs() < 1e-6);
+        assert!((capacity_rps(&cfg("queue-aware")) - (host_cap + dpu_cap)).abs() < 1e-6);
         // 50/50 split: the slower side's share binds
-        let split = capacity_rps(&cfg(Policy::StaticSplit { dpu_fraction: 0.5 }));
+        let split = capacity_rps(&cfg("static-split"));
         assert!((split - (2.0 * dpu_cap).min(2.0 * host_cap)).abs() < 1e-6);
-        // host-only deployment: every policy degenerates to the host cap
-        let mut no_dpu = cfg(Policy::DpuOnly);
+        // host-only deployment: every scheduler degenerates to the host cap
+        let mut no_dpu = cfg("dpu-only");
         no_dpu.dpu = None;
+        no_dpu.dpu_workers = 0;
         assert!((capacity_rps(&no_dpu) - host_cap).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batching_raises_the_dpu_knee() {
+        let mut c = cfg("dpu-only");
+        let unbatched = capacity_rps(&c);
+        c.max_batch = 8;
+        let batched = capacity_rps(&c);
+        assert!(batched > unbatched, "{batched} vs {unbatched}");
+        // NetRpc amortizes a large per-message setup: batching at least
+        // doubles the analytic DPU drain rate
+        assert!(batched > 2.0 * unbatched, "{batched} vs {unbatched}");
+        // host side is untouched by the DPU batch knob
+        c.scheduler = "host-only";
+        let host_b = capacity_rps(&c);
+        c.max_batch = 1;
+        assert_eq!(host_b, capacity_rps(&c));
     }
 
     #[test]
     fn dpu_only_knee_below_host_only_knee() {
         // the acceptance-critical ordering, stated analytically
         for mix in ["analytics", "index_get", "net_rpc", "mixed"] {
-            let mut c = cfg(Policy::DpuOnly);
+            let mut c = cfg("dpu-only");
             c.mix = Mix::from_name(mix).unwrap();
             let dpu_cap = capacity_rps(&c);
-            c.policy = Policy::HostOnly;
+            let href = host_only_capacity_rps(&c);
+            c.scheduler = "host-only";
             let host_cap = capacity_rps(&c);
+            assert!((href - host_cap).abs() < 1e-9);
             assert!(dpu_cap < host_cap, "{mix}: {dpu_cap} vs {host_cap}");
         }
     }
 
     #[test]
     fn sweep_points_line_up_with_rates() {
-        let mut base = cfg(Policy::HostOnly);
+        let mut base = cfg("host-only");
         base.total_requests = 800;
         let rates = [1000.0, 2000.0];
-        let pts = sweep(&base, &rates);
+        let pts = sweep(&base, &rates, &Obs::disabled());
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].offered_rps, 1000.0);
         assert_eq!(pts[1].offered_rps, 2000.0);
@@ -214,10 +351,38 @@ mod tests {
             assert!(p.achieved_rps > 0.0);
             assert!(p.mean_us > 0.0);
             assert!(p.p99_us >= p.p95_us && p.p95_us >= 0.0);
+            assert!(p.clients.is_none());
+            // low load: goodput equals throughput
+            assert!((p.goodput_rps - p.achieved_rps).abs() < 1e-9, "{p:?}");
+            let arrived: u64 = p.per_class.iter().map(|c| c.arrived).sum();
+            assert_eq!(arrived, 800);
         }
         let rendered = render_sweep("t", &pts);
         assert!(rendered.contains("offered/s"));
+        assert!(rendered.contains("goodput/s"));
         assert!(rendered.lines().count() == 4);
+    }
+
+    #[test]
+    fn closed_sweep_reports_clients() {
+        let mut base = cfg("queue-aware");
+        base.total_requests = 600;
+        let pts = sweep_closed(&base, &[4, 16], &Obs::disabled());
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].clients, Some(4));
+        assert_eq!(pts[1].clients, Some(16));
+        for p in &pts {
+            assert!(p.achieved_rps > 0.0);
+            // a closed loop offers what it completes
+            assert!((p.offered_rps - p.achieved_rps).abs() < 1e-9);
+        }
+        let rendered = render_sweep("closed", &pts);
+        assert!(rendered.contains("clients"));
+        let json = sweep_to_json("closed", base.scheduler, &pts).to_compact();
+        assert!(json.contains("\"per_class\""));
+        assert!(json.contains("\"slo_met\""));
+        assert!(json.contains("\"violation_rate\""));
+        assert!(json.contains("\"clients\":4"));
     }
 
     #[test]
@@ -232,10 +397,25 @@ mod tests {
             dpu_busy_s: 0.0,
             host_served: 0,
             dpu_served: 0,
+            steals: 0,
+            batches_flushed: 0,
+            per_class: RequestClass::ALL
+                .iter()
+                .map(|c| ClassOutcome {
+                    class: *c,
+                    arrived: if *c == RequestClass::NetRpc { 5 } else { 0 },
+                    completed: 0,
+                    rejected: if *c == RequestClass::NetRpc { 5 } else { 0 },
+                    slo_met: 0,
+                })
+                .collect(),
         };
-        let p = point(&cfg(Policy::HostOnly), 100.0, &out);
+        let p = point(&cfg("host-only"), 100.0, &out);
         assert_eq!(p.achieved_rps, 0.0);
+        assert_eq!(p.goodput_rps, 0.0);
         assert_eq!(p.slo_violation_rate, 1.0);
         assert_eq!(p.rejected_frac, 1.0);
+        assert_eq!(p.per_class[RequestClass::NetRpc.idx()].violation_rate, 1.0);
+        assert_eq!(p.per_class[RequestClass::Analytics.idx()].violation_rate, 0.0);
     }
 }

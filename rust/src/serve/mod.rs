@@ -15,14 +15,20 @@
 //!    (`net::tcp`'s per-message stack cost);
 //!  - [`load`]: open-loop (Poisson / paced) and closed-loop
 //!    (fixed-concurrency) arrival generation, seeded via `util::rng::Pcg`;
-//!  - [`scheduler`]: host and DPU worker pools with per-core FIFO queues,
-//!    pluggable placement policies (host-only, dpu-only, static-split,
-//!    queue-aware dynamic) and per-core admission control;
-//!  - [`sim`]: the event loop driving everything through `sim::Engine` —
-//!    fully deterministic under a fixed seed;
-//!  - [`metrics`]: throughput–latency curves (offered load sweep →
-//!    achieved throughput, avg/p95/p99 latency, SLO-violation rate,
-//!    host-CPU freed) via `util::stats::Summary`;
+//!  - [`scheduler`]: host and DPU worker pools with per-core FIFO queues
+//!    of request batches, and the pluggable [`scheduler::Scheduler`] API —
+//!    decide-on-arrival, steal-on-idle, and batch-linger hooks — with the
+//!    built-in policies (host-only, dpu-only, static-split, queue-aware,
+//!    work-steal, slo-aware) registered by name in
+//!    [`scheduler::REGISTRY`];
+//!  - [`sim`]: the event loop driving everything through `sim::Engine`,
+//!    including DPU-side per-class batch accumulators (flush on full or
+//!    on linger-timer expiry) and deterministic work stealing — fully
+//!    deterministic under a fixed seed;
+//!  - [`metrics`]: throughput–latency curves (offered-load or closed-loop
+//!    client sweep → achieved throughput, SLO-constrained goodput,
+//!    avg/p95/p99 latency, per-class violation rates, host-CPU freed) via
+//!    `util::stats::Summary`;
 //!  - [`task`]: the `serving` coordinator task (registered in
 //!    `Registry::builtin`) and therefore the `dpbento serve` CLI surface.
 
@@ -35,9 +41,10 @@ pub mod task;
 
 pub use load::Arrivals;
 pub use metrics::{
-    capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, sweep_obs, LoadPoint,
+    capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, sweep_closed,
+    sweep_to_json, ClassPoint, LoadPoint,
 };
-pub use request::{Mix, RequestClass, ServiceJitter};
-pub use scheduler::{Policy, Pool};
-pub use sim::{run_serve, run_serve_obs, ServeConfig, ServeOutcome};
+pub use request::{ClassSlos, Mix, RequestClass, ServiceJitter};
+pub use scheduler::{Batch, Pool, PoolSel, SchedCtx, Scheduler, SchedulerInfo};
+pub use sim::{run_serve, ClassOutcome, ServeConfig, ServeOutcome};
 pub use task::ServingTask;

@@ -41,6 +41,18 @@ impl RequestClass {
         RequestClass::NetRpc,
     ];
 
+    /// Number of request classes (dense arrays index by [`Self::idx`]).
+    pub const COUNT: usize = 3;
+
+    /// Dense index of this class within [`Self::ALL`].
+    pub fn idx(&self) -> usize {
+        match self {
+            RequestClass::Analytics => 0,
+            RequestClass::IndexGet => 1,
+            RequestClass::NetRpc => 2,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             RequestClass::Analytics => "analytics",
@@ -66,6 +78,68 @@ pub fn mean_service_s(class: RequestClass, p: PlatformId) -> f64 {
         RequestClass::Analytics => ANALYTICS_HOST_CORE_S / sw_core_factor(p),
         RequestClass::IndexGet => 1.0 / (index_rate_mops(p, 1) * 1e6),
         RequestClass::NetRpc => tcp::sw_cost_us(p, RPC_MSG_BYTES) * 1e-6,
+    }
+}
+
+/// Setup + marginal decomposition of one request's mean service time —
+/// the price model behind DPU-side batching (DESIGN.md §7): a flushed
+/// batch of `N` same-class requests costs `setup + N·marginal`, so the
+/// fixed per-dispatch work is amortized across the batch. The split comes
+/// from the same substrates that price the classes:
+///
+///  - **NetRpc** — the TCP model is `per_msg + per_byte·bytes`
+///    ([`tcp::sw_cost_us`]); the per-message stack traversal is the
+///    amortizable setup, the payload path is marginal.
+///  - **Analytics** — a Q6-style slice shares scan open + predicate setup
+///    across batched slices (the pushdown engine's fixed fraction).
+///  - **IndexGet** — batched point lookups share the offload boundary
+///    crossing and upper-tree descent; the leaf walk stays per-request.
+///
+/// Invariant: `setup + marginal == mean_service_s(class, p)`, so a batch
+/// of one costs exactly the unbatched request.
+pub fn service_split_s(class: RequestClass, p: PlatformId) -> (f64, f64) {
+    let mean = mean_service_s(class, p);
+    let setup = match class {
+        RequestClass::NetRpc => crate::net::tcp::sw_cost_us(p, 0) * 1e-6,
+        RequestClass::Analytics => 0.25 * mean,
+        RequestClass::IndexGet => 0.30 * mean,
+    };
+    (setup, mean - setup)
+}
+
+/// Per-class latency targets (µs) — the SLO surface routing and goodput
+/// accounting are expressed against. Defaults to 10× the class's host
+/// mean service time, the same headroom rule the v1 scalar SLO used.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassSlos {
+    us: [f64; RequestClass::COUNT],
+}
+
+impl ClassSlos {
+    /// The default per-class targets: 10× each class's host-core mean.
+    pub fn default_headroom() -> ClassSlos {
+        let mut us = [0.0; RequestClass::COUNT];
+        for c in RequestClass::ALL {
+            us[c.idx()] = 10.0 * mean_service_s(c, PlatformId::HostEpyc) * 1e6;
+        }
+        ClassSlos { us }
+    }
+
+    /// One target for every class.
+    pub fn uniform(us: f64) -> ClassSlos {
+        assert!(us > 0.0 && us.is_finite(), "SLO must be positive, got {us}");
+        ClassSlos {
+            us: [us; RequestClass::COUNT],
+        }
+    }
+
+    pub fn get(&self, class: RequestClass) -> f64 {
+        self.us[class.idx()]
+    }
+
+    pub fn set(&mut self, class: RequestClass, us: f64) {
+        assert!(us > 0.0 && us.is_finite(), "SLO must be positive, got {us}");
+        self.us[class.idx()] = us;
     }
 }
 
@@ -162,6 +236,25 @@ impl Mix {
             .sum::<f64>()
             / total
     }
+
+    /// Weighted mean *amortized* service time (seconds) per request on
+    /// platform `p` when requests are dispatched in full batches of
+    /// `batch`: each request pays `setup/batch + marginal`
+    /// ([`service_split_s`]). `batch == 1` degenerates to
+    /// [`Self::mean_service_s`]; this is the saturation drain rate the
+    /// batched capacity formula uses.
+    pub fn mean_batched_service_s(&self, p: PlatformId, batch: usize) -> f64 {
+        let b = batch.max(1) as f64;
+        let total = self.total_weight();
+        self.entries
+            .iter()
+            .map(|(c, w)| {
+                let (setup, marginal) = service_split_s(*c, p);
+                w * (setup / b + marginal)
+            })
+            .sum::<f64>()
+            / total
+    }
 }
 
 #[cfg(test)]
@@ -248,6 +341,65 @@ mod tests {
         }
         assert!(Mix::from_name("mixed").is_some());
         assert!(Mix::from_name("nope").is_none());
+    }
+
+    #[test]
+    fn service_split_sums_to_the_mean() {
+        for c in RequestClass::ALL {
+            for p in [HostEpyc, Bf2, Bf3, OcteonTx2] {
+                let (setup, marginal) = service_split_s(c, p);
+                let mean = mean_service_s(c, p);
+                assert!(setup > 0.0 && marginal > 0.0, "{c:?} on {p}: {setup}/{marginal}");
+                assert!(
+                    (setup + marginal - mean).abs() < 1e-12,
+                    "{c:?} on {p}: {setup}+{marginal} != {mean}"
+                );
+                // setup must be amortizable: strictly less than the mean
+                assert!(setup < mean, "{c:?} on {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_mean_amortizes_setup_monotonically() {
+        let mix = Mix::from_name("mixed").unwrap();
+        for p in [Bf2, Bf3] {
+            let m1 = mix.mean_batched_service_s(p, 1);
+            let m4 = mix.mean_batched_service_s(p, 4);
+            let m16 = mix.mean_batched_service_s(p, 16);
+            assert!((m1 - mix.mean_service_s(p)).abs() < 1e-15, "batch=1 is unbatched");
+            assert!(m4 < m1 && m16 < m4, "{p}: {m1} {m4} {m16}");
+            // amortization is bounded by the marginal floor
+            let floor: f64 = mix
+                .entries()
+                .iter()
+                .map(|(c, w)| w * service_split_s(*c, p).1)
+                .sum::<f64>()
+                / mix.entries().iter().map(|(_, w)| w).sum::<f64>();
+            assert!(m16 > floor, "{p}");
+        }
+    }
+
+    #[test]
+    fn class_slos_default_and_overrides() {
+        let slos = ClassSlos::default_headroom();
+        for c in RequestClass::ALL {
+            let expect = 10.0 * mean_service_s(c, HostEpyc) * 1e6;
+            assert!((slos.get(c) - expect).abs() < 1e-9, "{c:?}");
+        }
+        let mut u = ClassSlos::uniform(250.0);
+        assert_eq!(u.get(RequestClass::Analytics), 250.0);
+        u.set(RequestClass::NetRpc, 50.0);
+        assert_eq!(u.get(RequestClass::NetRpc), 50.0);
+        assert_eq!(u.get(RequestClass::IndexGet), 250.0);
+    }
+
+    #[test]
+    fn class_idx_is_dense_over_all() {
+        for (i, c) in RequestClass::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i);
+        }
+        assert_eq!(RequestClass::COUNT, RequestClass::ALL.len());
     }
 
     #[test]

@@ -1,69 +1,44 @@
-//! Placement scheduler: worker pools, per-core FIFO queues, and the
-//! pluggable routing policies that decide host vs DPU.
+//! Placement scheduling: worker pools, per-core FIFO queues of request
+//! batches, and the pluggable [`Scheduler`] API that decides host vs DPU.
 //!
-//! A deployment has a host [`Pool`] and (on DPU platforms) a DPU [`Pool`].
-//! Each pool is a set of worker cores; every core owns a FIFO queue and
-//! serves one request at a time (non-preemptive). Within a pool, requests
-//! always join the least-loaded core (deterministic tie-break on index).
-//! Across pools, the [`Policy`] decides:
+//! v2 replaces the closed `Policy` enum + free `route()` function with a
+//! trait + registry: a scheduler is an object with three lifecycle hooks —
+//! decide-on-arrival ([`Scheduler::on_arrival`]), steal-on-idle
+//! ([`Scheduler::on_idle`], fired when a core completes and finds its own
+//! queue empty), and batch-linger-timer ([`Scheduler::on_linger`]) — and
+//! new policies register in [`REGISTRY`] (mirroring
+//! `coordinator::registry`) instead of growing another match arm. The CLI
+//! `--policy` help and the `serving` task's parameter docs are generated
+//! from the registry, so the name list cannot drift.
+//!
+//! Built-in schedulers:
 //!
 //!  - `host-only` / `dpu-only` — static pinning (the paper's two
 //!    batch-benchmark configurations, now under load);
 //!  - `static-split` — a fixed fraction of requests to the DPU
 //!    (range-partition style, like Fig. 14's 10:1 index split);
-//!  - `queue-aware` — dynamic: join the pool with the smaller estimated
-//!    completion time (queue depth × mean service + service), which lets
-//!    the DPU absorb load until its wimpy cores saturate and then spills
-//!    to the host.
+//!  - `queue-aware` — join the pool with the smaller estimated completion
+//!    time (queue depth × mean service + service), which lets the DPU
+//!    absorb load until its wimpy cores saturate and then spills to the
+//!    host;
+//!  - `work-steal` — queue-aware arrivals plus stealing: an idle core
+//!    pulls the oldest batch from the deepest queue in its pool, and an
+//!    idle *host* core additionally steals from the DPU (never the
+//!    reverse: wimpy cores must not pull host-priced work). Victim
+//!    selection is deterministic (deepest queue, lowest index on ties);
+//!  - `slo-aware` — routes against each class's latency target: prefer
+//!    the DPU when its ETA (queue wait + class service + batch linger)
+//!    meets the class SLO, fall back to the host when it meets it, else
+//!    minimize ETA. Combined with DPU-side batching this is the policy
+//!    that holds p99-within-SLO goodput at high offered load.
 
 use std::collections::VecDeque;
+use std::sync::OnceLock;
 
 use crate::platform::PlatformId;
 use crate::util::rng::Pcg;
 
 use super::request::RequestClass;
-
-/// Placement policy for incoming requests.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Policy {
-    HostOnly,
-    DpuOnly,
-    StaticSplit { dpu_fraction: f64 },
-    QueueAware,
-}
-
-impl Policy {
-    /// The canonical policy set a sweep covers.
-    pub const ALL: [Policy; 4] = [
-        Policy::HostOnly,
-        Policy::DpuOnly,
-        Policy::StaticSplit { dpu_fraction: 0.5 },
-        Policy::QueueAware,
-    ];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Policy::HostOnly => "host-only",
-            Policy::DpuOnly => "dpu-only",
-            Policy::StaticSplit { .. } => "static-split",
-            Policy::QueueAware => "queue-aware",
-        }
-    }
-
-    /// Parse a policy name (`static-split` defaults to a 50/50 split; the
-    /// serving task exposes a `dpu_fraction` parameter to change it).
-    pub fn from_name(s: &str) -> Option<Policy> {
-        Some(match s {
-            "host-only" | "host_only" | "host" => Policy::HostOnly,
-            "dpu-only" | "dpu_only" | "dpu" => Policy::DpuOnly,
-            "static-split" | "static_split" | "split" => {
-                Policy::StaticSplit { dpu_fraction: 0.5 }
-            }
-            "queue-aware" | "queue_aware" | "dynamic" => Policy::QueueAware,
-            _ => return None,
-        })
-    }
-}
 
 /// One admitted request.
 #[derive(Debug, Clone)]
@@ -74,21 +49,64 @@ pub struct Job {
     pub class: RequestClass,
     /// Virtual arrival time (seconds).
     pub arrived_s: f64,
-    /// Sampled service time on the pool that accepted it (seconds).
+    /// Sampled service time on the pool that accepted it (seconds). For a
+    /// batched request this is the *unbatched* price; the batch's
+    /// amortized cost is computed at flush time.
     pub service_s: f64,
 }
 
-/// One worker core: the in-service request plus its FIFO backlog.
+/// The unit of per-core work: one or more same-class requests served as a
+/// single dispatch. Unbatched requests are batches of one, so the core
+/// and queue machinery has exactly one shape.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub jobs: Vec<Job>,
+    /// Total service time of the batch on the pool that holds it
+    /// (`setup + Σ marginal` for flushed batches; the job's own sample
+    /// for singletons).
+    pub service_s: f64,
+}
+
+impl Batch {
+    /// A batch of one — the unbatched fast path.
+    pub fn single(job: Job) -> Batch {
+        let service_s = job.service_s;
+        Batch {
+            jobs: vec![job],
+            service_s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Class of the batch (batches are class-homogeneous).
+    pub fn class(&self) -> RequestClass {
+        self.jobs[0].class
+    }
+}
+
+/// One worker core: the in-service batch plus its FIFO backlog.
 #[derive(Debug, Default)]
 pub struct Core {
-    pub current: Option<Job>,
-    pub queue: VecDeque<Job>,
+    pub current: Option<Batch>,
+    pub queue: VecDeque<Batch>,
 }
 
 impl Core {
-    /// Requests on this core (in service + queued).
+    /// Requests on this core (in service + queued), counting batch members.
     pub fn depth(&self) -> usize {
-        self.queue.len() + usize::from(self.current.is_some())
+        self.queued_requests() + self.current.as_ref().map_or(0, Batch::len)
+    }
+
+    /// Requests waiting in this core's FIFO (batch members, not batches).
+    pub fn queued_requests(&self) -> usize {
+        self.queue.iter().map(Batch::len).sum()
     }
 }
 
@@ -104,10 +122,13 @@ pub struct Pool {
 }
 
 impl Pool {
+    /// A pool with exactly `workers` cores. Zero workers is representable
+    /// (accessors are total) but rejected by `ServeConfig::validate` —
+    /// the config parse surfaces are where the error belongs.
     pub fn new(platform: PlatformId, workers: u32) -> Pool {
         Pool {
             platform,
-            cores: (0..workers.max(1)).map(|_| Core::default()).collect(),
+            cores: (0..workers).map(|_| Core::default()).collect(),
             busy_s: 0.0,
             served: 0,
         }
@@ -123,15 +144,38 @@ impl Pool {
     }
 
     /// Index of the least-loaded core; ties resolve to the lowest index so
-    /// routing is deterministic.
-    pub fn least_loaded_core(&self) -> usize {
-        let mut best = 0usize;
-        for i in 1..self.cores.len() {
-            if self.cores[i].depth() < self.cores[best].depth() {
-                best = i;
+    /// routing is deterministic. `None` for a pool with no cores.
+    pub fn least_loaded_core(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.cores.len() {
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if self.cores[i].depth() < self.cores[b].depth() {
+                        best = Some(i);
+                    }
+                }
             }
         }
         best
+    }
+
+    /// Deepest-queued core holding at least one *queued* batch — the
+    /// deterministic steal victim (ties resolve to the lowest index).
+    /// `None` when nothing is queued anywhere.
+    pub fn deepest_victim(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None; // (queued, core)
+        for (i, core) in self.cores.iter().enumerate() {
+            let q = core.queued_requests();
+            if q == 0 {
+                continue;
+            }
+            match best {
+                Some((bq, _)) if q <= bq => {}
+                _ => best = Some((q, i)),
+            }
+        }
+        best.map(|(_, i)| i)
     }
 
     /// Requests currently in the pool (all cores, in service + queued).
@@ -140,8 +184,13 @@ impl Pool {
     }
 
     /// Estimated queueing wait if a request joined the best core now.
+    /// Total: a pool with no cores can absorb nothing, so its estimated
+    /// wait is infinite (v1 panicked here on an empty `cores` vec).
     pub fn est_wait_s(&self, mean_service_s: f64) -> f64 {
-        self.cores[self.least_loaded_core()].depth() as f64 * mean_service_s
+        match self.least_loaded_core() {
+            Some(ci) => self.cores[ci].depth() as f64 * mean_service_s,
+            None => f64::INFINITY,
+        }
     }
 }
 
@@ -152,42 +201,385 @@ pub enum PoolSel {
     Dpu,
 }
 
-/// Pick the pool for one incoming request. `dpu` is `None` on a host-only
-/// deployment (every policy then degenerates to the host).
-pub fn route(
-    policy: Policy,
-    host: &Pool,
-    dpu: Option<&Pool>,
-    host_mean_s: f64,
-    dpu_mean_s: f64,
-    rng: &mut Pcg,
-) -> PoolSel {
-    if dpu.is_none() {
-        return PoolSel::Host;
+/// What a scheduler tells the event loop to do when a batch-linger timer
+/// expires with a partial batch accumulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LingerAction {
+    /// Dispatch the partial batch now (the default — bounded added
+    /// latency).
+    Flush,
+    /// Re-arm the timer for one more linger window (throughput-greedy
+    /// policies may trade tail latency for fuller batches).
+    Extend,
+}
+
+/// Read-only view of the deployment a scheduler decides over.
+pub struct SchedCtx<'a> {
+    pub host: &'a Pool,
+    pub dpu: Option<&'a Pool>,
+    /// Mix-weighted mean service per side — the queue drain-rate estimate.
+    pub host_mean_s: f64,
+    pub dpu_mean_s: f64,
+    /// Per-class mean service per side, indexed by `RequestClass::idx`
+    /// (SLO-aware routing needs the class price, not the mix average).
+    pub host_class_s: [f64; RequestClass::COUNT],
+    pub dpu_class_s: [f64; RequestClass::COUNT],
+    /// Batch linger budget on the DPU side (0 when batching is off) —
+    /// part of the DPU's ETA for SLO math.
+    pub linger_s: f64,
+    /// Virtual now (seconds).
+    pub now_s: f64,
+}
+
+impl SchedCtx<'_> {
+    /// Estimated completion time of one `class` request joining the host.
+    pub fn host_eta_s(&self, class: RequestClass) -> f64 {
+        self.host.est_wait_s(self.host_mean_s) + self.host_class_s[class.idx()]
     }
-    match policy {
-        Policy::HostOnly => PoolSel::Host,
-        Policy::DpuOnly => PoolSel::Dpu,
-        Policy::StaticSplit { dpu_fraction } => {
-            if rng.f64() < dpu_fraction {
-                PoolSel::Dpu
-            } else {
-                PoolSel::Host
+
+    /// Estimated completion time of one `class` request joining the DPU
+    /// (infinite on host-only deployments), including the linger budget.
+    pub fn dpu_eta_s(&self, class: RequestClass) -> f64 {
+        match self.dpu {
+            Some(d) => {
+                d.est_wait_s(self.dpu_mean_s) + self.dpu_class_s[class.idx()] + self.linger_s
             }
-        }
-        Policy::QueueAware => {
-            let d = dpu.expect("checked above");
-            let host_eta = host.est_wait_s(host_mean_s) + host_mean_s;
-            let dpu_eta = d.est_wait_s(dpu_mean_s) + dpu_mean_s;
-            // strict <: ties keep work on the host (beefy cores drain it
-            // faster if service estimates are off)
-            if dpu_eta < host_eta {
-                PoolSel::Dpu
-            } else {
-                PoolSel::Host
-            }
+            None => f64::INFINITY,
         }
     }
+}
+
+/// The pluggable scheduling API (the v2 replacement for the `Policy`
+/// enum). One instance lives per serving run; hooks fire from the event
+/// loop:
+///
+///  - [`Self::on_arrival`] — decide-on-arrival placement;
+///  - [`Self::on_idle`] — a core completed and found its queue empty:
+///    optionally name a `(pool, core)` victim to steal the oldest queued
+///    batch from (must be deterministic — no RNG is offered);
+///  - [`Self::on_linger`] — a DPU batch-linger deadline expired with a
+///    partial batch: flush it or extend the window.
+///
+/// Implementations must return [`PoolSel::Host`] from `on_arrival` when
+/// `ctx.dpu` is `None` (the event loop also guards this).
+pub trait Scheduler {
+    /// Canonical registry name.
+    fn name(&self) -> &'static str;
+
+    /// Place one incoming request. `slo_s` is the class's latency target
+    /// in seconds. `rng` is the dedicated routing stream (seeded), so
+    /// randomized policies stay deterministic under a fixed seed.
+    fn on_arrival(
+        &mut self,
+        class: RequestClass,
+        slo_s: f64,
+        ctx: &SchedCtx,
+        rng: &mut Pcg,
+    ) -> PoolSel;
+
+    /// Steal hook: `core` on `side` is idle with an empty queue. Return
+    /// the pool + core to steal the oldest queued batch from, or `None`
+    /// to stay idle. Default: no stealing.
+    fn on_idle(&mut self, side: PoolSel, core: usize, ctx: &SchedCtx) -> Option<(PoolSel, usize)> {
+        let _ = (side, core, ctx);
+        None
+    }
+
+    /// Batch-linger timer hook: a partial `class` batch hit its linger
+    /// deadline. Default: flush.
+    fn on_linger(&mut self, class: RequestClass, ctx: &SchedCtx) -> LingerAction {
+        let _ = (class, ctx);
+        LingerAction::Flush
+    }
+
+    /// Analytic service capacity (requests/second) of a deployment under
+    /// this scheduler, given each side's capacity. Dynamic policies use
+    /// both sides; pinned policies override.
+    fn capacity_rps(&self, host_cap: f64, dpu_cap: f64) -> f64 {
+        host_cap + dpu_cap
+    }
+}
+
+/// Deterministic work-conserving steal choice shared by stealing
+/// schedulers: deepest queue in the idle core's own pool first; an idle
+/// *host* core additionally raids the DPU's deepest queue (stolen work is
+/// re-priced to host service times by the event loop).
+pub fn steal_choice(side: PoolSel, ctx: &SchedCtx) -> Option<(PoolSel, usize)> {
+    let own = match side {
+        PoolSel::Host => Some(ctx.host),
+        PoolSel::Dpu => ctx.dpu,
+    };
+    if let Some(v) = own.and_then(Pool::deepest_victim) {
+        return Some((side, v));
+    }
+    if side == PoolSel::Host {
+        if let Some(v) = ctx.dpu.and_then(Pool::deepest_victim) {
+            return Some((PoolSel::Dpu, v));
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Built-in schedulers
+// ---------------------------------------------------------------------
+
+/// Everything on the host (the baseline column).
+struct HostOnlySched;
+
+impl Scheduler for HostOnlySched {
+    fn name(&self) -> &'static str {
+        "host-only"
+    }
+    fn on_arrival(&mut self, _: RequestClass, _: f64, _: &SchedCtx, _: &mut Pcg) -> PoolSel {
+        PoolSel::Host
+    }
+    fn capacity_rps(&self, host_cap: f64, _dpu_cap: f64) -> f64 {
+        host_cap
+    }
+}
+
+/// Everything on the DPU (degenerates to host on host-only deployments).
+struct DpuOnlySched;
+
+impl Scheduler for DpuOnlySched {
+    fn name(&self) -> &'static str {
+        "dpu-only"
+    }
+    fn on_arrival(&mut self, _: RequestClass, _: f64, ctx: &SchedCtx, _: &mut Pcg) -> PoolSel {
+        if ctx.dpu.is_some() {
+            PoolSel::Dpu
+        } else {
+            PoolSel::Host
+        }
+    }
+    fn capacity_rps(&self, host_cap: f64, dpu_cap: f64) -> f64 {
+        if dpu_cap > 0.0 {
+            dpu_cap
+        } else {
+            host_cap
+        }
+    }
+}
+
+/// A fixed fraction of requests to the DPU.
+struct StaticSplitSched {
+    dpu_fraction: f64,
+}
+
+impl Scheduler for StaticSplitSched {
+    fn name(&self) -> &'static str {
+        "static-split"
+    }
+    fn on_arrival(&mut self, _: RequestClass, _: f64, ctx: &SchedCtx, rng: &mut Pcg) -> PoolSel {
+        if ctx.dpu.is_some() && rng.f64() < self.dpu_fraction {
+            PoolSel::Dpu
+        } else {
+            PoolSel::Host
+        }
+    }
+    fn capacity_rps(&self, host_cap: f64, dpu_cap: f64) -> f64 {
+        if dpu_cap <= 0.0 || self.dpu_fraction <= 0.0 {
+            host_cap
+        } else if self.dpu_fraction >= 1.0 {
+            dpu_cap
+        } else {
+            // the split saturates when either side saturates its share
+            (host_cap / (1.0 - self.dpu_fraction)).min(dpu_cap / self.dpu_fraction)
+        }
+    }
+}
+
+/// Join the pool with the smaller estimated completion time.
+struct QueueAwareSched;
+
+impl QueueAwareSched {
+    fn pick(ctx: &SchedCtx) -> PoolSel {
+        let d = match ctx.dpu {
+            Some(d) => d,
+            None => return PoolSel::Host,
+        };
+        let host_eta = ctx.host.est_wait_s(ctx.host_mean_s) + ctx.host_mean_s;
+        let dpu_eta = d.est_wait_s(ctx.dpu_mean_s) + ctx.dpu_mean_s;
+        // strict <: ties keep work on the host (beefy cores drain it
+        // faster if service estimates are off)
+        if dpu_eta < host_eta {
+            PoolSel::Dpu
+        } else {
+            PoolSel::Host
+        }
+    }
+}
+
+impl Scheduler for QueueAwareSched {
+    fn name(&self) -> &'static str {
+        "queue-aware"
+    }
+    fn on_arrival(&mut self, _: RequestClass, _: f64, ctx: &SchedCtx, _: &mut Pcg) -> PoolSel {
+        Self::pick(ctx)
+    }
+}
+
+/// Queue-aware arrivals + work stealing on idle.
+struct WorkStealSched;
+
+impl Scheduler for WorkStealSched {
+    fn name(&self) -> &'static str {
+        "work-steal"
+    }
+    fn on_arrival(&mut self, _: RequestClass, _: f64, ctx: &SchedCtx, _: &mut Pcg) -> PoolSel {
+        QueueAwareSched::pick(ctx)
+    }
+    fn on_idle(&mut self, side: PoolSel, _core: usize, ctx: &SchedCtx) -> Option<(PoolSel, usize)> {
+        steal_choice(side, ctx)
+    }
+}
+
+/// Per-class SLO-driven routing + stealing: offload to the DPU whenever
+/// its ETA meets the class target (freeing host CPU), keep latency-
+/// critical classes on the host once the DPU backlog threatens their SLO.
+struct SloAwareSched;
+
+impl Scheduler for SloAwareSched {
+    fn name(&self) -> &'static str {
+        "slo-aware"
+    }
+    fn on_arrival(&mut self, class: RequestClass, slo_s: f64, ctx: &SchedCtx, _: &mut Pcg) -> PoolSel {
+        if ctx.dpu.is_none() {
+            return PoolSel::Host;
+        }
+        let dpu_eta = ctx.dpu_eta_s(class);
+        if dpu_eta <= slo_s {
+            return PoolSel::Dpu;
+        }
+        let host_eta = ctx.host_eta_s(class);
+        if host_eta <= slo_s || host_eta <= dpu_eta {
+            PoolSel::Host
+        } else {
+            PoolSel::Dpu
+        }
+    }
+    fn on_idle(&mut self, side: PoolSel, _core: usize, ctx: &SchedCtx) -> Option<(PoolSel, usize)> {
+        steal_choice(side, ctx)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Construction-time parameters a scheduler may consume (grows additively
+/// as new schedulers need new knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedParams {
+    /// `static-split`'s DPU share.
+    pub dpu_fraction: f64,
+}
+
+impl Default for SchedParams {
+    fn default() -> Self {
+        SchedParams { dpu_fraction: 0.5 }
+    }
+}
+
+/// One registry entry: canonical name, accepted aliases, one-line doc,
+/// and the builder.
+pub struct SchedulerInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub description: &'static str,
+    builder: fn(&SchedParams) -> Box<dyn Scheduler>,
+}
+
+impl SchedulerInfo {
+    /// Instantiate this scheduler for one serving run.
+    pub fn build(&self, params: &SchedParams) -> Box<dyn Scheduler> {
+        (self.builder)(params)
+    }
+
+    /// Does `s` name this scheduler (canonical or alias)?
+    pub fn matches(&self, s: &str) -> bool {
+        self.name == s || self.aliases.contains(&s)
+    }
+}
+
+fn build_host_only(_: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(HostOnlySched)
+}
+fn build_dpu_only(_: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(DpuOnlySched)
+}
+fn build_static_split(p: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(StaticSplitSched {
+        dpu_fraction: p.dpu_fraction,
+    })
+}
+fn build_queue_aware(_: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(QueueAwareSched)
+}
+fn build_work_steal(_: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(WorkStealSched)
+}
+fn build_slo_aware(_: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(SloAwareSched)
+}
+
+/// The built-in scheduler registry. New policies append here — no match
+/// arms to chase across the codebase.
+pub const REGISTRY: &[SchedulerInfo] = &[
+    SchedulerInfo {
+        name: "host-only",
+        aliases: &["host_only", "host"],
+        description: "static pinning: every request on the host (baseline)",
+        builder: build_host_only,
+    },
+    SchedulerInfo {
+        name: "dpu-only",
+        aliases: &["dpu_only", "dpu"],
+        description: "static pinning: every request on the DPU",
+        builder: build_dpu_only,
+    },
+    SchedulerInfo {
+        name: "static-split",
+        aliases: &["static_split", "split"],
+        description: "fixed request fraction to the DPU (dpu_fraction)",
+        builder: build_static_split,
+    },
+    SchedulerInfo {
+        name: "queue-aware",
+        aliases: &["queue_aware", "dynamic"],
+        description: "join the pool with the smaller estimated completion time",
+        builder: build_queue_aware,
+    },
+    SchedulerInfo {
+        name: "work-steal",
+        aliases: &["work_steal", "steal"],
+        description: "queue-aware arrivals + idle cores steal the deepest queue (host raids DPU)",
+        builder: build_work_steal,
+    },
+    SchedulerInfo {
+        name: "slo-aware",
+        aliases: &["slo_aware", "slo"],
+        description: "route per class against its latency SLO; steal on idle",
+        builder: build_slo_aware,
+    },
+];
+
+/// Look a scheduler up by canonical name or alias.
+pub fn lookup(name: &str) -> Option<&'static SchedulerInfo> {
+    REGISTRY.iter().find(|i| i.matches(name))
+}
+
+/// Canonical names, registry order.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|i| i.name).collect()
+}
+
+/// `name1|name2|…` — generated (not hand-maintained) help text for
+/// `--policy` and the `serving` task's parameter docs.
+pub fn help_names() -> &'static str {
+    static HELP: OnceLock<String> = OnceLock::new();
+    HELP.get_or_init(|| names().join("|"))
 }
 
 #[cfg(test)]
@@ -210,61 +602,91 @@ mod tests {
         for (i, &d) in depths.iter().enumerate() {
             for k in 0..d {
                 if k == 0 {
-                    pool.cores[i].current = Some(job(1.0));
+                    pool.cores[i].current = Some(Batch::single(job(1.0)));
                 } else {
-                    pool.cores[i].queue.push_back(job(1.0));
+                    pool.cores[i].queue.push_back(Batch::single(job(1.0)));
                 }
             }
         }
         pool
     }
 
+    fn ctx<'a>(host: &'a Pool, dpu: Option<&'a Pool>, host_mean: f64, dpu_mean: f64) -> SchedCtx<'a> {
+        SchedCtx {
+            host,
+            dpu,
+            host_mean_s: host_mean,
+            dpu_mean_s: dpu_mean,
+            host_class_s: [host_mean; RequestClass::COUNT],
+            dpu_class_s: [dpu_mean; RequestClass::COUNT],
+            linger_s: 0.0,
+            now_s: 0.0,
+        }
+    }
+
+    fn arrive(name: &str, c: &SchedCtx, seed: u64) -> PoolSel {
+        let mut rng = Pcg::new(seed);
+        let mut s = lookup(name).unwrap().build(&SchedParams::default());
+        s.on_arrival(IndexGet, 1.0, c, &mut rng)
+    }
+
     #[test]
     fn least_loaded_prefers_lowest_index_on_ties() {
         let pool = loaded_pool(HostEpyc, 4, &[2, 1, 1, 3]);
-        assert_eq!(pool.least_loaded_core(), 1);
+        assert_eq!(pool.least_loaded_core(), Some(1));
         let empty = Pool::new(HostEpyc, 4);
-        assert_eq!(empty.least_loaded_core(), 0);
+        assert_eq!(empty.least_loaded_core(), Some(0));
         assert_eq!(pool.backlog(), 7);
+    }
+
+    #[test]
+    fn zero_worker_pool_accessors_are_total() {
+        // v1 panicked on `cores[0]` here; v2 makes the accessors total and
+        // rejects zero workers at config parse time instead
+        let pool = Pool::new(Bf2, 0);
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.least_loaded_core(), None);
+        assert_eq!(pool.deepest_victim(), None);
+        assert_eq!(pool.backlog(), 0);
+        assert_eq!(pool.est_wait_s(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn deepest_victim_requires_queued_work_and_breaks_ties_low() {
+        // depths are in-service + queued; a core with current but empty
+        // queue offers nothing to steal
+        let pool = loaded_pool(HostEpyc, 4, &[1, 3, 3, 2]);
+        assert_eq!(pool.deepest_victim(), Some(1), "lowest index among deepest");
+        let busy_no_queue = loaded_pool(HostEpyc, 2, &[1, 1]);
+        assert_eq!(busy_no_queue.deepest_victim(), None);
+        assert_eq!(Pool::new(HostEpyc, 2).deepest_victim(), None);
     }
 
     #[test]
     fn static_policies_pin() {
         let host = Pool::new(HostEpyc, 2);
         let dpu = Pool::new(Bf2, 2);
-        let mut rng = crate::util::rng::Pcg::new(1);
-        assert_eq!(
-            route(Policy::HostOnly, &host, Some(&dpu), 1.0, 1.0, &mut rng),
-            PoolSel::Host
-        );
-        assert_eq!(
-            route(Policy::DpuOnly, &host, Some(&dpu), 1.0, 1.0, &mut rng),
-            PoolSel::Dpu
-        );
+        let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+        assert_eq!(arrive("host-only", &c, 1), PoolSel::Host);
+        assert_eq!(arrive("dpu-only", &c, 1), PoolSel::Dpu);
         // without a DPU pool everything lands on the host
-        assert_eq!(
-            route(Policy::DpuOnly, &host, None, 1.0, 1.0, &mut rng),
-            PoolSel::Host
-        );
+        let no_dpu = ctx(&host, None, 1.0, 1.0);
+        assert_eq!(arrive("dpu-only", &no_dpu, 1), PoolSel::Host);
+        assert_eq!(arrive("slo-aware", &no_dpu, 1), PoolSel::Host);
     }
 
     #[test]
     fn static_split_tracks_fraction() {
         let host = Pool::new(HostEpyc, 2);
         let dpu = Pool::new(Bf2, 2);
-        let mut rng = crate::util::rng::Pcg::new(5);
+        let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+        let mut rng = Pcg::new(5);
+        let mut s = lookup("static-split")
+            .unwrap()
+            .build(&SchedParams { dpu_fraction: 0.25 });
         let n = 20_000;
         let to_dpu = (0..n)
-            .filter(|_| {
-                route(
-                    Policy::StaticSplit { dpu_fraction: 0.25 },
-                    &host,
-                    Some(&dpu),
-                    1.0,
-                    1.0,
-                    &mut rng,
-                ) == PoolSel::Dpu
-            })
+            .filter(|_| s.on_arrival(IndexGet, 1.0, &c, &mut rng) == PoolSel::Dpu)
             .count();
         let frac = to_dpu as f64 / n as f64;
         assert!((frac - 0.25).abs() < 0.02, "{frac}");
@@ -272,39 +694,119 @@ mod tests {
 
     #[test]
     fn queue_aware_balances_by_estimated_wait() {
-        let mut rng = crate::util::rng::Pcg::new(2);
         // loaded host + idle dpu, equal service → go to dpu
         let host = loaded_pool(HostEpyc, 2, &[3, 3]);
         let dpu = Pool::new(Bf2, 2);
-        assert_eq!(
-            route(Policy::QueueAware, &host, Some(&dpu), 1.0, 1.0, &mut rng),
-            PoolSel::Dpu
-        );
+        assert_eq!(arrive("queue-aware", &ctx(&host, Some(&dpu), 1.0, 1.0), 2), PoolSel::Dpu);
         // idle host + loaded dpu → host
         let host2 = Pool::new(HostEpyc, 2);
         let dpu2 = loaded_pool(Bf2, 2, &[2, 2]);
-        assert_eq!(
-            route(Policy::QueueAware, &host2, Some(&dpu2), 1.0, 1.0, &mut rng),
-            PoolSel::Host
-        );
+        assert_eq!(arrive("queue-aware", &ctx(&host2, Some(&dpu2), 1.0, 1.0), 2), PoolSel::Host);
         // both idle but dpu service 3x slower → host (smaller ETA)
         let dpu3 = Pool::new(Bf2, 2);
-        assert_eq!(
-            route(Policy::QueueAware, &host2, Some(&dpu3), 1.0, 3.0, &mut rng),
-            PoolSel::Host
-        );
+        assert_eq!(arrive("queue-aware", &ctx(&host2, Some(&dpu3), 1.0, 3.0), 2), PoolSel::Host);
         // both idle, dpu faster for this mix → dpu
-        assert_eq!(
-            route(Policy::QueueAware, &host2, Some(&dpu3), 3.0, 1.0, &mut rng),
-            PoolSel::Dpu
-        );
+        assert_eq!(arrive("queue-aware", &ctx(&host2, Some(&dpu3), 3.0, 1.0), 2), PoolSel::Dpu);
     }
 
     #[test]
-    fn policy_names_roundtrip() {
-        for p in Policy::ALL {
-            assert_eq!(Policy::from_name(p.name()).map(|q| q.name()), Some(p.name()));
+    fn slo_aware_prefers_dpu_while_it_meets_the_target() {
+        let host = Pool::new(HostEpyc, 2);
+        let dpu = Pool::new(Bf3, 2);
+        let mut rng = Pcg::new(3);
+        let mut s = lookup("slo-aware").unwrap().build(&SchedParams::default());
+        // idle DPU, class service 2.0s, SLO 3.0s → DPU despite the host
+        // being faster (1.0s): offload frees host CPU when the SLO holds
+        let mut c = ctx(&host, Some(&dpu), 1.0, 2.0);
+        assert_eq!(s.on_arrival(IndexGet, 3.0, &c, &mut rng), PoolSel::Dpu);
+        // SLO 1.5s: DPU misses it, host meets it → host
+        assert_eq!(s.on_arrival(IndexGet, 1.5, &c, &mut rng), PoolSel::Host);
+        // neither meets an impossible SLO → minimize ETA (host at 1.0)
+        assert_eq!(s.on_arrival(IndexGet, 0.1, &c, &mut rng), PoolSel::Host);
+        // linger budget counts against the DPU's ETA
+        c.linger_s = 1.5;
+        assert_eq!(s.on_arrival(IndexGet, 3.0, &c, &mut rng), PoolSel::Host);
+    }
+
+    #[test]
+    fn steal_choice_is_deterministic_and_host_raids_dpu() {
+        let host = loaded_pool(HostEpyc, 3, &[1, 4, 2]);
+        let dpu = loaded_pool(Bf2, 2, &[3, 3]);
+        let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+        // own pool first: host's deepest queued core is 1
+        assert_eq!(steal_choice(PoolSel::Host, &c), Some((PoolSel::Host, 1)));
+        // dpu steals only within its own pool (lowest index on tie)
+        assert_eq!(steal_choice(PoolSel::Dpu, &c), Some((PoolSel::Dpu, 0)));
+        // nothing queued on the host → host crosses over to the dpu
+        let idle_host = Pool::new(HostEpyc, 3);
+        let c2 = ctx(&idle_host, Some(&dpu), 1.0, 1.0);
+        assert_eq!(steal_choice(PoolSel::Host, &c2), Some((PoolSel::Dpu, 0)));
+        // dpu never raids the host
+        let idle_dpu = Pool::new(Bf2, 2);
+        let c3 = ctx(&host, Some(&idle_dpu), 1.0, 1.0);
+        assert_eq!(steal_choice(PoolSel::Dpu, &c3), None);
+    }
+
+    #[test]
+    fn registry_names_roundtrip_with_aliases() {
+        for info in REGISTRY {
+            let built = info.build(&SchedParams::default());
+            assert_eq!(built.name(), info.name, "builder/name agreement");
+            assert_eq!(lookup(info.name).map(|i| i.name), Some(info.name));
+            for alias in info.aliases {
+                assert_eq!(lookup(alias).map(|i| i.name), Some(info.name), "{alias}");
+            }
+            assert!(!info.description.is_empty());
         }
-        assert_eq!(Policy::from_name("warp-speed"), None);
+        assert!(lookup("warp-speed").is_none());
+        assert_eq!(names().len(), REGISTRY.len());
+        // generated help text mentions every canonical name
+        for n in names() {
+            assert!(help_names().contains(n), "{n} missing from {:?}", help_names());
+        }
+    }
+
+    #[test]
+    fn capacity_hooks_match_the_policy_shape() {
+        let p = SchedParams { dpu_fraction: 0.5 };
+        let host_cap = 100.0;
+        let dpu_cap = 20.0;
+        assert_eq!(lookup("host-only").unwrap().build(&p).capacity_rps(host_cap, dpu_cap), 100.0);
+        assert_eq!(lookup("dpu-only").unwrap().build(&p).capacity_rps(host_cap, dpu_cap), 20.0);
+        assert_eq!(lookup("dpu-only").unwrap().build(&p).capacity_rps(host_cap, 0.0), 100.0);
+        // 50/50 split: the slower side's share binds
+        assert_eq!(
+            lookup("static-split").unwrap().build(&p).capacity_rps(host_cap, dpu_cap),
+            40.0
+        );
+        for dynamic in ["queue-aware", "work-steal", "slo-aware"] {
+            assert_eq!(
+                lookup(dynamic).unwrap().build(&p).capacity_rps(host_cap, dpu_cap),
+                120.0,
+                "{dynamic}"
+            );
+        }
+    }
+
+    #[test]
+    fn linger_hook_defaults_to_flush_and_is_overridable() {
+        struct Greedy;
+        impl Scheduler for Greedy {
+            fn name(&self) -> &'static str {
+                "greedy-test"
+            }
+            fn on_arrival(&mut self, _: RequestClass, _: f64, _: &SchedCtx, _: &mut Pcg) -> PoolSel {
+                PoolSel::Dpu
+            }
+            fn on_linger(&mut self, _: RequestClass, _: &SchedCtx) -> LingerAction {
+                LingerAction::Extend
+            }
+        }
+        let host = Pool::new(HostEpyc, 1);
+        let dpu = Pool::new(Bf2, 1);
+        let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+        let mut builtin = lookup("slo-aware").unwrap().build(&SchedParams::default());
+        assert_eq!(builtin.on_linger(NetRpc, &c), LingerAction::Flush);
+        assert_eq!(Greedy.on_linger(NetRpc, &c), LingerAction::Extend);
     }
 }

@@ -1,85 +1,167 @@
-//! The serving event loop: arrivals → placement → per-core FIFO service,
-//! driven through [`crate::sim::Engine`].
+//! The serving event loop: arrivals → scheduler placement → per-core FIFO
+//! service, with DPU-side batch accumulation and work stealing, driven
+//! through [`crate::sim::Engine`].
 //!
 //! Request lifecycle (DESIGN.md §7):
 //!
 //! ```text
-//!   load generator ──Arrive──▶ policy.route() ──▶ pool.least_loaded_core()
-//!        ▲                                            │
-//!        │ (closed loop: completion                   ├─ core idle → start
-//!        │  schedules the next request)               ├─ queue < cap → FIFO
-//!        │                                            └─ queue full → reject
-//!   Depart ◀── engine fires at start + service ◀──────┘
+//!   load generator ──Arrive──▶ scheduler.on_arrival() ─┬─▶ host pool ──┐
+//!        ▲                                             │               │
+//!        │ (closed loop: completion                    └─▶ DPU batch   │
+//!        │  schedules the next request)                    accumulator │
+//!        │                                   flush on full / on linger │
+//!        │                                             ▼               ▼
+//!        │                              pool.least_loaded_core(): idle → start,
+//!        │                              room → FIFO, over queue_cap → reject
+//!   Depart ◀── engine fires at start + service ◀───────┘
+//!        └─▶ own queue empty → scheduler.on_idle() may steal the
+//!            deepest queue (host may raid the DPU; re-priced by class)
 //! ```
 //!
-//! Everything is deterministic under a fixed seed: the three RNG streams
-//! (arrivals, class sampling + routing, service jitter) are independent
-//! `Pcg` streams, the engine breaks ties FIFO, and in-pool core selection
-//! is deterministic.
+//! Everything is deterministic under a fixed seed: the four RNG streams
+//! (arrivals, class sampling, routing, service jitter) are independent
+//! `Pcg` streams, the engine breaks ties FIFO, victim/core selection is
+//! deterministic, and stolen work is re-priced analytically rather than
+//! resampled.
 
 use crate::obs::Obs;
 use crate::platform::PlatformId;
-use crate::sim::engine::Engine;
+use crate::sim::engine::{Engine, EventId};
 use crate::util::json::Value;
 use crate::util::rng::Pcg;
 
 use super::load::Arrivals;
-use super::request::{sample_service_s, Mix, ServiceJitter};
-use super::scheduler::{route, Job, Policy, Pool, PoolSel};
+use super::request::{
+    mean_service_s, sample_service_s, service_split_s, ClassSlos, Mix, RequestClass, ServiceJitter,
+};
+use super::scheduler::{self, Batch, Job, LingerAction, Pool, PoolSel, SchedCtx, SchedParams,
+    Scheduler};
 
 /// Trace track ids: host core `i` renders on tid `HOST_TID0 + i`, DPU
 /// core `i` on `DPU_TID0 + i`, so the two pools group visually.
 const HOST_TID0: u64 = 1;
 const DPU_TID0: u64 = 1001;
 
+fn tid_of(dpu_side: bool, core: usize) -> u64 {
+    (if dpu_side { DPU_TID0 } else { HOST_TID0 }) + core as u64
+}
+
 /// Configuration of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// The DPU side of the deployment (`None` → host-only deployment;
-    /// every policy then degenerates to host placement).
+    /// every scheduler then degenerates to host placement).
     pub dpu: Option<PlatformId>,
     /// Host worker cores (default: the host's schedulable threads).
     pub host_workers: u32,
     /// DPU worker cores (default: the DPU's schedulable threads).
     pub dpu_workers: u32,
-    pub policy: Policy,
+    /// Canonical scheduler name (see [`scheduler::REGISTRY`]).
+    pub scheduler: &'static str,
+    /// `static-split`'s DPU share.
+    pub dpu_fraction: f64,
     pub mix: Mix,
     pub arrivals: Arrivals,
     pub jitter: ServiceJitter,
     /// Total requests to generate.
     pub total_requests: usize,
-    /// Per-core admission cap: a request arriving at a core whose FIFO
-    /// already holds this many queued requests is rejected.
+    /// Per-core admission cap: a batch whose members would push a core's
+    /// queued-request count past this is rejected whole.
     pub queue_cap: usize,
-    /// Latency SLO (µs) used for the violation-rate metric.
-    pub slo_us: f64,
+    /// Per-class latency targets (µs) for routing + goodput accounting.
+    pub slos: ClassSlos,
+    /// DPU-side batch accumulation: flush a per-class accumulator at this
+    /// many requests (1 = batching off).
+    pub max_batch: usize,
+    /// Batch linger deadline (µs): a partial batch flushes this long
+    /// after its first member arrived (unless the scheduler extends it).
+    pub linger_us: f64,
     pub seed: u64,
 }
 
 impl ServeConfig {
-    /// A deployment serving `mix` under `policy`, with defaults for the
-    /// knobs a sweep rarely changes.
-    pub fn new(dpu: Option<PlatformId>, policy: Policy, mix: Mix, seed: u64) -> ServeConfig {
+    /// A deployment serving `mix` under the named scheduler, with
+    /// defaults for the knobs a sweep rarely changes. Panics on an
+    /// unknown scheduler name — CLI/task surfaces validate first via
+    /// [`scheduler::lookup`].
+    pub fn new(dpu: Option<PlatformId>, sched: &str, mix: Mix, seed: u64) -> ServeConfig {
         if let Some(p) = dpu {
             assert!(p.is_dpu(), "dpu side of a deployment must be a DPU");
         }
+        let info = scheduler::lookup(sched).unwrap_or_else(|| {
+            panic!(
+                "unknown scheduler {sched:?} (available: {})",
+                scheduler::help_names()
+            )
+        });
         let host_workers = PlatformId::HostEpyc.spec().max_threads;
         let dpu_workers = dpu.map(|p| p.spec().max_threads).unwrap_or(0);
-        let slo_us = 10.0 * mix.mean_service_s(PlatformId::HostEpyc) * 1e6;
         ServeConfig {
             dpu,
             host_workers,
             dpu_workers,
-            policy,
+            scheduler: info.name,
+            dpu_fraction: 0.5,
             mix,
             arrivals: Arrivals::OpenPoisson { rate_rps: 1000.0 },
             jitter: ServiceJitter::Tail,
             total_requests: 3000,
             queue_cap: 64,
-            slo_us,
+            slos: ClassSlos::default_headroom(),
+            max_batch: 1,
+            linger_us: 20.0,
             seed,
         }
     }
+
+    /// Reject configurations the event loop cannot serve — the parse-time
+    /// guard for the zero-worker pools that used to panic deep inside
+    /// `Pool::least_loaded_core`.
+    pub fn validate(&self) -> Result<(), String> {
+        if scheduler::lookup(self.scheduler).is_none() {
+            return Err(format!(
+                "unknown scheduler {:?} (available: {})",
+                self.scheduler,
+                scheduler::help_names()
+            ));
+        }
+        if self.host_workers == 0 {
+            return Err("host_workers must be >= 1".into());
+        }
+        if self.dpu.is_some() && self.dpu_workers == 0 {
+            return Err("dpu_workers must be >= 1 on a DPU deployment".into());
+        }
+        if self.max_batch == 0 {
+            return Err("max_batch must be >= 1 (1 disables batching)".into());
+        }
+        if !(self.linger_us >= 0.0 && self.linger_us.is_finite()) {
+            return Err(format!("linger_us must be finite and >= 0, got {}", self.linger_us));
+        }
+        if !(0.0..=1.0).contains(&self.dpu_fraction) {
+            return Err(format!("dpu_fraction must be in [0,1], got {}", self.dpu_fraction));
+        }
+        Ok(())
+    }
+
+    /// Instantiate this run's scheduler from the registry.
+    pub fn build_scheduler(&self) -> Box<dyn Scheduler> {
+        scheduler::lookup(self.scheduler)
+            .unwrap_or_else(|| panic!("unknown scheduler {:?}", self.scheduler))
+            .build(&SchedParams {
+                dpu_fraction: self.dpu_fraction,
+            })
+    }
+}
+
+/// Per-class slice of a serving outcome (goodput accounting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassOutcome {
+    pub class: RequestClass,
+    pub arrived: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    /// Completions within the class's latency SLO — the goodput numerator.
+    pub slo_met: u64,
 }
 
 /// Raw outcome of one serving run.
@@ -91,214 +173,539 @@ pub struct ServeOutcome {
     pub elapsed_s: f64,
     /// Per-request end-to-end latency (µs), completion order.
     pub latencies_us: Vec<f64>,
-    /// Per-request queueing wait (µs), service-start order.
+    /// Per-request queueing wait (µs; includes batch linger), service-start
+    /// order.
     pub waits_us: Vec<f64>,
     pub host_busy_s: f64,
     pub dpu_busy_s: f64,
     pub host_served: u64,
     pub dpu_served: u64,
+    /// Batches pulled by idle cores from another queue.
+    pub steals: u64,
+    /// DPU batch-accumulator flushes (full + linger-expired).
+    pub batches_flushed: u64,
+    /// One entry per [`RequestClass::ALL`] member, in that order.
+    pub per_class: Vec<ClassOutcome>,
+}
+
+impl ServeOutcome {
+    /// Total completions within their class SLO across all classes.
+    pub fn slo_met(&self) -> u64 {
+        self.per_class.iter().map(|c| c.slo_met).sum()
+    }
 }
 
 enum Ev {
     Arrive,
     Depart { dpu_side: bool, core: usize },
+    /// Batch-linger deadline for `RequestClass::ALL[class_idx]`'s
+    /// accumulator; `gen` guards against a timer outliving its batch.
+    Linger { class_idx: usize, gen: u64 },
 }
 
-/// Run one serving simulation to completion.
-pub fn run_serve(cfg: &ServeConfig) -> ServeOutcome {
-    run_serve_obs(cfg, &Obs::disabled())
+/// One per-class DPU-side batch accumulator.
+#[derive(Default)]
+struct Acc {
+    jobs: Vec<Job>,
+    /// Bumped at each flush so a stale linger timer can be recognized.
+    gen: u64,
+    timer: Option<EventId>,
 }
 
-/// [`run_serve`] with observability instruments: per-request lifecycle
-/// spans (`request`/`queue`/`service`) placed on the **sim-time** axis,
-/// pool-backlog high-water gauges, and rejection/SLO counters. Everything
-/// recorded derives from the seeded simulation, so traces and metrics are
+/// Mutable bookkeeping threaded through the event handlers (a struct so
+/// the helpers below can borrow it independently of the pools).
+struct Tally {
+    completed: u64,
+    rejected: u64,
+    issued: usize,
+    latencies_us: Vec<f64>,
+    waits_us: Vec<f64>,
+    /// Virtual time of the last completion (throughput denominator; the
+    /// engine clock may run later on stale timers or trailing rejects).
+    last_done_s: f64,
+    class_arrived: [u64; RequestClass::COUNT],
+    class_completed: [u64; RequestClass::COUNT],
+    class_rejected: [u64; RequestClass::COUNT],
+    class_slo_met: [u64; RequestClass::COUNT],
+    steals: u64,
+    batches_flushed: u64,
+}
+
+/// Closed loop only: a finished (or shed) request lets its client think,
+/// then issue the next one — the client population never shrinks.
+fn reissue(cfg: &ServeConfig, eng: &mut Engine<Ev>, tally: &mut Tally) {
+    if let Arrivals::ClosedLoop { think_s, .. } = cfg.arrivals {
+        if tally.issued < cfg.total_requests.max(1) {
+            eng.schedule_in(think_s.max(0.0), Ev::Arrive);
+            tally.issued += 1;
+        }
+    }
+}
+
+/// Put `batch` in service on an idle core.
+fn start_batch(
+    pool: &mut Pool,
+    ci: usize,
+    batch: Batch,
+    dpu_side: bool,
+    now: f64,
+    eng: &mut Engine<Ev>,
+    tally: &mut Tally,
+    obs: &Obs,
+) {
+    debug_assert!(pool.cores[ci].current.is_none(), "start on a busy core");
+    pool.busy_s += batch.service_s;
+    for j in &batch.jobs {
+        let wait_us = (now - j.arrived_s).max(0.0) * 1e6;
+        tally.waits_us.push(wait_us);
+        obs.metrics.observe("serve.wait_us", wait_us);
+    }
+    if batch.len() > 1 {
+        obs.metrics.observe("serve.batch_size", batch.len() as f64);
+        if obs.tracer.is_enabled() {
+            obs.tracer.span_sim(
+                "batch",
+                format!("batch:{}x{}", batch.class().name(), batch.len()),
+                tid_of(dpu_side, ci),
+                now,
+                batch.service_s,
+                &[("size", Value::Num(batch.len() as f64))],
+            );
+        }
+    }
+    let svc = batch.service_s;
+    pool.cores[ci].current = Some(batch);
+    eng.schedule_in(svc, Ev::Depart { dpu_side, core: ci });
+}
+
+/// Place `batch` on `pool`'s least-loaded core: start it if the core is
+/// idle, queue it if the admission cap allows, shed it whole otherwise.
+fn admit_batch(
+    pool: &mut Pool,
+    dpu_side: bool,
+    batch: Batch,
+    now: f64,
+    cfg: &ServeConfig,
+    eng: &mut Engine<Ev>,
+    tally: &mut Tally,
+    obs: &Obs,
+) {
+    let ci = pool
+        .least_loaded_core()
+        .expect("validated config: pools have at least one worker");
+    if pool.cores[ci].current.is_none() {
+        start_batch(pool, ci, batch, dpu_side, now, eng, tally, obs);
+    } else if pool.cores[ci]
+        .queued_requests()
+        .saturating_add(batch.len())
+        > cfg.queue_cap
+    {
+        // admission control: shed rather than queue unboundedly
+        for j in &batch.jobs {
+            tally.rejected += 1;
+            tally.class_rejected[j.class.idx()] += 1;
+            obs.metrics.inc("serve.rejected");
+            if obs.tracer.is_enabled() {
+                // zero-duration marker on the rejecting core's track
+                obs.tracer.span_sim(
+                    "reject",
+                    format!("req:{} reject", j.id),
+                    tid_of(dpu_side, ci),
+                    now,
+                    0.0,
+                    &[("class", Value::str(j.class.name()))],
+                );
+            }
+            reissue(cfg, eng, tally);
+        }
+    } else {
+        pool.cores[ci].queue.push_back(batch);
+    }
+    obs.metrics.gauge_max(
+        if dpu_side {
+            "serve.dpu_backlog_hwm"
+        } else {
+            "serve.host_backlog_hwm"
+        },
+        pool.backlog() as f64,
+    );
+}
+
+/// Flush a batch accumulator onto the DPU pool: the batch costs
+/// `setup + Σ marginal_i`, amortizing the per-dispatch setup across the
+/// members ([`service_split_s`]).
+fn flush_acc(
+    acc: &mut Acc,
+    class: RequestClass,
+    dpu_pool: &mut Pool,
+    now: f64,
+    cfg: &ServeConfig,
+    eng: &mut Engine<Ev>,
+    tally: &mut Tally,
+    obs: &Obs,
+) {
+    if acc.jobs.is_empty() {
+        return;
+    }
+    if let Some(id) = acc.timer.take() {
+        eng.cancel(id);
+    }
+    acc.gen += 1;
+    let jobs = std::mem::take(&mut acc.jobs);
+    let (setup, _) = service_split_s(class, dpu_pool.platform);
+    let service_s = setup
+        + jobs
+            .iter()
+            .map(|j| (j.service_s - setup).max(0.0))
+            .sum::<f64>();
+    tally.batches_flushed += 1;
+    obs.metrics.inc("serve.batches");
+    admit_batch(
+        dpu_pool,
+        true,
+        Batch { jobs, service_s },
+        now,
+        cfg,
+        eng,
+        tally,
+        obs,
+    );
+}
+
+/// Run one serving simulation to completion. Pass [`Obs::disabled`] for a
+/// plain run; with a recording `Obs` the per-request lifecycle spans
+/// (`request`/`queue`/`service`/`batch`/`steal`) land on the **sim-time**
+/// axis and the serving counters/histograms on the metrics registry, all
 /// byte-stable under a fixed seed (DESIGN.md §9).
-pub fn run_serve_obs(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
+pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
+    if let Err(e) = cfg.validate() {
+        panic!("invalid ServeConfig: {e}");
+    }
     let total = cfg.total_requests.max(1);
     let mut rng_arrive = Pcg::with_stream(cfg.seed, 0x5e7_a001);
     let mut rng_class = Pcg::with_stream(cfg.seed, 0x5e7_a002);
     let mut rng_route = Pcg::with_stream(cfg.seed, 0x5e7_a003);
     let mut rng_service = Pcg::with_stream(cfg.seed, 0x5e7_a004);
 
+    let mut sched = cfg.build_scheduler();
     let mut host = Pool::new(PlatformId::HostEpyc, cfg.host_workers);
-    let mut dpu = cfg.dpu.map(|p| Pool::new(p, cfg.dpu_workers.max(1)));
-    let host_mean = cfg.mix.mean_service_s(host.platform);
-    let dpu_mean = dpu
-        .as_ref()
-        .map(|d| cfg.mix.mean_service_s(d.platform))
+    let mut dpu = cfg.dpu.map(|p| Pool::new(p, cfg.dpu_workers));
+
+    let host_mean = cfg.mix.mean_service_s(PlatformId::HostEpyc);
+    let dpu_mean = cfg
+        .dpu
+        .map(|p| cfg.mix.mean_service_s(p))
         .unwrap_or(f64::INFINITY);
+    let mut host_class = [0.0; RequestClass::COUNT];
+    let mut dpu_class = [f64::INFINITY; RequestClass::COUNT];
+    for c in RequestClass::ALL {
+        host_class[c.idx()] = mean_service_s(c, PlatformId::HostEpyc);
+        if let Some(p) = cfg.dpu {
+            dpu_class[c.idx()] = mean_service_s(c, p);
+        }
+    }
+    let batching = cfg.max_batch > 1 && dpu.is_some();
+    let linger_s = if batching { cfg.linger_us * 1e-6 } else { 0.0 };
+
+    // scheduler view of the deployment, rebuilt wherever a decision is
+    // needed (cheap: two references and a few copies)
+    macro_rules! ctx {
+        ($now:expr) => {
+            SchedCtx {
+                host: &host,
+                dpu: dpu.as_ref(),
+                host_mean_s: host_mean,
+                dpu_mean_s: dpu_mean,
+                host_class_s: host_class,
+                dpu_class_s: dpu_class,
+                linger_s,
+                now_s: $now,
+            }
+        };
+    }
 
     let mut eng: Engine<Ev> = Engine::new();
-    let mut issued = 0usize;
+    let mut tally = Tally {
+        completed: 0,
+        rejected: 0,
+        issued: 0,
+        latencies_us: Vec::with_capacity(total),
+        waits_us: Vec::with_capacity(total),
+        last_done_s: 0.0,
+        class_arrived: [0; RequestClass::COUNT],
+        class_completed: [0; RequestClass::COUNT],
+        class_rejected: [0; RequestClass::COUNT],
+        class_slo_met: [0; RequestClass::COUNT],
+        steals: 0,
+        batches_flushed: 0,
+    };
     match cfg.arrivals {
         Arrivals::ClosedLoop { clients, .. } => {
             let k = (clients.max(1) as usize).min(total);
             for _ in 0..k {
                 eng.schedule_in(0.0, Ev::Arrive);
             }
-            issued = k;
+            tally.issued = k;
         }
         _ => {
             eng.schedule_in(0.0, Ev::Arrive);
-            issued = 1;
+            tally.issued = 1;
         }
     }
 
-    let mut completed = 0u64;
-    let mut rejected = 0u64;
+    let mut accs: [Acc; RequestClass::COUNT] = Default::default();
     let mut next_id = 0u64;
-    let mut latencies_us = Vec::with_capacity(total);
-    let mut waits_us = Vec::with_capacity(total);
 
     while let Some((now, ev)) = eng.next_event() {
         match ev {
             Ev::Arrive => {
                 // open loop: keep the arrival stream going
-                if cfg.arrivals.is_open() && issued < total {
+                if cfg.arrivals.is_open() && tally.issued < total {
                     let gap = cfg.arrivals.sample_gap_s(&mut rng_arrive);
                     eng.schedule_in(gap, Ev::Arrive);
-                    issued += 1;
+                    tally.issued += 1;
                 }
 
                 let class = cfg.mix.sample(&mut rng_class);
                 let id = next_id;
                 next_id += 1;
+                tally.class_arrived[class.idx()] += 1;
                 obs.metrics.inc("serve.arrived");
-                let sel = route(
-                    cfg.policy,
-                    &host,
-                    dpu.as_ref(),
-                    host_mean,
-                    dpu_mean,
-                    &mut rng_route,
-                );
-                let dpu_side = sel == PoolSel::Dpu;
-                let pool = if dpu_side {
-                    dpu.as_mut().expect("router never picks an absent pool")
-                } else {
-                    &mut host
+
+                let sel = {
+                    let c = ctx!(now);
+                    sched.on_arrival(class, cfg.slos.get(class) * 1e-6, &c, &mut rng_route)
                 };
-                let service = sample_service_s(class, pool.platform, cfg.jitter, &mut rng_service);
-                let ci = pool.least_loaded_core();
-                let tid = if dpu_side { DPU_TID0 } else { HOST_TID0 } + ci as u64;
+                let dpu_side = sel == PoolSel::Dpu && dpu.is_some();
+                let platform = if dpu_side {
+                    cfg.dpu.expect("dpu_side implies a DPU pool")
+                } else {
+                    PlatformId::HostEpyc
+                };
                 let job = Job {
                     id,
                     class,
                     arrived_s: now,
-                    service_s: service,
+                    service_s: sample_service_s(class, platform, cfg.jitter, &mut rng_service),
                 };
-                if pool.cores[ci].current.is_none() {
-                    pool.busy_s += service;
-                    pool.cores[ci].current = Some(job);
-                    waits_us.push(0.0);
-                    obs.metrics.observe("serve.wait_us", 0.0);
-                    eng.schedule_in(service, Ev::Depart { dpu_side, core: ci });
-                } else if pool.cores[ci].queue.len() >= cfg.queue_cap {
-                    // admission control: shed rather than queue unboundedly
-                    rejected += 1;
-                    obs.metrics.inc("serve.rejected");
-                    if obs.tracer.is_enabled() {
-                        // zero-duration marker on the rejecting core's track
-                        obs.tracer.span_sim(
-                            "reject",
-                            format!("req:{id} reject"),
-                            tid,
-                            now,
-                            0.0,
-                            &[("class", Value::str(class.name()))],
-                        );
-                    }
-                    // closed loop: rejection completes the client's request
-                    // cycle too — it thinks, then issues the next one (the
-                    // client population must not shrink on rejection)
-                    if let Arrivals::ClosedLoop { think_s, .. } = cfg.arrivals {
-                        if issued < total {
-                            eng.schedule_in(think_s.max(0.0), Ev::Arrive);
-                            issued += 1;
+
+                if dpu_side && batching {
+                    // accumulate; flush on full, else arm the linger timer
+                    {
+                        let acc = &mut accs[class.idx()];
+                        acc.jobs.push(job);
+                        if acc.jobs.len() == 1 {
+                            let gen = acc.gen;
+                            acc.timer = Some(eng.schedule_in(
+                                linger_s,
+                                Ev::Linger {
+                                    class_idx: class.idx(),
+                                    gen,
+                                },
+                            ));
                         }
                     }
-                } else {
-                    pool.cores[ci].queue.push_back(job);
-                }
-                obs.metrics.gauge_max(
-                    if dpu_side {
-                        "serve.dpu_backlog_hwm"
-                    } else {
-                        "serve.host_backlog_hwm"
-                    },
-                    pool.backlog() as f64,
-                );
-            }
-            Ev::Depart { dpu_side, core: ci } => {
-                let pool = if dpu_side {
-                    dpu.as_mut().expect("departure from an absent pool")
-                } else {
-                    &mut host
-                };
-                let done = pool.cores[ci]
-                    .current
-                    .take()
-                    .expect("departure from an idle core");
-                let latency_us = (now - done.arrived_s) * 1e6;
-                latencies_us.push(latency_us);
-                pool.served += 1;
-                completed += 1;
-                obs.metrics.inc("serve.completed");
-                obs.metrics.observe("serve.latency_us", latency_us);
-                if latency_us > cfg.slo_us {
-                    obs.metrics.inc("serve.slo_violations");
-                }
-                if obs.tracer.is_enabled() {
-                    // the full arrive→depart lifecycle in sim-time, split
-                    // into its queue-wait and service segments
-                    let tid = if dpu_side { DPU_TID0 } else { HOST_TID0 } + ci as u64;
-                    let svc_start_s = now - done.service_s;
-                    let wait_s = (svc_start_s - done.arrived_s).max(0.0);
-                    obs.tracer.span_sim(
-                        "request",
-                        format!("req:{}", done.id),
-                        tid,
-                        done.arrived_s,
-                        now - done.arrived_s,
-                        &[
-                            ("class", Value::str(done.class.name())),
-                            ("wait_us", Value::Num(wait_s * 1e6)),
-                        ],
-                    );
-                    if wait_s > 0.0 {
-                        obs.tracer.span_sim(
-                            "queue",
-                            format!("req:{} queued", done.id),
-                            tid,
-                            done.arrived_s,
-                            wait_s,
-                            &[],
+                    if accs[class.idx()].jobs.len() >= cfg.max_batch {
+                        flush_acc(
+                            &mut accs[class.idx()],
+                            class,
+                            dpu.as_mut().expect("dpu_side implies a DPU pool"),
+                            now,
+                            cfg,
+                            &mut eng,
+                            &mut tally,
+                            obs,
                         );
                     }
-                    obs.tracer.span_sim(
-                        "service",
-                        format!("req:{} service", done.id),
-                        tid,
-                        svc_start_s,
-                        done.service_s,
-                        &[],
+                } else if dpu_side {
+                    admit_batch(
+                        dpu.as_mut().expect("dpu_side implies a DPU pool"),
+                        true,
+                        Batch::single(job),
+                        now,
+                        cfg,
+                        &mut eng,
+                        &mut tally,
+                        obs,
+                    );
+                } else {
+                    admit_batch(
+                        &mut host,
+                        false,
+                        Batch::single(job),
+                        now,
+                        cfg,
+                        &mut eng,
+                        &mut tally,
+                        obs,
                     );
                 }
-                if let Some(next) = pool.cores[ci].queue.pop_front() {
-                    let wait_us = (now - next.arrived_s) * 1e6;
-                    waits_us.push(wait_us);
-                    obs.metrics.observe("serve.wait_us", wait_us);
-                    pool.busy_s += next.service_s;
-                    let svc = next.service_s;
-                    pool.cores[ci].current = Some(next);
-                    eng.schedule_in(svc, Ev::Depart { dpu_side, core: ci });
+            }
+            Ev::Linger { class_idx, gen } => {
+                let class = RequestClass::ALL[class_idx];
+                // stale timer (accumulator flushed since): ignore. Flushes
+                // cancel their timer, so this is purely defensive.
+                if accs[class_idx].gen != gen || accs[class_idx].jobs.is_empty() {
+                    continue;
                 }
-                // closed loop: the client thinks, then issues its next request
-                if let Arrivals::ClosedLoop { think_s, .. } = cfg.arrivals {
-                    if issued < total {
-                        eng.schedule_in(think_s.max(0.0), Ev::Arrive);
-                        issued += 1;
+                accs[class_idx].timer = None;
+                let action = {
+                    let c = ctx!(now);
+                    sched.on_linger(class, &c)
+                };
+                match action {
+                    LingerAction::Flush => flush_acc(
+                        &mut accs[class_idx],
+                        class,
+                        dpu.as_mut().expect("linger timers only exist with a DPU"),
+                        now,
+                        cfg,
+                        &mut eng,
+                        &mut tally,
+                        obs,
+                    ),
+                    LingerAction::Extend => {
+                        accs[class_idx].timer =
+                            Some(eng.schedule_in(linger_s, Ev::Linger { class_idx, gen }));
+                    }
+                }
+            }
+            Ev::Depart { dpu_side, core: ci } => {
+                let side = if dpu_side { PoolSel::Dpu } else { PoolSel::Host };
+                {
+                    let pool = if dpu_side {
+                        dpu.as_mut().expect("departure from an absent pool")
+                    } else {
+                        &mut host
+                    };
+                    let done = pool.cores[ci]
+                        .current
+                        .take()
+                        .expect("departure from an idle core");
+                    pool.served += done.len() as u64;
+                    tally.last_done_s = now;
+                    let svc_start_s = now - done.service_s;
+                    for j in &done.jobs {
+                        let latency_us = (now - j.arrived_s) * 1e6;
+                        tally.latencies_us.push(latency_us);
+                        tally.completed += 1;
+                        tally.class_completed[j.class.idx()] += 1;
+                        obs.metrics.inc("serve.completed");
+                        obs.metrics.observe("serve.latency_us", latency_us);
+                        if latency_us <= cfg.slos.get(j.class) {
+                            tally.class_slo_met[j.class.idx()] += 1;
+                        } else {
+                            obs.metrics.inc("serve.slo_violations");
+                        }
+                        if obs.tracer.is_enabled() {
+                            // the full arrive→depart lifecycle in sim-time,
+                            // split into queue-wait and service segments
+                            let tid = tid_of(dpu_side, ci);
+                            let wait_s = (svc_start_s - j.arrived_s).max(0.0);
+                            obs.tracer.span_sim(
+                                "request",
+                                format!("req:{}", j.id),
+                                tid,
+                                j.arrived_s,
+                                now - j.arrived_s,
+                                &[
+                                    ("class", Value::str(j.class.name())),
+                                    ("wait_us", Value::Num(wait_s * 1e6)),
+                                ],
+                            );
+                            if wait_s > 0.0 {
+                                obs.tracer.span_sim(
+                                    "queue",
+                                    format!("req:{} queued", j.id),
+                                    tid,
+                                    j.arrived_s,
+                                    wait_s,
+                                    &[],
+                                );
+                            }
+                            obs.tracer.span_sim(
+                                "service",
+                                format!("req:{} service", j.id),
+                                tid,
+                                svc_start_s,
+                                done.service_s,
+                                &[],
+                            );
+                        }
+                    }
+                    let finished = done.len();
+                    if let Some(next) = pool.cores[ci].queue.pop_front() {
+                        start_batch(pool, ci, next, dpu_side, now, &mut eng, &mut tally, obs);
+                    }
+                    for _ in 0..finished {
+                        reissue(cfg, &mut eng, &mut tally);
+                    }
+                }
+                // still idle → give the scheduler a chance to steal
+                let idle = if dpu_side {
+                    dpu.as_ref().map_or(false, |d| d.cores[ci].current.is_none())
+                } else {
+                    host.cores[ci].current.is_none()
+                };
+                if idle {
+                    let choice = {
+                        let c = ctx!(now);
+                        sched.on_idle(side, ci, &c)
+                    };
+                    if let Some((vp, vc)) = choice {
+                        let stolen = match vp {
+                            PoolSel::Host => host
+                                .cores
+                                .get_mut(vc)
+                                .and_then(|c| c.queue.pop_front()),
+                            PoolSel::Dpu => dpu
+                                .as_mut()
+                                .and_then(|d| d.cores.get_mut(vc))
+                                .and_then(|c| c.queue.pop_front()),
+                        };
+                        if let Some(mut b) = stolen {
+                            if vp != side {
+                                // cross-pool steal: re-price deterministically
+                                // by the class-mean ratio instead of resampling
+                                let class = b.class();
+                                let from_p = match vp {
+                                    PoolSel::Host => PlatformId::HostEpyc,
+                                    PoolSel::Dpu => cfg.dpu.expect("stole from the DPU"),
+                                };
+                                let to_p = if dpu_side {
+                                    cfg.dpu.expect("stealing DPU core")
+                                } else {
+                                    PlatformId::HostEpyc
+                                };
+                                let ratio =
+                                    mean_service_s(class, to_p) / mean_service_s(class, from_p);
+                                b.service_s *= ratio;
+                                for j in &mut b.jobs {
+                                    j.service_s *= ratio;
+                                }
+                            }
+                            tally.steals += 1;
+                            obs.metrics.inc("serve.steals");
+                            if obs.tracer.is_enabled() {
+                                obs.tracer.span_sim(
+                                    "steal",
+                                    format!("steal:{}x{}", b.class().name(), b.len()),
+                                    tid_of(dpu_side, ci),
+                                    now,
+                                    0.0,
+                                    &[(
+                                        "from",
+                                        Value::str(if vp == PoolSel::Dpu { "dpu" } else { "host" }),
+                                    )],
+                                );
+                            }
+                            let pool = if dpu_side {
+                                dpu.as_mut().expect("stealing DPU core")
+                            } else {
+                                &mut host
+                            };
+                            start_batch(pool, ci, b, dpu_side, now, &mut eng, &mut tally, obs);
+                        }
                     }
                 }
             }
@@ -310,17 +717,39 @@ pub fn run_serve_obs(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
     obs.metrics.gauge_max("sim.heap_hwm", eng.heap_high_water() as f64);
     obs.metrics.gauge_max("sim.elapsed_s", eng.now());
 
-    debug_assert_eq!(completed + rejected, issued as u64);
+    debug_assert_eq!(tally.completed + tally.rejected, tally.issued as u64);
+    debug_assert!(
+        accs.iter().all(|a| a.jobs.is_empty()),
+        "accumulators must drain before the engine does"
+    );
+
+    let elapsed = if tally.last_done_s > 0.0 {
+        tally.last_done_s
+    } else {
+        eng.now()
+    };
     ServeOutcome {
-        completed,
-        rejected,
-        elapsed_s: eng.now().max(f64::MIN_POSITIVE),
-        latencies_us,
-        waits_us,
+        completed: tally.completed,
+        rejected: tally.rejected,
+        elapsed_s: elapsed.max(f64::MIN_POSITIVE),
+        latencies_us: tally.latencies_us,
+        waits_us: tally.waits_us,
         host_busy_s: host.busy_s,
         dpu_busy_s: dpu.as_ref().map(|d| d.busy_s).unwrap_or(0.0),
         host_served: host.served,
         dpu_served: dpu.as_ref().map(|d| d.served).unwrap_or(0),
+        steals: tally.steals,
+        batches_flushed: tally.batches_flushed,
+        per_class: RequestClass::ALL
+            .iter()
+            .map(|c| ClassOutcome {
+                class: *c,
+                arrived: tally.class_arrived[c.idx()],
+                completed: tally.class_completed[c.idx()],
+                rejected: tally.class_rejected[c.idx()],
+                slo_met: tally.class_slo_met[c.idx()],
+            })
+            .collect(),
     }
 }
 
@@ -330,17 +759,16 @@ mod tests {
     use crate::serve::request::{mean_service_s, RequestClass};
 
     fn single_core_cfg(rate_rps: f64, jitter: ServiceJitter) -> ServeConfig {
-        let mut cfg = ServeConfig::new(
-            None,
-            Policy::HostOnly,
-            Mix::single(RequestClass::IndexGet),
-            1,
-        );
+        let mut cfg = ServeConfig::new(None, "host-only", Mix::single(RequestClass::IndexGet), 1);
         cfg.host_workers = 1;
         cfg.arrivals = Arrivals::Paced { rate_rps };
         cfg.jitter = jitter;
         cfg.queue_cap = usize::MAX;
         cfg
+    }
+
+    fn plain(cfg: &ServeConfig) -> ServeOutcome {
+        run_serve(cfg, &Obs::disabled())
     }
 
     #[test]
@@ -351,7 +779,7 @@ mod tests {
         let d = 0.6 * s;
         let mut cfg = single_core_cfg(1.0 / d, ServiceJitter::None);
         cfg.total_requests = 12;
-        let out = run_serve(&cfg);
+        let out = plain(&cfg);
         assert_eq!(out.completed, 12);
         assert_eq!(out.rejected, 0);
         for (i, lat) in out.latencies_us.iter().enumerate() {
@@ -375,10 +803,9 @@ mod tests {
         let mut cfg = single_core_cfg(0.5 / s, ServiceJitter::Exponential);
         cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 0.5 / s };
         cfg.total_requests = 30_000;
-        let out = run_serve(&cfg);
+        let out = plain(&cfg);
         assert_eq!(out.rejected, 0);
-        let mean_s =
-            out.latencies_us.iter().sum::<f64>() / out.latencies_us.len() as f64 / 1e6;
+        let mean_s = out.latencies_us.iter().sum::<f64>() / out.latencies_us.len() as f64 / 1e6;
         let theory = 2.0 * s;
         assert!(
             (mean_s / theory - 1.0).abs() < 0.2,
@@ -392,7 +819,7 @@ mod tests {
         let mut cfg = single_core_cfg(4.0 / s, ServiceJitter::None); // 4x capacity
         cfg.queue_cap = 4;
         cfg.total_requests = 2000;
-        let out = run_serve(&cfg);
+        let out = plain(&cfg);
         assert!(out.rejected > 1000, "rejected {}", out.rejected);
         assert_eq!(out.completed + out.rejected, 2000);
         // admitted latency is bounded by the queue cap
@@ -406,7 +833,7 @@ mod tests {
         // throughput * mean latency ≈ clients.
         let mut cfg = ServeConfig::new(
             Some(PlatformId::Bf3),
-            Policy::QueueAware,
+            "queue-aware",
             Mix::single(RequestClass::NetRpc),
             7,
         );
@@ -415,11 +842,10 @@ mod tests {
             think_s: 0.0,
         };
         cfg.total_requests = 20_000;
-        let out = run_serve(&cfg);
+        let out = plain(&cfg);
         assert_eq!(out.rejected, 0);
         let tput = out.completed as f64 / out.elapsed_s;
-        let mean_lat_s =
-            out.latencies_us.iter().sum::<f64>() / out.latencies_us.len() as f64 / 1e6;
+        let mean_lat_s = out.latencies_us.iter().sum::<f64>() / out.latencies_us.len() as f64 / 1e6;
         let l = tput * mean_lat_s;
         assert!((l - 32.0).abs() / 32.0 < 0.15, "L = {l}");
     }
@@ -428,26 +854,50 @@ mod tests {
     fn deterministic_under_fixed_seed() {
         let mut cfg = ServeConfig::new(
             Some(PlatformId::Bf2),
-            Policy::QueueAware,
+            "queue-aware",
             Mix::from_name("mixed").unwrap(),
             42,
         );
         cfg.total_requests = 2000;
         cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 20_000.0 };
-        let a = run_serve(&cfg);
-        let b = run_serve(&cfg);
+        let a = plain(&cfg);
+        let b = plain(&cfg);
         assert_eq!(a, b);
         // a different seed produces a different sample path
         cfg.seed = 43;
-        let c = run_serve(&cfg);
+        let c = plain(&cfg);
         assert_ne!(a.latencies_us, c.latencies_us);
+    }
+
+    #[test]
+    fn deterministic_with_stealing_and_batching() {
+        // the acceptance-critical invariant: stealing + batching stay on
+        // seeded/deterministic paths (no RNG in victim selection or
+        // re-pricing), so the full outcome is identical across runs
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            "work-steal",
+            Mix::from_name("mixed").unwrap(),
+            17,
+        );
+        cfg.total_requests = 4000;
+        cfg.max_batch = 8;
+        // above the host-only knee, so the queue-aware arrival rule must
+        // spill onto the DPU and the batch accumulators actually flush
+        let rate = 1.3 * crate::serve::metrics::host_only_capacity_rps(&cfg);
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
+        let a = plain(&cfg);
+        let b = plain(&cfg);
+        assert_eq!(a, b);
+        assert!(a.batches_flushed > 0, "{a:?}");
+        assert!(a.dpu_served > 0, "{a:?}");
     }
 
     #[test]
     fn obs_trace_and_metrics_are_seed_deterministic() {
         let mut cfg = ServeConfig::new(
             Some(PlatformId::Bf2),
-            Policy::QueueAware,
+            "queue-aware",
             Mix::from_name("mixed").unwrap(),
             9,
         );
@@ -455,7 +905,7 @@ mod tests {
         cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 30_000.0 };
         let run = || {
             let obs = Obs::recording();
-            let out = run_serve_obs(&cfg, &obs);
+            let out = run_serve(&cfg, &obs);
             (
                 out,
                 obs.tracer.to_chrome_json().to_compact(),
@@ -473,7 +923,7 @@ mod tests {
         assert!(trace_a.contains("\"cat\":\"service\""));
         // counters agree with the outcome the caller sees
         let obs = Obs::recording();
-        let out = run_serve_obs(&cfg, &obs);
+        let out = run_serve(&cfg, &obs);
         assert_eq!(out_a, out);
         assert_eq!(obs.metrics.counter("serve.completed"), out.completed);
         assert_eq!(obs.metrics.counter("serve.rejected"), out.rejected);
@@ -491,15 +941,15 @@ mod tests {
     fn disabled_obs_changes_nothing() {
         let mut cfg = ServeConfig::new(
             Some(PlatformId::Bf3),
-            Policy::StaticSplit { dpu_fraction: 0.5 },
+            "static-split",
             Mix::single(RequestClass::IndexGet),
             3,
         );
         cfg.total_requests = 500;
-        let plain = run_serve(&cfg);
+        let plain_out = plain(&cfg);
         let obs = Obs::recording();
-        let traced = run_serve_obs(&cfg, &obs);
-        assert_eq!(plain, traced, "instrumentation must not perturb the sim");
+        let traced = run_serve(&cfg, &obs);
+        assert_eq!(plain_out, traced, "instrumentation must not perturb the sim");
         assert!(!obs.tracer.is_empty());
     }
 
@@ -507,13 +957,13 @@ mod tests {
     fn dpu_only_routes_everything_to_the_dpu() {
         let mut cfg = ServeConfig::new(
             Some(PlatformId::Bf2),
-            Policy::DpuOnly,
+            "dpu-only",
             Mix::single(RequestClass::NetRpc),
             5,
         );
         cfg.total_requests = 1000;
         cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 50_000.0 };
-        let out = run_serve(&cfg);
+        let out = plain(&cfg);
         assert_eq!(out.host_served, 0);
         assert!(out.dpu_served > 0);
         assert_eq!(out.host_busy_s, 0.0);
@@ -528,18 +978,156 @@ mod tests {
         // play while staying far below the combined capacity.
         let mut cfg = ServeConfig::new(
             Some(PlatformId::Bf3),
-            Policy::QueueAware,
+            "queue-aware",
             Mix::single(RequestClass::IndexGet),
             11,
         );
         cfg.total_requests = 5000;
-        let dpu_cap = cfg.dpu_workers as f64
-            / mean_service_s(RequestClass::IndexGet, PlatformId::Bf3);
+        let dpu_cap =
+            cfg.dpu_workers as f64 / mean_service_s(RequestClass::IndexGet, PlatformId::Bf3);
         cfg.arrivals = Arrivals::OpenPoisson {
             rate_rps: 2.0 * dpu_cap,
         };
-        let out = run_serve(&cfg);
+        let out = plain(&cfg);
         assert!(out.host_served > 0 && out.dpu_served > 0, "{out:?}");
         assert_eq!(out.rejected, 0, "queue-aware should absorb 2x dpu load");
+    }
+
+    #[test]
+    fn linger_timer_flushes_partial_batches() {
+        // dpu-only, slow paced arrivals (gap >> linger): every request
+        // flushes alone at its linger deadline and still completes,
+        // costing latency ≈ linger + service
+        let s = mean_service_s(RequestClass::NetRpc, PlatformId::Bf2);
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            "dpu-only",
+            Mix::single(RequestClass::NetRpc),
+            2,
+        );
+        cfg.jitter = ServiceJitter::None;
+        cfg.max_batch = 8;
+        cfg.linger_us = 20.0;
+        cfg.total_requests = 50;
+        // gap of 40 service times dwarfs the 20µs linger window
+        cfg.arrivals = Arrivals::Paced {
+            rate_rps: 1.0 / (40.0 * s),
+        };
+        let out = plain(&cfg);
+        assert_eq!(out.completed, 50);
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.batches_flushed, 50, "every flush is a singleton");
+        assert_eq!(out.steals, 0);
+        let expect_us = cfg.linger_us + s * 1e6;
+        for lat in &out.latencies_us {
+            assert!((lat - expect_us).abs() < 1e-6, "{lat} vs {expect_us}");
+        }
+    }
+
+    #[test]
+    fn full_accumulators_flush_without_waiting_for_linger() {
+        // closed loop with clients == max_batch and zero think: the first
+        // wave fills the accumulator instantly and flushes at t=0 — no
+        // linger delay on the first batch
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf3),
+            "dpu-only",
+            Mix::single(RequestClass::IndexGet),
+            4,
+        );
+        cfg.jitter = ServiceJitter::None;
+        cfg.max_batch = 8;
+        cfg.linger_us = 1000.0;
+        cfg.total_requests = 64;
+        cfg.arrivals = Arrivals::ClosedLoop {
+            clients: 8,
+            think_s: 0.0,
+        };
+        let out = plain(&cfg);
+        assert_eq!(out.completed, 64);
+        assert_eq!(out.batches_flushed, 8, "64 requests in full batches of 8");
+        // amortization: a batch of 8 is cheaper than 8 singletons
+        let (setup, marginal) = service_split_s(RequestClass::IndexGet, PlatformId::Bf3);
+        let batch_s = setup + 8.0 * marginal;
+        assert!(out.latencies_us[0] <= batch_s * 1e6 + 1e-9);
+        assert!(batch_s < 8.0 * (setup + marginal));
+    }
+
+    #[test]
+    fn per_class_accounting_sums_to_totals() {
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            "slo-aware",
+            Mix::from_name("mixed").unwrap(),
+            6,
+        );
+        cfg.total_requests = 3000;
+        cfg.max_batch = 4;
+        cfg.queue_cap = 8;
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: 80_000.0 };
+        let out = plain(&cfg);
+        let arrived: u64 = out.per_class.iter().map(|c| c.arrived).sum();
+        let completed: u64 = out.per_class.iter().map(|c| c.completed).sum();
+        let rejected: u64 = out.per_class.iter().map(|c| c.rejected).sum();
+        assert_eq!(arrived, 3000);
+        assert_eq!(completed, out.completed);
+        assert_eq!(rejected, out.rejected);
+        assert_eq!(completed + rejected, arrived);
+        for c in &out.per_class {
+            assert_eq!(c.arrived, c.completed + c.rejected, "{c:?}");
+            assert!(c.slo_met <= c.completed, "{c:?}");
+        }
+        assert_eq!(out.slo_met(), out.per_class.iter().map(|c| c.slo_met).sum());
+    }
+
+    #[test]
+    fn work_steal_drains_deep_queues() {
+        // static-split would leave the DPU drowning; work-steal lets idle
+        // host cores raid the DPU queue, so at a load host-only could
+        // absorb, nothing is lost and the host does most of the work
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            "work-steal",
+            Mix::single(RequestClass::NetRpc),
+            8,
+        );
+        cfg.total_requests = 4000;
+        let host_cap =
+            cfg.host_workers as f64 / mean_service_s(RequestClass::NetRpc, PlatformId::HostEpyc);
+        cfg.arrivals = Arrivals::OpenPoisson {
+            rate_rps: 0.5 * host_cap,
+        };
+        let out = plain(&cfg);
+        assert_eq!(out.rejected, 0, "{out:?}");
+        assert!(out.host_served > 0);
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected_at_parse_time() {
+        let mut cfg = ServeConfig::new(Some(PlatformId::Bf2), "queue-aware", Mix::single(RequestClass::NetRpc), 1);
+        assert!(cfg.validate().is_ok());
+        cfg.host_workers = 0;
+        assert!(cfg.validate().unwrap_err().contains("host_workers"));
+        cfg.host_workers = 4;
+        cfg.dpu_workers = 0;
+        assert!(cfg.validate().unwrap_err().contains("dpu_workers"));
+        cfg.dpu_workers = 4;
+        cfg.max_batch = 0;
+        assert!(cfg.validate().unwrap_err().contains("max_batch"));
+        cfg.max_batch = 1;
+        cfg.dpu_fraction = 1.5;
+        assert!(cfg.validate().unwrap_err().contains("dpu_fraction"));
+        cfg.dpu_fraction = 0.5;
+        cfg.linger_us = f64::NAN;
+        assert!(cfg.validate().unwrap_err().contains("linger_us"));
+        cfg.linger_us = 20.0;
+        cfg.scheduler = "warp-speed";
+        assert!(cfg.validate().unwrap_err().contains("unknown scheduler"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown scheduler")]
+    fn unknown_scheduler_panics_at_construction() {
+        let _ = ServeConfig::new(None, "warp-speed", Mix::single(RequestClass::NetRpc), 1);
     }
 }

@@ -1,26 +1,35 @@
 //! The `serving` coordinator task: the serve subsystem behind the
 //! standard dpBento task abstraction, so boxes can sweep
-//! policy × workload × offered load × platform through the same
+//! scheduler × workload × offered load × platform through the same
 //! cross-product machinery as every other benchmark (and `dpbento serve`
 //! gives it a first-class CLI).
 //!
 //! The box `platforms` list selects the DPU side of the deployment: on a
 //! DPU platform the deployment is host + that DPU; on `host` the
-//! deployment has no DPU and every policy degenerates to host-only (the
-//! baseline column).
+//! deployment has no DPU and every scheduler degenerates to host-only
+//! (the baseline column).
 
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 use anyhow::Result;
 
 use crate::coordinator::task::{ParamDef, SpecExt, Task, TaskContext, TestResult, TestSpec};
+use crate::obs::Obs;
 use crate::util::json::Value;
 
 use super::load::Arrivals;
 use super::metrics::{host_only_capacity_rps, point};
-use super::request::Mix;
-use super::scheduler::Policy;
+use super::request::{ClassSlos, Mix};
+use super::scheduler;
 use super::sim::{run_serve, ServeConfig};
+
+/// `policy` parameter doc, generated from the scheduler registry so the
+/// help text cannot drift from the registered names.
+fn policy_doc() -> &'static str {
+    static DOC: OnceLock<String> = OnceLock::new();
+    DOC.get_or_init(|| format!("placement scheduler: {}", scheduler::help_names()))
+}
 
 pub struct ServingTask;
 
@@ -33,11 +42,7 @@ impl Task for ServingTask {
     }
     fn params(&self) -> Vec<ParamDef> {
         vec![
-            ParamDef::new(
-                "policy",
-                "host-only | dpu-only | static-split | queue-aware placement",
-                "[\"host-only\", \"queue-aware\"]",
-            ),
+            ParamDef::new("policy", policy_doc(), "[\"host-only\", \"queue-aware\"]"),
             ParamDef::new(
                 "workload",
                 "analytics | index_get | net_rpc | mixed request mix",
@@ -53,15 +58,26 @@ impl Task for ServingTask {
             ParamDef::new("clients", "closed-loop client count", "64"),
             ParamDef::new("think_us", "closed-loop think time (µs)", "0"),
             ParamDef::new("requests", "requests per test", "3000"),
-            ParamDef::new("slo_us", "latency SLO (µs; default 10x host mean service)", "200"),
+            ParamDef::new(
+                "slo_us",
+                "uniform latency SLO (µs) for all classes (default: 10x each class's host mean)",
+                "200",
+            ),
             ParamDef::new("queue_cap", "per-core admission queue cap", "64"),
             ParamDef::new("dpu_fraction", "static-split DPU share", "0.5"),
+            ParamDef::new(
+                "max_batch",
+                "DPU-side batch accumulator size (1 disables batching)",
+                "8",
+            ),
+            ParamDef::new("linger_us", "batch linger deadline (µs)", "20"),
         ]
     }
     fn metrics(&self) -> Vec<&'static str> {
         vec![
             "offered_rps",
             "achieved_rps",
+            "goodput_rps",
             "mean_lat_us",
             "p95_lat_us",
             "p99_lat_us",
@@ -85,13 +101,12 @@ impl Task for ServingTask {
     }
     fn run(&self, ctx: &mut TaskContext, test: &TestSpec) -> Result<TestResult> {
         let policy_name = test.str_or("policy", "queue-aware");
-        let mut policy = Policy::from_name(policy_name)
-            .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
-        if let Policy::StaticSplit { .. } = policy {
-            let f = test.f64_or("dpu_fraction", 0.5);
-            anyhow::ensure!((0.0..=1.0).contains(&f), "dpu_fraction must be in [0,1]");
-            policy = Policy::StaticSplit { dpu_fraction: f };
-        }
+        let info = scheduler::lookup(policy_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy '{policy_name}' (available: {})",
+                scheduler::help_names()
+            )
+        })?;
         let workload = test.str_or("workload", "mixed");
         let mix = Mix::from_name(workload)
             .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}'"))?;
@@ -106,13 +121,28 @@ impl Task for ServingTask {
         } else {
             None
         };
-        let mut cfg = ServeConfig::new(dpu, policy, mix, ctx.seed);
+        let mut cfg = ServeConfig::new(dpu, info.name, mix, ctx.seed);
         cfg.total_requests = requests;
         cfg.queue_cap = test.usize_or("queue_cap", 64).max(1);
+        let f = test.f64_or("dpu_fraction", 0.5);
+        anyhow::ensure!((0.0..=1.0).contains(&f), "dpu_fraction must be in [0,1]");
+        cfg.dpu_fraction = f;
         if let Some(slo) = test.get("slo_us").and_then(Value::as_f64) {
-            anyhow::ensure!(slo > 0.0, "slo_us must be positive");
-            cfg.slo_us = slo;
+            anyhow::ensure!(slo > 0.0 && slo.is_finite(), "slo_us must be positive");
+            cfg.slos = ClassSlos::uniform(slo);
         }
+        let max_batch = test.usize_or("max_batch", 1);
+        anyhow::ensure!(
+            (1..=4096).contains(&max_batch),
+            "max_batch must be in 1..=4096"
+        );
+        cfg.max_batch = max_batch;
+        let linger = test.f64_or("linger_us", 20.0);
+        anyhow::ensure!(
+            linger >= 0.0 && linger.is_finite(),
+            "linger_us must be finite and >= 0"
+        );
+        cfg.linger_us = linger;
 
         // offered load: absolute, or relative to the host-only capacity so
         // boxes stay meaningful across workloads
@@ -136,16 +166,18 @@ impl Task for ServingTask {
             },
             m => anyhow::bail!("mode must be open|closed, got '{m}'"),
         };
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
 
-        let out = run_serve(&cfg);
+        let out = run_serve(&cfg, &Obs::disabled());
         let p = point(&cfg, offered, &out);
         ctx.log(format!(
-            "serving[{}] {} {} load={:.2}: {:.0}/s achieved, mean {:.1}us, p99 {:.1}us, slo_viol {:.3}",
+            "serving[{}] {} {} load={:.2}: {:.0}/s achieved ({:.0}/s in-SLO), mean {:.1}us, p99 {:.1}us, slo_viol {:.3}",
             ctx.platform,
-            cfg.policy.name(),
+            cfg.scheduler,
             workload,
             offered / host_only_cap,
             p.achieved_rps,
+            p.goodput_rps,
             p.mean_us,
             p.p99_us,
             p.slo_violation_rate,
@@ -154,6 +186,7 @@ impl Task for ServingTask {
         Ok(BTreeMap::from([
             ("offered_rps".to_string(), p.offered_rps),
             ("achieved_rps".to_string(), p.achieved_rps),
+            ("goodput_rps".to_string(), p.goodput_rps),
             ("mean_lat_us".to_string(), p.mean_us),
             ("p95_lat_us".to_string(), p.p95_us),
             ("p99_lat_us".to_string(), p.p99_us),
@@ -200,6 +233,8 @@ mod tests {
         assert_eq!(r["rejected_frac"], 0.0);
         assert!(r["mean_lat_us"] < 50.0, "{}", r["mean_lat_us"]);
         assert!(r["p99_lat_us"] >= r["p95_lat_us"]);
+        // low load: goodput tracks throughput
+        assert!(r["goodput_rps"] >= 0.9 * r["achieved_rps"], "{r:?}");
     }
 
     #[test]
@@ -223,8 +258,55 @@ mod tests {
             .unwrap();
         // half the *host* capacity swamps the BF-2 pool outright
         assert!(dpu_only["slo_violation_rate"] > 0.5, "{dpu_only:?}");
-        assert!(qa["slo_violation_rate"] < 0.2, "{qa:?}");
         assert!(qa["achieved_rps"] > 2.0 * dpu_only["achieved_rps"]);
+        assert!(qa["goodput_rps"] > dpu_only["goodput_rps"]);
+    }
+
+    #[test]
+    fn policy_aliases_resolve_through_the_registry() {
+        // "dynamic" is the legacy alias for queue-aware; both must run
+        let a = run_one(
+            PlatformId::Bf3,
+            &[
+                ("policy", Value::str("dynamic")),
+                ("workload", Value::str("net_rpc")),
+                ("requests", Value::Num(800.0)),
+            ],
+        );
+        let b = run_one(
+            PlatformId::Bf3,
+            &[
+                ("policy", Value::str("queue-aware")),
+                ("workload", Value::str("net_rpc")),
+                ("requests", Value::Num(800.0)),
+            ],
+        );
+        assert_eq!(a, b, "alias and canonical name must be the same run");
+    }
+
+    #[test]
+    fn batching_params_reach_the_sim() {
+        let args = |max_batch: f64| {
+            vec![
+                ("policy".to_string(), Value::str("dpu-only")),
+                ("workload".to_string(), Value::str("net_rpc")),
+                ("offered_rps".to_string(), Value::Num(1_000_000.0)),
+                ("requests".to_string(), Value::Num(3000.0)),
+                ("max_batch".to_string(), Value::Num(max_batch)),
+            ]
+        };
+        let t = ServingTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf2, 42);
+        t.prepare(&mut ctx).unwrap();
+        let unbatched = t.run(&mut ctx, &args(1.0).into_iter().collect()).unwrap();
+        let batched = t.run(&mut ctx, &args(16.0).into_iter().collect()).unwrap();
+        // far past the unbatched DPU knee: amortization lifts throughput
+        assert!(
+            batched["achieved_rps"] > 1.2 * unbatched["achieved_rps"],
+            "batched {} vs unbatched {}",
+            batched["achieved_rps"],
+            unbatched["achieved_rps"]
+        );
     }
 
     #[test]
@@ -273,6 +355,21 @@ mod tests {
         assert!(t
             .run(&mut ctx, &spec(&[("requests", Value::Num(0.0))]))
             .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("max_batch", Value::Num(0.0))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("linger_us", Value::Num(-3.0))]))
+            .is_err());
+        assert!(t
+            .run(&mut ctx, &spec(&[("slo_us", Value::Num(-1.0))]))
+            .is_err());
+        // the unknown-policy error lists what *is* available
+        let err = t
+            .run(&mut ctx, &spec(&[("policy", Value::str("psychic"))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("slo-aware"), "{err}");
     }
 
     #[test]

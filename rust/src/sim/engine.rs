@@ -6,10 +6,15 @@
 //! (avg + p99) the paper reports in Figs. 10–12.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 /// Virtual time in seconds.
 pub type SimTime = f64;
+
+/// Handle to a scheduled event, usable with [`Engine::cancel`]. Ids are
+/// assigned from a per-engine monotone counter, so they are deterministic
+/// under a fixed schedule order.
+pub type EventId = u64;
 
 /// An event scheduled on the engine: fires `callback(engine_time, payload)`.
 struct Event<T> {
@@ -51,6 +56,8 @@ pub struct Engine<T> {
     seq: u64,
     processed: u64,
     heap_hwm: usize,
+    /// Lazily-cancelled event ids: still on the heap, skipped on pop.
+    cancelled: HashSet<EventId>,
 }
 
 impl<T> Default for Engine<T> {
@@ -67,6 +74,7 @@ impl<T> Engine<T> {
             seq: 0,
             processed: 0,
             heap_hwm: 0,
+            cancelled: HashSet::new(),
         }
     }
 
@@ -80,16 +88,17 @@ impl<T> Engine<T> {
         self.processed
     }
 
-    /// Schedule `payload` to fire `delay` seconds from now.
-    pub fn schedule_in(&mut self, delay: SimTime, payload: T) {
+    /// Schedule `payload` to fire `delay` seconds from now. Returns an
+    /// [`EventId`] accepted by [`Engine::cancel`] (timer-style events).
+    pub fn schedule_in(&mut self, delay: SimTime, payload: T) -> EventId {
         debug_assert!(delay >= 0.0, "negative delay {delay}");
-        self.schedule_at(self.now + delay, payload);
+        self.schedule_at(self.now + delay, payload)
     }
 
     /// Schedule `payload` at absolute time `time` (must be finite and not
     /// in the past). A NaN or infinite time is a model bug — caught here
     /// in debug builds rather than surfacing as misordered events.
-    pub fn schedule_at(&mut self, time: SimTime, payload: T) {
+    pub fn schedule_at(&mut self, time: SimTime, payload: T) -> EventId {
         debug_assert!(time.is_finite(), "non-finite event time {time}");
         debug_assert!(time >= self.now, "schedule into the past");
         self.seq += 1;
@@ -99,22 +108,44 @@ impl<T> Engine<T> {
             payload,
         });
         self.heap_hwm = self.heap_hwm.max(self.heap.len());
+        self.seq
     }
 
-    /// Pop the next event, advancing the clock. `None` when drained.
+    /// Cancel a pending event (e.g. a batch-linger timer made moot by a
+    /// flush-on-full). Cancellation is lazy: the entry stays on the heap
+    /// and is discarded on pop, which keeps cancel O(1) and the pop order
+    /// deterministic. Returns `false` for ids never issued or cancelled
+    /// twice; cancelling an already-delivered id is a silent no-op.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id == 0 || id > self.seq {
+            return false;
+        }
+        self.cancelled.insert(id)
+    }
+
+    /// Pop the next live event, advancing the clock to it. Cancelled
+    /// entries are discarded without advancing the clock or counting as
+    /// processed. `None` when drained.
     pub fn next_event(&mut self) -> Option<(SimTime, T)> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.time >= self.now);
-        self.now = ev.time;
-        self.processed += 1;
-        Some((ev.time, ev.payload))
+        loop {
+            let ev = self.heap.pop()?;
+            debug_assert!(ev.time >= self.now);
+            if self.cancelled.remove(&ev.seq) {
+                continue;
+            }
+            self.now = ev.time;
+            self.processed += 1;
+            return Some((ev.time, ev.payload));
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.pending() == 0
     }
+    /// Live (non-cancelled) events still pending. (Saturating: cancelling
+    /// an already-delivered id leaves a stale tombstone.)
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.heap.len().saturating_sub(self.cancelled.len())
     }
     /// Most events ever simultaneously pending — the queue-dynamics
     /// high-water mark reported through `obs` metrics.
@@ -223,6 +254,48 @@ mod tests {
     fn infinite_schedule_rejected_in_debug() {
         let mut e = Engine::new();
         e.schedule_in(f64::INFINITY, 0u32);
+    }
+
+    #[test]
+    fn cancelled_events_are_skipped_silently() {
+        let mut e = Engine::new();
+        let a = e.schedule_in(1.0, "a");
+        let b = e.schedule_in(2.0, "b");
+        let c = e.schedule_in(3.0, "c");
+        assert_eq!(e.pending(), 3);
+        assert!(e.cancel(b));
+        assert!(!e.cancel(b), "double-cancel reports false");
+        assert!(!e.cancel(999), "unknown id reports false");
+        assert_eq!(e.pending(), 2);
+        let order: Vec<&str> = std::iter::from_fn(|| e.next_event().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "c"]);
+        // cancelled events do not count as processed
+        assert_eq!(e.processed(), 2);
+        assert!(e.is_empty());
+        let _ = (a, c);
+    }
+
+    #[test]
+    fn cancelling_the_earliest_event_does_not_advance_the_clock() {
+        let mut e = Engine::new();
+        let t = e.schedule_in(5.0, 0u32);
+        e.schedule_in(9.0, 1u32);
+        e.cancel(t);
+        let (at, payload) = e.next_event().unwrap();
+        assert_eq!((at, payload), (9.0, 1));
+        assert_eq!(e.now(), 9.0);
+    }
+
+    #[test]
+    fn cancel_then_reschedule_generations_stay_distinct() {
+        // the batch-linger pattern: cancel a timer, schedule a new one;
+        // ids never alias, so a stale cancel cannot kill the new timer
+        let mut e = Engine::new();
+        let t1 = e.schedule_in(1.0, "old");
+        e.cancel(t1);
+        let t2 = e.schedule_in(1.0, "new");
+        assert_ne!(t1, t2);
+        assert_eq!(e.next_event().map(|(_, p)| p), Some("new"));
     }
 
     #[test]

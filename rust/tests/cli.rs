@@ -150,15 +150,100 @@ fn serve_command_prints_deterministic_sweep() {
         String::from_utf8_lossy(&a.stderr)
     );
     let s = stdout(&a);
-    // one table per policy, with the throughput-latency columns
-    for policy in ["host-only", "dpu-only", "static-split", "queue-aware"] {
+    // one table per registered scheduler, with the throughput-latency columns
+    for policy in [
+        "host-only",
+        "dpu-only",
+        "static-split",
+        "queue-aware",
+        "work-steal",
+        "slo-aware",
+    ] {
         assert!(s.contains(policy), "missing table for {policy}");
     }
     assert!(s.contains("offered/s"));
+    assert!(s.contains("goodput/s"));
     assert!(s.contains("p99_us"));
     // fixed seed → byte-identical report
     let b = dpbento(&args);
     assert_eq!(s, stdout(&b));
+}
+
+#[test]
+fn serve_closed_loop_json_reports_per_class_slos() {
+    let dir = std::env::temp_dir().join("dpbento_cli_serve_json");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let json_path = dir.join("serve_closed.json");
+    let args = [
+        "serve",
+        "--platforms",
+        "bf2",
+        "--policy",
+        "slo-aware",
+        "--workload",
+        "mixed",
+        "--closed-loop",
+        "2,8",
+        "--max-batch",
+        "8",
+        "--requests",
+        "400",
+        "--seed",
+        "11",
+        "--json",
+        json_path.to_str().unwrap(),
+    ];
+    let o = dpbento(&args);
+    assert!(
+        o.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&o.stderr)
+    );
+    let s = stdout(&o);
+    assert!(s.contains("clients"), "closed-loop table keys on clients: {s}");
+    assert!(s.contains("goodput/s"));
+
+    let raw = std::fs::read_to_string(&json_path).unwrap();
+    let v = dpbento::util::json::parse(&raw).expect("sweep JSON parses");
+    let sweeps = v.get("sweeps").unwrap().as_arr().unwrap();
+    assert_eq!(sweeps.len(), 1);
+    let points = sweeps[0].get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2);
+    for (pt, clients) in points.iter().zip([2.0, 8.0]) {
+        assert_eq!(pt.get("clients").unwrap().as_f64(), Some(clients));
+        let per_class = pt.get("per_class").unwrap().as_arr().unwrap();
+        assert_eq!(per_class.len(), 3);
+        let mut arrived = 0.0;
+        for c in per_class {
+            for field in ["arrived", "completed", "rejected", "slo_met", "violation_rate"] {
+                assert!(c.get(field).is_some(), "per-class point missing {field}");
+            }
+            arrived += c.get("arrived").unwrap().as_f64().unwrap();
+        }
+        assert_eq!(arrived, 400.0, "per-class arrivals must sum to --requests");
+    }
+
+    // the JSON artifact is byte-stable under a fixed seed too
+    let first = raw.clone();
+    let o2 = dpbento(&args);
+    assert!(o2.status.success());
+    assert_eq!(first, std::fs::read_to_string(&json_path).unwrap());
+}
+
+#[test]
+fn serve_policy_aliases_resolve() {
+    let canonical = dpbento(&[
+        "serve", "--platforms", "bf2", "--policy", "queue-aware", "--loads", "0.4",
+        "--requests", "200",
+    ]);
+    let alias = dpbento(&[
+        "serve", "--platforms", "bf2", "--policy", "dynamic", "--loads", "0.4",
+        "--requests", "200",
+    ]);
+    assert!(canonical.status.success());
+    assert!(alias.status.success());
+    assert_eq!(stdout(&canonical), stdout(&alias));
 }
 
 #[test]

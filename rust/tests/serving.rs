@@ -1,18 +1,23 @@
 //! Integration tests for the serving subsystem: determinism under fixed
-//! seeds, sane queueing behaviour (latency monotone in offered load), the
-//! headline saturation ordering (dpu-only saturates before host-only),
-//! and the coordinator surface (`serving` task boxes).
+//! seeds (including with stealing and batching enabled), sane queueing
+//! behaviour (latency monotone in offered load), the headline saturation
+//! ordering (dpu-only saturates before host-only), the batching
+//! throughput/latency tradeoff, per-class SLO accounting, closed-loop
+//! convergence, the scheduler-vs-scheduler goodput acceptance check, and
+//! the coordinator surface (`serving` task boxes).
 
 use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
+use dpbento::obs::Obs;
 use dpbento::platform::PlatformId;
 use dpbento::serve::{
-    capacity_rps, host_only_capacity_rps, run_serve, sweep, Arrivals, Mix, Policy, ServeConfig,
+    capacity_rps, host_only_capacity_rps, run_serve, scheduler, sweep, sweep_closed, Arrivals,
+    Mix, ServeConfig,
 };
 
-fn base_cfg(dpu: PlatformId, policy: Policy, workload: &str, seed: u64) -> ServeConfig {
+fn base_cfg(dpu: PlatformId, sched: &str, workload: &str, seed: u64) -> ServeConfig {
     let mut cfg = ServeConfig::new(
         Some(dpu),
-        policy,
+        sched,
         Mix::from_name(workload).expect("known workload"),
         seed,
     );
@@ -20,16 +25,42 @@ fn base_cfg(dpu: PlatformId, policy: Policy, workload: &str, seed: u64) -> Serve
     cfg
 }
 
+fn p50_us(latencies: &[f64]) -> f64 {
+    let mut v = latencies.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[v.len() / 2]
+}
+
 #[test]
-fn sweep_is_deterministic_under_fixed_seed() {
-    for policy in Policy::ALL {
-        let cfg = base_cfg(PlatformId::Bf2, policy, "mixed", 42);
+fn sweep_is_deterministic_under_fixed_seed_for_every_scheduler() {
+    let obs = Obs::disabled();
+    for info in scheduler::REGISTRY {
+        let mut cfg = base_cfg(PlatformId::Bf2, info.name, "mixed", 42);
+        // exercise the batching path too: determinism must survive it
+        cfg.max_batch = 8;
         let host_cap = host_only_capacity_rps(&cfg);
         let rates = [0.3 * host_cap, 0.9 * host_cap];
-        let a = sweep(&cfg, &rates);
-        let b = sweep(&cfg, &rates);
-        assert_eq!(a, b, "{} sweep must be bit-stable", policy.name());
+        let a = sweep(&cfg, &rates, &obs);
+        let b = sweep(&cfg, &rates, &obs);
+        assert_eq!(a, b, "{} sweep must be bit-stable", info.name);
     }
+}
+
+#[test]
+fn stealing_and_batching_outcomes_are_byte_identical_across_runs() {
+    // the acceptance invariant from the redesign: stealing and batching
+    // introduce no RNG of their own, so the *entire* outcome (latency
+    // vectors included) is identical run to run
+    let obs = Obs::disabled();
+    let mut cfg = base_cfg(PlatformId::Bf3, "work-steal", "mixed", 1234);
+    cfg.max_batch = 8;
+    cfg.arrivals = Arrivals::OpenPoisson {
+        rate_rps: 1.2 * host_only_capacity_rps(&cfg),
+    };
+    let a = run_serve(&cfg, &obs);
+    let b = run_serve(&cfg, &obs);
+    assert_eq!(a, b);
+    assert!(a.batches_flushed > 0, "batching must engage: {a:?}");
 }
 
 #[test]
@@ -37,13 +68,14 @@ fn latency_monotone_nondecreasing_in_offered_load() {
     // Host-only keeps the service-time sample path identical across
     // offered loads (same rng streams, same platform), so queueing is the
     // only thing that changes: mean latency must rise with offered load.
-    let cfg = base_cfg(PlatformId::Bf3, Policy::HostOnly, "mixed", 7);
+    let obs = Obs::disabled();
+    let cfg = base_cfg(PlatformId::Bf3, "host-only", "mixed", 7);
     let cap = capacity_rps(&cfg);
     let rates: Vec<f64> = [0.2, 0.4, 0.6, 0.8, 0.95, 1.1, 1.3]
         .iter()
         .map(|l| l * cap)
         .collect();
-    let points = sweep(&cfg, &rates);
+    let points = sweep(&cfg, &rates, &obs);
     for w in points.windows(2) {
         assert!(
             w[1].mean_us >= w[0].mean_us * 0.98,
@@ -63,9 +95,10 @@ fn latency_monotone_nondecreasing_in_offered_load() {
 
 #[test]
 fn dpu_only_saturates_at_lower_offered_load_than_host_only() {
+    let obs = Obs::disabled();
     for dpu in [PlatformId::Bf2, PlatformId::Bf3] {
-        let dpu_cfg = base_cfg(dpu, Policy::DpuOnly, "mixed", 21);
-        let host_cfg = base_cfg(dpu, Policy::HostOnly, "mixed", 21);
+        let dpu_cfg = base_cfg(dpu, "dpu-only", "mixed", 21);
+        let host_cfg = base_cfg(dpu, "host-only", "mixed", 21);
         // analytically: the knee of dpu-only sits far below host-only
         let dpu_cap = capacity_rps(&dpu_cfg);
         let host_cap = capacity_rps(&host_cfg);
@@ -77,8 +110,8 @@ fn dpu_only_saturates_at_lower_offered_load_than_host_only() {
         // empirically: at a load several times the DPU knee but well below
         // the host knee, dpu-only collapses while host-only keeps up
         let rate = (3.0 * dpu_cap).min(0.5 * host_cap);
-        let dpu_pt = sweep(&dpu_cfg, &[rate])[0].clone();
-        let host_pt = sweep(&host_cfg, &[rate])[0].clone();
+        let dpu_pt = sweep(&dpu_cfg, &[rate], &obs)[0].clone();
+        let host_pt = sweep(&host_cfg, &[rate], &obs)[0].clone();
         assert!(
             host_pt.achieved_rps > 1.5 * dpu_pt.achieved_rps,
             "{dpu}: host {} vs dpu {}",
@@ -97,14 +130,15 @@ fn dpu_only_saturates_at_lower_offered_load_than_host_only() {
 
 #[test]
 fn queue_aware_frees_host_cpu_without_collapsing() {
-    // At moderate load on an index-get workload the queue-aware policy
+    // At moderate load on an index-get workload the queue-aware scheduler
     // offloads a real share of requests to the DPU, spending less host CPU
     // per request than host-only at the same offered load.
-    let qa = base_cfg(PlatformId::Bf3, Policy::QueueAware, "index_get", 9);
-    let host_only = base_cfg(PlatformId::Bf3, Policy::HostOnly, "index_get", 9);
+    let obs = Obs::disabled();
+    let qa = base_cfg(PlatformId::Bf3, "queue-aware", "index_get", 9);
+    let host_only = base_cfg(PlatformId::Bf3, "host-only", "index_get", 9);
     let rate = 0.5 * capacity_rps(&host_only);
-    let qa_pt = sweep(&qa, &[rate])[0].clone();
-    let host_pt = sweep(&host_only, &[rate])[0].clone();
+    let qa_pt = sweep(&qa, &[rate], &obs)[0].clone();
+    let host_pt = sweep(&host_only, &[rate], &obs)[0].clone();
     assert_eq!(qa_pt.rejected_frac, 0.0);
     assert!(qa_pt.dpu_busy_frac > 0.0, "{qa_pt:?}");
     assert!(
@@ -116,32 +150,148 @@ fn queue_aware_frees_host_cpu_without_collapsing() {
 }
 
 #[test]
-fn closed_loop_throughput_scales_with_clients_until_saturation() {
-    let mut cfg = base_cfg(PlatformId::Bf2, Policy::DpuOnly, "net_rpc", 3);
-    cfg.total_requests = 8000;
-    let tput = |clients: u32| {
-        let mut c = cfg.clone();
-        c.arrivals = Arrivals::ClosedLoop {
-            clients,
-            think_s: 0.0,
-        };
-        let out = run_serve(&c);
-        out.completed as f64 / out.elapsed_s
-    };
-    let t1 = tput(1);
-    let t4 = tput(4);
-    let t8 = tput(8);
-    let t32 = tput(32);
-    assert!(t4 > 2.5 * t1, "t1={t1} t4={t4}");
-    assert!(t8 > 1.5 * t4, "t4={t4} t8={t8}");
-    // 8 BF-2 cores: beyond 8 clients throughput is pinned at saturation
-    assert!((t32 / t8 - 1.0).abs() < 0.1, "t8={t8} t32={t32}");
+fn batching_trades_low_load_latency_for_high_load_throughput() {
+    // The whole point of DPU-side batching: amortizing per-request setup
+    // raises the saturation throughput, while at low load the linger
+    // window adds latency every request must pay. Both directions must
+    // show up empirically.
+    let obs = Obs::disabled();
+    let unbatched = base_cfg(PlatformId::Bf2, "dpu-only", "net_rpc", 5);
+    let mut batched = unbatched.clone();
+    batched.max_batch = 16;
+
+    // high load: drive both well past the *unbatched* knee
+    let hot = 2.0 * capacity_rps(&unbatched);
+    let mut u_hot = unbatched.clone();
+    u_hot.arrivals = Arrivals::OpenPoisson { rate_rps: hot };
+    let mut b_hot = batched.clone();
+    b_hot.arrivals = Arrivals::OpenPoisson { rate_rps: hot };
+    let u = run_serve(&u_hot, &obs);
+    let b = run_serve(&b_hot, &obs);
+    let u_tput = u.completed as f64 / u.elapsed_s;
+    let b_tput = b.completed as f64 / b.elapsed_s;
+    assert!(
+        b_tput > 1.2 * u_tput,
+        "batching should raise throughput past the unbatched knee: {b_tput} vs {u_tput}"
+    );
+    assert!(b.batches_flushed > 0);
+
+    // low load: the linger window inflates the median latency
+    let cold = 0.1 * capacity_rps(&unbatched);
+    let mut u_cold = unbatched.clone();
+    u_cold.arrivals = Arrivals::OpenPoisson { rate_rps: cold };
+    let mut b_cold = batched.clone();
+    b_cold.arrivals = Arrivals::OpenPoisson { rate_rps: cold };
+    let uc = run_serve(&u_cold, &obs);
+    let bc = run_serve(&b_cold, &obs);
+    assert!(
+        p50_us(&bc.latencies_us) > p50_us(&uc.latencies_us),
+        "linger should cost median latency at low load: {} vs {}",
+        p50_us(&bc.latencies_us),
+        p50_us(&uc.latencies_us)
+    );
 }
 
 #[test]
-fn serving_boxes_cover_policies_classes_platforms_deterministically() {
-    // the acceptance matrix: 4 policies x 2 request classes x 2 DPU
-    // platforms (+ host baseline), through the coordinator cross-product
+fn per_class_slo_accounting_sums_to_the_request_total() {
+    let obs = Obs::disabled();
+    let mut cfg = base_cfg(PlatformId::Bf3, "slo-aware", "mixed", 11);
+    cfg.max_batch = 4;
+    cfg.queue_cap = 8; // force some rejections so all three buckets fill
+    cfg.arrivals = Arrivals::OpenPoisson {
+        rate_rps: 2.0 * host_only_capacity_rps(&cfg),
+    };
+    let out = run_serve(&cfg, &obs);
+    let arrived: u64 = out.per_class.iter().map(|c| c.arrived).sum();
+    let completed: u64 = out.per_class.iter().map(|c| c.completed).sum();
+    let rejected: u64 = out.per_class.iter().map(|c| c.rejected).sum();
+    assert_eq!(arrived as usize, cfg.total_requests);
+    assert_eq!(completed, out.completed);
+    assert_eq!(rejected, out.rejected);
+    assert_eq!(completed + rejected, arrived);
+    for c in &out.per_class {
+        assert!(c.slo_met <= c.completed, "{c:?}");
+        assert_eq!(c.completed + c.rejected, c.arrived, "{c:?}");
+    }
+    assert_eq!(
+        out.slo_met(),
+        out.per_class.iter().map(|c| c.slo_met).sum::<u64>()
+    );
+}
+
+#[test]
+fn closed_loop_throughput_scales_with_clients_until_saturation() {
+    let obs = Obs::disabled();
+    let mut cfg = base_cfg(PlatformId::Bf2, "dpu-only", "net_rpc", 3);
+    cfg.total_requests = 8000;
+    cfg.arrivals = Arrivals::ClosedLoop {
+        clients: 1,
+        think_s: 0.0,
+    };
+    let points = sweep_closed(&cfg, &[1, 4, 8, 32], &obs);
+    assert_eq!(points.len(), 4);
+    for (pt, clients) in points.iter().zip([1u32, 4, 8, 32]) {
+        assert_eq!(pt.clients, Some(clients), "{pt:?}");
+    }
+    let t = |i: usize| points[i].achieved_rps;
+    assert!(t(1) > 2.5 * t(0), "t1={} t4={}", t(0), t(1));
+    assert!(t(2) > 1.5 * t(1), "t4={} t8={}", t(1), t(2));
+    // 8 BF-2 cores: beyond 8 clients throughput is pinned at saturation
+    assert!((t(3) / t(2) - 1.0).abs() < 0.1, "t8={} t32={}", t(2), t(3));
+}
+
+#[test]
+fn slo_aware_batching_beats_static_split_on_goodput_at_high_load() {
+    // The acceptance benchmark for the scheduler redesign: at an offered
+    // load above static-split's analytic capacity but below the joint
+    // host+DPU capacity, the SLO/batch-aware scheduler completes more
+    // requests within their class SLOs per second than a blind 50/50
+    // split, deterministically.
+    let obs = Obs::disabled();
+    let mut slo_cfg = base_cfg(PlatformId::Bf3, "slo-aware", "mixed", 42);
+    slo_cfg.total_requests = 6000;
+    slo_cfg.max_batch = 8;
+    let mut split_cfg = slo_cfg.clone();
+    split_cfg.scheduler = "static-split";
+    split_cfg.max_batch = 1; // the v1 baseline: blind split, no batching
+
+    let split_cap = capacity_rps(&split_cfg); // min-constrained by the DPU half
+    let joint_cap = capacity_rps(&slo_cfg); // host + batched DPU
+    assert!(
+        split_cap < 0.8 * joint_cap,
+        "precondition: split must be min-constrained ({split_cap} vs {joint_cap})"
+    );
+    // overloads static-split's DPU half by 25% while keeping slo-aware
+    // comfortably under its joint knee
+    let rate = 1.25 * split_cap;
+    slo_cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
+    split_cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
+
+    let slo_pt = sweep(&slo_cfg, &[rate], &obs)[0].clone();
+    let split_pt = sweep(&split_cfg, &[rate], &obs)[0].clone();
+    assert!(
+        slo_pt.goodput_rps > 1.2 * split_pt.goodput_rps,
+        "slo-aware goodput {} must beat static-split {} at {rate}/s",
+        slo_pt.goodput_rps,
+        split_pt.goodput_rps
+    );
+    assert!(
+        slo_pt.slo_violation_rate < split_pt.slo_violation_rate,
+        "{} vs {}",
+        slo_pt.slo_violation_rate,
+        split_pt.slo_violation_rate
+    );
+    // and the comparison itself is reproducible
+    let again = sweep(&slo_cfg, &[rate], &obs)[0].clone();
+    assert_eq!(slo_pt, again);
+}
+
+#[test]
+fn serving_boxes_cover_schedulers_classes_platforms_deterministically() {
+    // the acceptance matrix: 6 schedulers x 2 request classes x 2 DPU
+    // platforms (+ host baseline), through the coordinator cross-product;
+    // max_batch > 1 keeps the batching path in the parallel-executor
+    // determinism check
     let box_json = r#"{
       "name": "serving_matrix",
       "platforms": ["bf2", "bf3", "host"],
@@ -149,33 +299,38 @@ fn serving_boxes_cover_policies_classes_platforms_deterministically() {
       "tasks": [{
         "task": "serving",
         "params": {
-          "policy": ["host-only", "dpu-only", "static-split", "queue-aware"],
+          "policy": ["host-only", "dpu-only", "static-split", "queue-aware",
+                      "work-steal", "slo-aware"],
           "workload": ["index_get", "net_rpc"],
           "load": [0.4],
+          "max_batch": [4],
           "requests": [800]
         },
-        "metrics": ["offered_rps", "achieved_rps", "mean_lat_us", "p99_lat_us",
-                     "slo_violation_rate", "host_busy_frac", "dpu_busy_frac"]
+        "metrics": ["offered_rps", "achieved_rps", "goodput_rps", "mean_lat_us",
+                     "p99_lat_us", "slo_violation_rate", "host_busy_frac",
+                     "dpu_busy_frac"]
       }]
     }"#;
     let cfg = BoxConfig::parse(box_json).unwrap();
     let registry = Registry::builtin();
     let a = run_box(&registry, &cfg, &ExecOptions::default()).unwrap();
     assert_eq!(a.failure_count(), 0, "{}", a.render());
-    // 3 platforms x (4 policies x 2 workloads) records
+    // 3 platforms x (6 schedulers x 2 workloads) records
     assert_eq!(a.tasks.len(), 3);
     for t in &a.tasks {
-        assert_eq!(t.records.len(), 8, "{}", t.platform);
+        assert_eq!(t.records.len(), 12, "{}", t.platform);
         for rec in &t.records {
             assert!(rec.result["achieved_rps"] > 0.0);
             assert!(rec.result["mean_lat_us"] > 0.0);
+            assert!(rec.result["goodput_rps"] >= 0.0);
         }
     }
     // deterministic end to end (JSON report is byte-identical)
     let b = run_box(&registry, &cfg, &ExecOptions::default()).unwrap();
     assert_eq!(a.to_json().to_compact(), b.to_json().to_compact());
 
-    // the parallel executor path produces the same records in the same order
+    // the parallel executor path produces the same records in the same
+    // order — work stealing and batching included
     let par = run_box(
         &registry,
         &cfg,
