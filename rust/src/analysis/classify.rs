@@ -1,0 +1,335 @@
+//! Path classification and source-file preparation for the linter.
+//!
+//! The rules are contract checks, and the contracts differ by layer
+//! (DESIGN.md §10): simulation/reporting code must be deterministic and
+//! wall-clock-free, measurement code *exists* to read the wall clock,
+//! and test code may panic freely. The classifier maps a path (relative
+//! to the scan root) to its class; the [`SourceFile`] it builds also
+//! marks `#[cfg(test)]` regions and parses the `dpbento-lint` inline
+//! `allow(...)` suppression comments. (The marker is spelled out only
+//! in [`ALLOW_MARKER`]: a doc comment containing the literal marker
+//! would itself parse as an unused allow.)
+
+use std::collections::BTreeMap;
+
+use super::tokenizer::{lex, Comment, Tok};
+
+/// Which contract regime a file lives under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathClass {
+    /// `sim/`, `serve/`, `coordinator/`: byte-identical outputs under a
+    /// fixed seed — no wall clock, no ambient randomness, total float
+    /// ordering.
+    SimDeterministic,
+    /// `tasks/`, `net/`, `plugins/`, `util/bench.rs`: the measurement
+    /// side — reading `Instant::now` is the whole point.
+    Measurement,
+    /// `main.rs`: the CLI; stdout is its report surface.
+    Cli,
+    /// `tests/`, `benches/`, `examples/`, `util/prop.rs`: test code and
+    /// test infrastructure — panic-freedom rules do not apply.
+    TestSupport,
+    /// Everything else (`db/`, `obs/`, `platform/`, `util/`, …): library
+    /// code — deterministic contracts apply, wall clock is banned.
+    Lib,
+}
+
+impl PathClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PathClass::SimDeterministic => "sim-deterministic",
+            PathClass::Measurement => "measurement",
+            PathClass::Cli => "cli",
+            PathClass::TestSupport => "test",
+            PathClass::Lib => "lib",
+        }
+    }
+}
+
+/// Classify a path relative to the scan root (forward slashes).
+pub fn classify(rel: &str) -> PathClass {
+    let first = rel.split('/').next().unwrap_or_default();
+    let has_seg = |seg: &str| rel.split('/').any(|s| s == seg);
+    if has_seg("tests") || has_seg("benches") || has_seg("examples") || rel == "util/prop.rs" {
+        return PathClass::TestSupport;
+    }
+    if rel == "main.rs" {
+        return PathClass::Cli;
+    }
+    if rel == "util/bench.rs" {
+        return PathClass::Measurement;
+    }
+    match first {
+        "sim" | "serve" | "coordinator" => PathClass::SimDeterministic,
+        "tasks" | "net" | "plugins" => PathClass::Measurement,
+        _ => PathClass::Lib,
+    }
+}
+
+/// One inline `allow(rule, ...)` suppression comment ([`ALLOW_MARKER`]),
+/// attached to the code line it governs.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    /// Line the comment itself is on (reported by unused-allow).
+    pub comment_line: usize,
+    /// Code line the suppression applies to.
+    pub target_line: usize,
+}
+
+/// A source file prepared for rule evaluation.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, forward slashes.
+    pub rel: String,
+    pub class: PathClass,
+    pub lines: Vec<String>,
+    pub tokens: Vec<Tok>,
+    /// `test_lines[line - 1]` is true inside a `#[cfg(test)] mod` body.
+    pub test_lines: Vec<bool>,
+    /// Suppressions keyed by the code line they govern.
+    pub allows: BTreeMap<usize, Vec<Allow>>,
+}
+
+impl SourceFile {
+    pub fn new(rel: String, text: &str) -> SourceFile {
+        let class = classify(&rel);
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let lexed = lex(text);
+        let test_lines = mark_test_regions(&lexed.tokens, lines.len());
+        let allows = parse_allows(&lexed.comments, &lines);
+        SourceFile {
+            rel,
+            class,
+            lines,
+            tokens: lexed.tokens,
+            test_lines,
+            allows,
+        }
+    }
+
+    /// Is the 1-based line inside a `#[cfg(test)]` region (or is the
+    /// whole file test support)?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.class == PathClass::TestSupport
+            || self
+                .test_lines
+                .get(line.saturating_sub(1))
+                .copied()
+                .unwrap_or(false)
+    }
+
+    /// Source text of a 1-based line (empty if out of range).
+    pub fn line_text(&self, line: usize) -> &str {
+        self.lines
+            .get(line.saturating_sub(1))
+            .map(String::as_str)
+            .unwrap_or_default()
+    }
+}
+
+/// Mark the line span of every `#[cfg(test)] mod … { … }` body by
+/// walking the token stream and balancing braces. Attributes between the
+/// cfg and the `mod` keyword are skipped, so stacked attributes work.
+fn mark_test_regions(tokens: &[Tok], n_lines: usize) -> Vec<bool> {
+    let mut marked = vec![false; n_lines];
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if let Some(after_attr) = match_cfg_test(tokens, i) {
+            let mut j = after_attr;
+            // skip any further attributes (#[…]) before the item
+            while j < tokens.len() && tokens[j].is_punct('#') {
+                j = skip_attr(tokens, j);
+            }
+            if j < tokens.len() && tokens[j].is_ident("mod") {
+                // find the opening brace of the mod body
+                while j < tokens.len() && !tokens[j].is_punct('{') {
+                    j += 1;
+                }
+                if j < tokens.len() {
+                    let start_line = tokens[j].line;
+                    let mut depth = 0i64;
+                    let mut end_line = start_line;
+                    while j < tokens.len() {
+                        if tokens[j].is_punct('{') {
+                            depth += 1;
+                        } else if tokens[j].is_punct('}') {
+                            depth -= 1;
+                            if depth == 0 {
+                                end_line = tokens[j].line;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    if depth != 0 {
+                        end_line = n_lines; // unbalanced: mark to EOF
+                    }
+                    for l in start_line..=end_line.min(n_lines) {
+                        marked[l - 1] = true;
+                    }
+                    i = j.max(i + 1);
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    marked
+}
+
+/// If `tokens[i..]` starts with `#[cfg(test)]`, return the index just
+/// past the closing `]`.
+fn match_cfg_test(tokens: &[Tok], i: usize) -> Option<usize> {
+    let t = tokens.get(i..i + 7)?;
+    (t[0].is_punct('#')
+        && t[1].is_punct('[')
+        && t[2].is_ident("cfg")
+        && t[3].is_punct('(')
+        && t[4].is_ident("test")
+        && t[5].is_punct(')')
+        && t[6].is_punct(']'))
+    .then_some(i + 7)
+}
+
+/// Skip a `#[…]` attribute starting at the `#`; returns the index after
+/// the matching `]` (or the end of input on malformed attributes).
+fn skip_attr(tokens: &[Tok], i: usize) -> usize {
+    let mut j = i + 1;
+    if j >= tokens.len() || !tokens[j].is_punct('[') {
+        return i + 1;
+    }
+    let mut depth = 0i64;
+    while j < tokens.len() {
+        if tokens[j].is_punct('[') {
+            depth += 1;
+        } else if tokens[j].is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+const ALLOW_MARKER: &str = "dpbento-lint: allow(";
+
+/// Extract [`ALLOW_MARKER`] `allow(rule, ...)` suppressions from comments.
+/// A trailing comment governs its own line; a standalone comment governs
+/// the next line that has code on it (skipping blanks and comments).
+fn parse_allows(comments: &[Comment], lines: &[String]) -> BTreeMap<usize, Vec<Allow>> {
+    let mut out: BTreeMap<usize, Vec<Allow>> = BTreeMap::new();
+    for c in comments {
+        let Some(pos) = c.text.find(ALLOW_MARKER) else {
+            continue;
+        };
+        let rest = &c.text[pos + ALLOW_MARKER.len()..];
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let target = if c.trailing {
+            c.line
+        } else {
+            next_code_line(lines, c.line)
+        };
+        for rule in rest[..close].split(',') {
+            let rule = rule.trim();
+            if rule.is_empty() {
+                continue;
+            }
+            out.entry(target).or_default().push(Allow {
+                rule: rule.to_string(),
+                comment_line: c.line,
+                target_line: target,
+            });
+        }
+    }
+    out
+}
+
+/// First line after `line` that contains code (not blank, not a pure
+/// comment). Falls back to `line + 1` at end of file.
+fn next_code_line(lines: &[String], line: usize) -> usize {
+    let mut l = line + 1;
+    while let Some(text) = lines.get(l - 1) {
+        let t = text.trim_start();
+        if !t.is_empty() && !t.starts_with("//") {
+            return l;
+        }
+        l += 1;
+    }
+    line + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_classes() {
+        assert_eq!(classify("sim/engine.rs"), PathClass::SimDeterministic);
+        assert_eq!(classify("serve/sim.rs"), PathClass::SimDeterministic);
+        assert_eq!(classify("coordinator/task.rs"), PathClass::SimDeterministic);
+        assert_eq!(classify("tasks/compute.rs"), PathClass::Measurement);
+        assert_eq!(classify("net/loopback.rs"), PathClass::Measurement);
+        assert_eq!(classify("plugins/rdma.rs"), PathClass::Measurement);
+        assert_eq!(classify("util/bench.rs"), PathClass::Measurement);
+        assert_eq!(classify("util/prop.rs"), PathClass::TestSupport);
+        assert_eq!(classify("main.rs"), PathClass::Cli);
+        assert_eq!(classify("db/query.rs"), PathClass::Lib);
+        assert_eq!(classify("obs/trace.rs"), PathClass::Lib);
+        assert_eq!(classify("tests/cli.rs"), PathClass::TestSupport);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn lib() {}\n\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn tail() {}\n";
+        let f = SourceFile::new("db/x.rs".into(), src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(4));
+        assert!(f.is_test_line(5));
+        assert!(f.is_test_line(6));
+        assert!(!f.is_test_line(7));
+    }
+
+    #[test]
+    fn stacked_attributes_before_test_mod() {
+        let src = "#[cfg(test)]\n#[allow(dead_code)]\nmod tests {\n    fn t() {}\n}\n";
+        let f = SourceFile::new("db/x.rs".into(), src);
+        assert!(f.is_test_line(4));
+    }
+
+    #[test]
+    fn cfg_test_on_non_mod_item_is_ignored() {
+        let src = "#[cfg(test)]\nuse std::fmt;\nfn live() {}\n";
+        let f = SourceFile::new("db/x.rs".into(), src);
+        assert!(!f.is_test_line(2));
+        assert!(!f.is_test_line(3));
+    }
+
+    #[test]
+    fn trailing_and_standalone_allows() {
+        let src = "\
+fn f() {
+    x(); // dpbento-lint: allow(panic-in-lib)
+    // dpbento-lint: allow(float-ord, naked-rng) — justification prose
+    y();
+}
+";
+        let f = SourceFile::new("db/x.rs".into(), src);
+        let on2: Vec<&str> = f.allows[&2].iter().map(|a| a.rule.as_str()).collect();
+        assert_eq!(on2, vec!["panic-in-lib"]);
+        let on4: Vec<&str> = f.allows[&4].iter().map(|a| a.rule.as_str()).collect();
+        assert_eq!(on4, vec!["float-ord", "naked-rng"]);
+        assert_eq!(f.allows[&4][0].comment_line, 3);
+    }
+
+    #[test]
+    fn standalone_allow_skips_blank_and_comment_lines() {
+        let src = "// dpbento-lint: allow(float-ord)\n\n// other comment\ncode();\n";
+        let f = SourceFile::new("db/x.rs".into(), src);
+        assert!(f.allows.contains_key(&4));
+    }
+}

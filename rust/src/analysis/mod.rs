@@ -1,0 +1,305 @@
+//! First-party static analysis: `dpbento lint` (DESIGN.md §10).
+//!
+//! A token-level linter that enforces the repo's written contracts —
+//! determinism in the sim/serve/coordinator layers, panic-freedom in
+//! library code, diagnostics through the `obs::log` facade — without
+//! any external crates (offline policy). The pieces:
+//!
+//! - [`tokenizer`]: a small Rust lexer so rules never fire inside
+//!   strings, comments, or raw literals;
+//! - [`classify`]: maps paths to contract classes and parses the
+//!   inline `allow(<rule>)` suppression comments;
+//! - [`rules`]: the [`rules::Rule`] trait + by-name [`rules::REGISTRY`];
+//! - this module: the directory walker / driver that applies
+//!   suppressions, checks that every allow is load-bearing, and renders
+//!   findings as clickable `file:line` text or a JSON artifact.
+
+pub mod classify;
+pub mod rules;
+pub mod tokenizer;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Value;
+pub use classify::{classify, PathClass, SourceFile};
+pub use rules::{by_name, Finding, Rule, REGISTRY};
+
+/// Pseudo-rule name for suppressions that suppress nothing. Runs only
+/// with the full rule set (under `--rule NAME`, other rules' allows
+/// would all look unused).
+pub const UNUSED_ALLOW: &str = "unused-allow";
+
+/// A violation with its file attached — one line of lint output.
+#[derive(Debug, Clone)]
+pub struct LintFinding {
+    pub rule: String,
+    /// Path relative to the scan root, forward slashes.
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// The result of linting a tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<LintFinding>,
+    pub files_scanned: usize,
+    /// Findings silenced by a matching allow comment.
+    pub suppressed: usize,
+    pub allows_total: usize,
+    pub allows_used: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human output: one clickable `file:line: [rule] message` per
+    /// finding, then a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.file, f.line, f.rule, f.message
+            ));
+        }
+        out.push_str(&format!(
+            "{} finding(s) in {} file(s); {} suppressed by allows ({}/{} allows used)\n",
+            self.findings.len(),
+            self.files_scanned,
+            self.suppressed,
+            self.allows_used,
+            self.allows_total,
+        ));
+        out
+    }
+
+    /// JSON artifact (stable field order via the BTreeMap-backed Value).
+    pub fn to_json(&self) -> Value {
+        let findings = self.findings.iter().map(|f| {
+            Value::obj([
+                ("rule".to_string(), Value::str(f.rule.as_str())),
+                ("file".to_string(), Value::str(f.file.as_str())),
+                ("line".to_string(), Value::num(f.line as f64)),
+                ("message".to_string(), Value::str(f.message.as_str())),
+            ])
+        });
+        Value::obj([
+            ("findings".to_string(), Value::arr(findings)),
+            (
+                "files_scanned".to_string(),
+                Value::num(self.files_scanned as f64),
+            ),
+            ("suppressed".to_string(), Value::num(self.suppressed as f64)),
+            (
+                "allows".to_string(),
+                Value::obj([
+                    ("total".to_string(), Value::num(self.allows_total as f64)),
+                    ("used".to_string(), Value::num(self.allows_used as f64)),
+                ]),
+            ),
+            (
+                "rules".to_string(),
+                Value::arr(REGISTRY.iter().map(|r| Value::str(r.name()))),
+            ),
+        ])
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted order). With
+/// `rule_filter`, run only that rule and skip the unused-allow check.
+pub fn lint_tree(root: &Path, rule_filter: Option<&str>) -> anyhow::Result<LintReport> {
+    let active: Vec<&'static dyn Rule> = match rule_filter {
+        Some(name) => {
+            let rule = by_name(name).with_context(|| {
+                let known: Vec<&str> = REGISTRY.iter().map(|r| r.name()).collect();
+                format!("unknown rule '{name}' (known: {})", known.join(", "))
+            })?;
+            vec![rule]
+        }
+        None => REGISTRY.to_vec(),
+    };
+
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+
+    let mut report = LintReport {
+        files_scanned: files.len(),
+        ..LintReport::default()
+    };
+    for path in &files {
+        let rel = rel_path(root, path);
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        lint_file(&SourceFile::new(rel, &text), &active, rule_filter.is_none(), &mut report);
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    Ok(report)
+}
+
+/// Lint one prepared file into `report`. `check_allows` also emits
+/// unused-allow findings (full-rule-set runs only).
+fn lint_file(
+    file: &SourceFile,
+    active: &[&'static dyn Rule],
+    check_allows: bool,
+    report: &mut LintReport,
+) {
+    // flatten suppressions so we can mark them used
+    let mut slots: Vec<(classify::Allow, bool)> = file
+        .allows
+        .values()
+        .flatten()
+        .map(|a| (a.clone(), false))
+        .collect();
+
+    for rule in active {
+        for f in rule.check(file) {
+            let mut suppressed = false;
+            for (a, used) in slots.iter_mut() {
+                if a.target_line == f.line && a.rule == f.rule {
+                    *used = true;
+                    suppressed = true;
+                }
+            }
+            if suppressed {
+                report.suppressed += 1;
+            } else {
+                report.findings.push(LintFinding {
+                    rule: f.rule.to_string(),
+                    file: file.rel.clone(),
+                    line: f.line,
+                    message: f.message,
+                });
+            }
+        }
+    }
+
+    if check_allows {
+        report.allows_total += slots.len();
+        for (a, used) in &slots {
+            if *used {
+                report.allows_used += 1;
+            } else {
+                report.findings.push(LintFinding {
+                    rule: UNUSED_ALLOW.to_string(),
+                    file: file.rel.clone(),
+                    line: a.comment_line,
+                    message: format!(
+                        "allow({}) suppresses nothing on line {}; remove it",
+                        a.rule, a.target_line
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Path relative to the scan root, forward slashes (falls back to the
+/// full path if `root` is not a prefix).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let p = path.strip_prefix(root).unwrap_or(path);
+    p.to_string_lossy().replace('\\', "/")
+}
+
+/// Recursive, name-sorted `.rs` walker — sorted so finding order (and
+/// the JSON artifact) is byte-stable across filesystems.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_src(rel: &str, src: &str, filter: Option<&str>) -> LintReport {
+        let mut report = LintReport {
+            files_scanned: 1,
+            ..LintReport::default()
+        };
+        let active: Vec<&'static dyn Rule> = match filter {
+            Some(n) => vec![by_name(n).unwrap()],
+            None => REGISTRY.to_vec(),
+        };
+        lint_file(
+            &SourceFile::new(rel.to_string(), src),
+            &active,
+            filter.is_none(),
+            &mut report,
+        );
+        report
+    }
+
+    #[test]
+    fn allow_suppresses_exactly_its_rule() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // dpbento-lint: allow(panic-in-lib)\n}\n";
+        let r = lint_src("db/x.rs", src, None);
+        assert!(r.clean(), "unexpected: {}", r.render());
+        assert_eq!(r.suppressed, 1);
+        assert_eq!((r.allows_used, r.allows_total), (1, 1));
+    }
+
+    #[test]
+    fn mismatched_allow_is_reported_as_unused_and_the_finding_survives() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // dpbento-lint: allow(float-ord)\n}\n";
+        let r = lint_src("db/x.rs", src, None);
+        let rules: Vec<&str> = r.findings.iter().map(|f| f.rule.as_str()).collect();
+        assert!(rules.contains(&"panic-in-lib"));
+        assert!(rules.contains(&UNUSED_ALLOW));
+    }
+
+    #[test]
+    fn unused_allow_check_skipped_under_rule_filter() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // dpbento-lint: allow(panic-in-lib)\n}\nfn g() { let t = 1; } // dpbento-lint: allow(wallclock-in-sim)\n";
+        let full = lint_src("db/x.rs", src, None);
+        assert_eq!(full.findings.len(), 1, "{}", full.render());
+        assert_eq!(full.findings[0].rule, UNUSED_ALLOW);
+        let filtered = lint_src("db/x.rs", src, Some("panic-in-lib"));
+        assert!(filtered.clean(), "{}", filtered.render());
+    }
+
+    #[test]
+    fn standalone_allow_covers_the_next_code_line() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // dpbento-lint: allow(panic-in-lib) — invariant: caller checked\n    x.unwrap()\n}\n";
+        let r = lint_src("sim/x.rs", src, None);
+        assert!(r.clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let r = lint_src("db/x.rs", src, None);
+        let j = r.to_json();
+        assert_eq!(j.get("files_scanned").and_then(Value::as_usize), Some(1));
+        let findings = j.get("findings").and_then(Value::as_arr).unwrap();
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(Value::as_str),
+            Some("panic-in-lib")
+        );
+        assert!(findings[0].get("line").and_then(Value::as_usize).is_some());
+        assert_eq!(
+            j.get("rules").and_then(Value::as_arr).map(|r| r.len()),
+            Some(REGISTRY.len())
+        );
+    }
+}

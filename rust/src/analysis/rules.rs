@@ -1,0 +1,580 @@
+//! The rule catalog: each rule is a contract check over a lexed
+//! [`SourceFile`], registered by name in [`REGISTRY`] the same way
+//! coordinator tasks and serve schedulers are. Adding a rule is three
+//! steps: write the unit struct + `impl Rule`, append it to `REGISTRY`,
+//! and drop a minimal firing fixture under `rust/tests/lint_fixtures/`
+//! (the self-test fails if a registered rule never fires).
+
+use super::classify::{PathClass, SourceFile};
+use super::tokenizer::{Tok, TokKind};
+
+/// One violation, before the driver attaches the file path and applies
+/// suppressions.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: usize,
+    pub message: String,
+}
+
+/// A named invariant check. Implementations are stateless unit structs;
+/// `check` returns every violation in one file.
+pub trait Rule: Sync {
+    fn name(&self) -> &'static str;
+    /// One-line description shown by `dpbento lint --help` and DESIGN.md.
+    fn summary(&self) -> &'static str;
+    fn check(&self, file: &SourceFile) -> Vec<Finding>;
+}
+
+/// All registered rules, in reporting order. Mirrors the coordinator
+/// task registry: lookup is by name, iteration order is fixed.
+pub static REGISTRY: &[&dyn Rule] = &[
+    &WallclockInSim,
+    &NondeterministicIteration,
+    &FloatOrd,
+    &PanicInLib,
+    &RawDiagnostics,
+    &NakedRng,
+];
+
+pub fn by_name(name: &str) -> Option<&'static dyn Rule> {
+    REGISTRY.iter().copied().find(|r| r.name() == name)
+}
+
+// ---- token-pattern helpers -------------------------------------------
+
+/// `toks[i]` starts `name!` (a macro invocation).
+fn macro_bang(toks: &[Tok], i: usize, name: &str) -> bool {
+    toks[i].is_ident(name) && toks.get(i + 1).is_some_and(|t| t.is_punct('!'))
+}
+
+/// `toks[i]` starts `.name(` (a method call).
+fn method_call(toks: &[Tok], i: usize, name: &str) -> bool {
+    toks[i].is_punct('.')
+        && toks.get(i + 1).is_some_and(|t| t.is_ident(name))
+        && toks.get(i + 2).is_some_and(|t| t.is_punct('('))
+}
+
+/// `toks[i]` starts `a::b` (a two-segment path tail).
+fn path2(toks: &[Tok], i: usize, a: &str, b: &str) -> bool {
+    toks[i].is_ident(a)
+        && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 3).is_some_and(|t| t.is_ident(b))
+}
+
+/// Index just past the `)` matching the `(` at `open` (or end of input).
+fn close_paren(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct('(') {
+            depth += 1;
+        } else if toks[j].is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+// ---- wallclock-in-sim ------------------------------------------------
+
+/// `Instant::now()` / `SystemTime` outside measurement-side code. The
+/// sim/serve/coordinator layers promise byte-identical outputs under a
+/// fixed seed, and library code feeds them; the one sanctioned ambient
+/// clock is `obs::trace::Clock` (which carries its own allow).
+pub struct WallclockInSim;
+
+impl Rule for WallclockInSim {
+    fn name(&self) -> &'static str {
+        "wallclock-in-sim"
+    }
+    fn summary(&self) -> &'static str {
+        "wall clock (Instant::now / SystemTime) outside measurement-side code"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        if !matches!(file.class, PathClass::SimDeterministic | PathClass::Lib) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (i, t) in file.tokens.iter().enumerate() {
+            if file.is_test_line(t.line) {
+                continue;
+            }
+            if path2(&file.tokens, i, "Instant", "now") {
+                out.push(Finding {
+                    rule: self.name(),
+                    line: t.line,
+                    message: format!(
+                        "Instant::now() in {} code; wall clock belongs to the \
+                         measurement side (tasks/, net/, util/bench.rs)",
+                        file.class.name()
+                    ),
+                });
+            } else if t.is_ident("SystemTime") {
+                out.push(Finding {
+                    rule: self.name(),
+                    line: t.line,
+                    message: format!("SystemTime in {} code", file.class.name()),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---- nondeterministic-iteration --------------------------------------
+
+/// Iterating a `HashMap`/`HashSet` binding in deterministic code without
+/// an ordering sink nearby. Heuristic, token-level: bindings whose
+/// declaration mentions a hash collection are tracked by name; iteration
+/// over them (`.iter()`, `.keys()`, `for … in x`, …) is flagged unless a
+/// sort/fold-style sink appears within two lines.
+pub struct NondeterministicIteration;
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+];
+
+/// Order-insensitive or re-ordering consumers: if one of these appears
+/// on the flagged line or the two lines after it, the iteration order
+/// cannot leak into output.
+const ORDER_SINKS: &[&str] = &[
+    ".sort",
+    "top_n(",
+    "BTreeMap",
+    "BTreeSet",
+    ".sum()",
+    ".sum::",
+    ".count()",
+    ".len()",
+    ".min(",
+    ".max(",
+    ".min_by",
+    ".max_by",
+    ".all(",
+    ".any(",
+    ".contains",
+    ".fold(",
+    ".extend",
+    ": HashMap",
+    ": HashSet",
+    "HashMap<",
+    "HashSet<",
+];
+
+impl NondeterministicIteration {
+    /// Names bound to hash collections: `let [mut] name … HashMap …` up
+    /// to the end of the statement line, plus `name: [&]HashMap<…>` in
+    /// fields and fn params.
+    fn hash_bindings(file: &SourceFile) -> Vec<String> {
+        let toks = &file.tokens;
+        let mut names = Vec::new();
+        let is_hash = |t: &Tok| t.is_ident("HashMap") || t.is_ident("HashSet");
+        for i in 0..toks.len() {
+            if toks[i].is_ident("let") {
+                let mut j = i + 1;
+                if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+                    j += 1;
+                }
+                let Some(name_tok) = toks.get(j) else { continue };
+                if name_tok.kind != TokKind::Ident {
+                    continue;
+                }
+                // scan the rest of the statement for a hash-collection type
+                let mut k = j + 1;
+                while k < toks.len() && !toks[k].is_punct(';') {
+                    if is_hash(&toks[k]) {
+                        names.push(name_tok.text.clone());
+                        break;
+                    }
+                    k += 1;
+                }
+            } else if toks[i].kind == TokKind::Ident
+                && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+                && !toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+            {
+                // `name: <type>` — look a few tokens ahead for HashMap/HashSet
+                let end = (i + 8).min(file.tokens.len());
+                if file.tokens[i + 2..end].iter().any(is_hash) {
+                    names.push(toks[i].text.clone());
+                }
+            }
+        }
+        names
+    }
+
+    fn sink_near(file: &SourceFile, line: usize) -> bool {
+        (line..=line + 2).any(|l| {
+            let text = file.line_text(l);
+            ORDER_SINKS.iter().any(|s| text.contains(s))
+        })
+    }
+}
+
+impl Rule for NondeterministicIteration {
+    fn name(&self) -> &'static str {
+        "nondeterministic-iteration"
+    }
+    fn summary(&self) -> &'static str {
+        "HashMap/HashSet iteration order leaking into deterministic output"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        if !matches!(file.class, PathClass::SimDeterministic | PathClass::Lib) {
+            return Vec::new();
+        }
+        let names = Self::hash_bindings(file);
+        if names.is_empty() {
+            return Vec::new();
+        }
+        let bound = |t: &Tok| t.kind == TokKind::Ident && names.iter().any(|n| *n == t.text);
+        let toks = &file.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if file.is_test_line(line) {
+                continue;
+            }
+            let fires = if toks[i].is_punct('.')
+                && ITER_METHODS.iter().any(|m| method_call(toks, i, m))
+            {
+                i > 0 && bound(&toks[i - 1])
+            } else if toks[i].is_ident("in") {
+                // `for pat in name {` or `for pat in &name {`
+                let mut j = i + 1;
+                while j < toks.len() && (toks[j].is_punct('&') || toks[j].is_ident("mut")) {
+                    j += 1;
+                }
+                toks.get(j).is_some_and(|t| bound(t))
+                    && toks.get(j + 1).is_some_and(|t| t.is_punct('{'))
+            } else {
+                false
+            };
+            if fires && !Self::sink_near(file, line) {
+                out.push(Finding {
+                    rule: self.name(),
+                    line,
+                    message: "iteration over a HashMap/HashSet binding with no \
+                              ordering sink nearby; sort or switch to BTreeMap"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---- float-ord -------------------------------------------------------
+
+/// `partial_cmp(..).unwrap()/expect(..)` — a panic on NaN *and* a
+/// partial order where the determinism contract wants a total one. Fires
+/// everywhere, including test code: `total_cmp` is strictly better.
+pub struct FloatOrd;
+
+impl Rule for FloatOrd {
+    fn name(&self) -> &'static str {
+        "float-ord"
+    }
+    fn summary(&self) -> &'static str {
+        "partial_cmp().unwrap()/expect() float ordering; use total_cmp"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        let toks = &file.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            if !toks[i].is_ident("partial_cmp") {
+                continue;
+            }
+            if !toks.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+                continue;
+            }
+            let after = close_paren(toks, i + 1);
+            if after < toks.len()
+                && (method_call(toks, after, "unwrap") || method_call(toks, after, "expect"))
+            {
+                out.push(Finding {
+                    rule: self.name(),
+                    line: toks[i].line,
+                    message: "partial_cmp + unwrap/expect on floats; use total_cmp \
+                              for a total, panic-free order"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---- panic-in-lib ----------------------------------------------------
+
+/// `unwrap()`/`expect()`/`panic!`/`unreachable!`/`todo!`/`unimplemented!`
+/// in non-test library code. A benchmark coordinator that dies mid-sweep
+/// loses the whole box run; fallible paths return `anyhow::Result`.
+/// Genuinely unreachable arms carry an inline `allow(panic-in-lib)`
+/// suppression stating the invariant.
+pub struct PanicInLib;
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+impl Rule for PanicInLib {
+    fn name(&self) -> &'static str {
+        "panic-in-lib"
+    }
+    fn summary(&self) -> &'static str {
+        "unwrap/expect/panic!/unreachable!/todo! in non-test library code"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        if matches!(file.class, PathClass::TestSupport | PathClass::Cli) {
+            return Vec::new();
+        }
+        let toks = &file.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if file.is_test_line(line) {
+                continue;
+            }
+            let what = if method_call(toks, i, "unwrap") {
+                Some(".unwrap()")
+            } else if method_call(toks, i, "expect") {
+                Some(".expect(..)")
+            } else if let Some(m) = PANIC_MACROS.iter().find(|m| macro_bang(toks, i, m)) {
+                // `debug_assert!` et al. don't reach here: full-ident match
+                Some(match *m {
+                    "panic" => "panic!",
+                    "unreachable" => "unreachable!",
+                    "todo" => "todo!",
+                    _ => "unimplemented!",
+                })
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                out.push(Finding {
+                    rule: self.name(),
+                    line,
+                    message: format!(
+                        "{what} in library code; return a Result or justify with \
+                         an allow comment"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---- raw-diagnostics -------------------------------------------------
+
+/// The `obs::log` facade rule from `tests/obs.rs`, ported into the
+/// framework (the test now delegates here): `eprintln!`/`eprint!` only
+/// inside the facade's own sink, `println!`/`print!` only on the two
+/// intentional stdout surfaces, `dbg!` nowhere.
+pub struct RawDiagnostics;
+
+const STDERR_ALLOWED: &[&str] = &["obs/log.rs"];
+const STDOUT_ALLOWED: &[&str] = &["main.rs", "util/bench.rs"];
+
+impl Rule for RawDiagnostics {
+    fn name(&self) -> &'static str {
+        "raw-diagnostics"
+    }
+    fn summary(&self) -> &'static str {
+        "println!/eprintln!/dbg! outside the obs::log facade and CLI surfaces"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        let rel = file.rel.as_str();
+        let stderr_ok = STDERR_ALLOWED.contains(&rel);
+        let stdout_ok = STDOUT_ALLOWED.contains(&rel);
+        let toks = &file.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let what = if !stderr_ok && (macro_bang(toks, i, "eprintln") || macro_bang(toks, i, "eprint"))
+            {
+                Some("stderr write; route through the obs::log facade")
+            } else if !stdout_ok && (macro_bang(toks, i, "println") || macro_bang(toks, i, "print"))
+            {
+                Some("stdout write outside the CLI/bench report surfaces")
+            } else if macro_bang(toks, i, "dbg") {
+                Some("dbg! left in source")
+            } else {
+                None
+            };
+            if let Some(msg) = what {
+                out.push(Finding {
+                    rule: self.name(),
+                    line: toks[i].line,
+                    message: format!("{}! — {msg}", toks[i].text),
+                });
+            }
+        }
+        out
+    }
+}
+
+// ---- naked-rng -------------------------------------------------------
+
+/// Randomness from outside `util::rng`: the repo's only RNG is the
+/// seeded SplitMix in `util/rng.rs`; ambient entropy (`thread_rng`,
+/// `from_entropy`, `getrandom`, hash-randomized `RandomState`) breaks
+/// run-to-run reproducibility everywhere, not just in sim code.
+pub struct NakedRng;
+
+const RNG_IDENTS: &[&str] = &[
+    "thread_rng",
+    "ThreadRng",
+    "from_entropy",
+    "getrandom",
+    "StdRng",
+    "SmallRng",
+    "OsRng",
+    "RandomState",
+];
+
+impl Rule for NakedRng {
+    fn name(&self) -> &'static str {
+        "naked-rng"
+    }
+    fn summary(&self) -> &'static str {
+        "ambient randomness outside the seeded util::rng generator"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        if file.rel == "util/rng.rs" || file.class == PathClass::TestSupport {
+            return Vec::new();
+        }
+        let toks = &file.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            if file.is_test_line(toks[i].line) {
+                continue;
+            }
+            let hit = if toks[i].kind == TokKind::Ident
+                && RNG_IDENTS.iter().any(|r| toks[i].text == *r)
+            {
+                Some(toks[i].text.clone())
+            } else if toks[i].is_ident("rand")
+                && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+                && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+            {
+                Some("rand::".to_string())
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                out.push(Finding {
+                    rule: self.name(),
+                    line: toks[i].line,
+                    message: format!(
+                        "{what} — randomness must flow through the seeded util::rng"
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rule: &dyn Rule, rel: &str, src: &str) -> Vec<Finding> {
+        rule.check(&SourceFile::new(rel.to_string(), src))
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        for (i, r) in REGISTRY.iter().enumerate() {
+            assert!(by_name(r.name()).is_some());
+            for other in &REGISTRY[i + 1..] {
+                assert_ne!(r.name(), other.name());
+            }
+        }
+        assert!(by_name("no-such-rule").is_none());
+    }
+
+    #[test]
+    fn wallclock_fires_in_sim_but_not_measurement() {
+        let src = "fn t() { let t0 = Instant::now(); }\n";
+        assert_eq!(findings(&WallclockInSim, "sim/engine.rs", src).len(), 1);
+        assert_eq!(findings(&WallclockInSim, "db/exec.rs", src).len(), 1);
+        assert!(findings(&WallclockInSim, "tasks/compute.rs", src).is_empty());
+        assert!(findings(&WallclockInSim, "util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wallclock_ignores_cfg_test_regions() {
+        let src = "#[cfg(test)]\nmod tests {\n fn t() { Instant::now(); }\n}\n";
+        assert!(findings(&WallclockInSim, "sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_ord_catches_unwrap_and_expect_after_partial_cmp() {
+        let src = "fn s(v: &mut [f64]) {\n v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n v.sort_by(|a, b| a.partial_cmp(b).expect(\"NaN\"));\n v.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        let f = findings(&FloatOrd, "util/stats.rs", src);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[1].line, 3);
+    }
+
+    #[test]
+    fn float_ord_ignores_bare_partial_cmp() {
+        let src = "fn c(a: f64, b: f64) -> Option<std::cmp::Ordering> { a.partial_cmp(&b) }\n";
+        assert!(findings(&FloatOrd, "util/stats.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_in_lib_exempts_tests_and_cli() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n#[cfg(test)]\nmod tests {\n fn t() { panic!(\"fine here\"); }\n}\n";
+        let f = findings(&PanicInLib, "db/exec.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+        assert!(findings(&PanicInLib, "main.rs", src).is_empty());
+        assert!(findings(&PanicInLib, "util/prop.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_in_lib_does_not_fire_on_unwrap_or_variants() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(3).max(x.unwrap_or_default()) }\n";
+        assert!(findings(&PanicInLib, "db/exec.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_diagnostics_honors_the_two_allowlists() {
+        let src = "fn f() { println!(\"x\"); eprintln!(\"y\"); }\n";
+        assert_eq!(findings(&RawDiagnostics, "serve/sim.rs", src).len(), 2);
+        assert_eq!(findings(&RawDiagnostics, "main.rs", src).len(), 1);
+        assert_eq!(findings(&RawDiagnostics, "obs/log.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn nondet_iteration_needs_a_binding_and_no_sink() {
+        let naked = "use std::collections::HashMap;\nfn r(m: &HashMap<String, u64>) -> String {\n let mut out = String::new();\n for (k, v) in m.iter() {\n  out.push_str(k);\n }\n out\n}\n";
+        assert_eq!(
+            findings(&NondeterministicIteration, "db/exec.rs", naked).len(),
+            1
+        );
+        let sorted = "use std::collections::HashMap;\nfn r(m: &HashMap<String, u64>) -> Vec<String> {\n let mut v: Vec<String> = m.keys().cloned().collect();\n v.sort();\n v\n}\n";
+        assert!(findings(&NondeterministicIteration, "db/exec.rs", sorted).is_empty());
+        // Vec iteration never fires, even in a file that also has a map
+        let vec_only = "use std::collections::HashMap;\nfn r(v: &[u64], m: &HashMap<u8, u8>) -> u64 {\n let _ = m;\n v.iter().copied().fold(0, |a, b| a + b)\n}\n";
+        assert!(findings(&NondeterministicIteration, "db/exec.rs", vec_only).is_empty());
+    }
+
+    #[test]
+    fn naked_rng_flags_ambient_entropy_only_outside_util_rng() {
+        let src = "fn f() { let r = rand::thread_rng(); }\n";
+        assert_eq!(findings(&NakedRng, "sim/engine.rs", src).len(), 2);
+        assert!(findings(&NakedRng, "util/rng.rs", src).is_empty());
+    }
+}

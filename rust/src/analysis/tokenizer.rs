@@ -1,0 +1,424 @@
+//! A lightweight Rust tokenizer for the invariant linter (DESIGN.md §10).
+//!
+//! Token-level, not syntax-level: rules match short token sequences
+//! (`partial_cmp ( … ) . unwrap (`), so the lexer's one job is to make
+//! sure those sequences never match inside places the programmer was
+//! *talking about* code rather than writing it — comments, string and
+//! char literals, raw strings — and to keep line numbers attached so
+//! findings are clickable. Comments are captured separately (with their
+//! position) because the suppression syntax lives in them.
+//!
+//! Handled: line + nested block comments, string/byte-string literals
+//! with escapes, raw (byte) strings with any `#` fence depth, char
+//! literals vs. lifetimes, raw identifiers (`r#type`), numeric literals
+//! including type-suffixed floats (`2f64.powf` lexes as a number then a
+//! method call). This deliberately covers the subset of Rust the repo
+//! uses; it is a linter front end, not a compiler front end.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unwrap`, `for`, `HashMap`, …).
+    Ident,
+    /// Any literal: string, raw string, char, byte, number.
+    Literal,
+    /// A lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation character (`.`, `(`, `!`, `:` …).
+    Punct(char),
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Token text (empty for long literals where the text is irrelevant).
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// A comment (line or block) with the line it starts on and whether any
+/// code precedes it on that line (trailing vs. standalone) — the
+/// distinction that decides which line an `allow(...)` applies to.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+    pub trailing: bool,
+}
+
+/// Tokenizer output: code tokens plus captured comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Tokenize Rust source. Never fails: on a malformed construct (e.g. an
+/// unterminated string) the lexer consumes to end of input — a linter
+/// must degrade gracefully on code the compiler will reject anyway.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    // tracks whether any code token has been produced on the current line
+    let mut code_on_line = false;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                code_on_line = false;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                out.comments.push(Comment {
+                    text: src[start..i].to_string(),
+                    line,
+                    trailing: code_on_line,
+                });
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                let start = i;
+                let start_line = line;
+                let trailing = code_on_line;
+                let mut depth = 1u32;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                out.comments.push(Comment {
+                    text: src[start..i.min(src.len())].to_string(),
+                    line: start_line,
+                    trailing,
+                });
+            }
+            b'"' => {
+                let start_line = line;
+                i = consume_string(b, i, &mut line);
+                out.tokens.push(Tok {
+                    kind: TokKind::Literal,
+                    text: String::new(),
+                    line: start_line,
+                });
+                code_on_line = true;
+            }
+            b'\'' => {
+                // lifetime or char literal: `'` followed by ident-start and
+                // not closed by a `'` right after one char → lifetime
+                let rest = &b[i + 1..];
+                let is_lifetime = match rest.first() {
+                    Some(&f) if f == b'_' || f.is_ascii_alphabetic() => {
+                        rest.get(1) != Some(&b'\'')
+                    }
+                    _ => false,
+                };
+                if is_lifetime {
+                    let mut j = i + 1;
+                    while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                        j += 1;
+                    }
+                    out.tokens.push(Tok {
+                        kind: TokKind::Lifetime,
+                        text: src[i..j].to_string(),
+                        line,
+                    });
+                    i = j;
+                } else {
+                    // char literal: consume to the closing quote, honoring \'
+                    let mut j = i + 1;
+                    while j < b.len() {
+                        if b[j] == b'\\' {
+                            j += 2;
+                        } else if b[j] == b'\'' {
+                            j += 1;
+                            break;
+                        } else {
+                            if b[j] == b'\n' {
+                                line += 1;
+                            }
+                            j += 1;
+                        }
+                    }
+                    out.tokens.push(Tok {
+                        kind: TokKind::Literal,
+                        text: String::new(),
+                        line,
+                    });
+                    i = j;
+                }
+                code_on_line = true;
+            }
+            _ if c == b'_' || c.is_ascii_alphabetic() => {
+                // ident — but `r"`, `r#"`, `b"`, `br#"` open (raw) strings
+                let start = i;
+                if (c == b'r' || c == b'b') && is_raw_or_byte_string(b, i) {
+                    let start_line = line;
+                    i = consume_raw_or_byte_string(b, i, &mut line);
+                    out.tokens.push(Tok {
+                        kind: TokKind::Literal,
+                        text: String::new(),
+                        line: start_line,
+                    });
+                    code_on_line = true;
+                    continue;
+                }
+                // raw identifier r#name
+                if c == b'r' && b.get(i + 1) == Some(&b'#') {
+                    let after = b.get(i + 2);
+                    if matches!(after, Some(&a) if a == b'_' || a.is_ascii_alphabetic()) {
+                        i += 2; // skip `r#`, lex the ident itself below
+                    }
+                }
+                let id_start = if i == start { start } else { i };
+                let mut j = id_start;
+                while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                out.tokens.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[id_start..j].to_string(),
+                    line,
+                });
+                i = j;
+                code_on_line = true;
+            }
+            _ if c.is_ascii_digit() => {
+                // number: digits/hex/suffix run, then a fraction part only
+                // when `.` is followed by a digit (so `2f64.powf` and
+                // `1.max(2)` lex as number + method call)
+                let mut j = i;
+                while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                    j += 1;
+                }
+                if j < b.len()
+                    && b[j] == b'.'
+                    && matches!(b.get(j + 1), Some(d) if d.is_ascii_digit())
+                {
+                    j += 1;
+                    while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                        j += 1;
+                    }
+                }
+                out.tokens.push(Tok {
+                    kind: TokKind::Literal,
+                    text: String::new(),
+                    line,
+                });
+                i = j;
+                code_on_line = true;
+            }
+            _ => {
+                out.tokens.push(Tok {
+                    kind: TokKind::Punct(c as char),
+                    text: String::new(),
+                    line,
+                });
+                i += 1;
+                code_on_line = true;
+            }
+        }
+    }
+    out
+}
+
+/// Does the `r`/`b` at `i` open a raw string, byte string, or raw byte
+/// string (`r"`, `r#…#"`, `b"`, `br"`, `br#…#"`, `rb` is not Rust)?
+fn is_raw_or_byte_string(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+        if b.get(j) == Some(&b'"') {
+            return true; // b"…"
+        }
+    }
+    if b.get(j) == Some(&b'r') {
+        j += 1;
+        let mut k = j;
+        while b.get(k) == Some(&b'#') {
+            k += 1;
+        }
+        return b.get(k) == Some(&b'"');
+    }
+    false
+}
+
+/// Consume a raw/byte string starting at `i`; returns the index after it.
+fn consume_raw_or_byte_string(b: &[u8], i: usize, line: &mut usize) -> usize {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) == Some(&b'r') {
+        j += 1;
+        let mut hashes = 0usize;
+        while b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        j += 1; // opening quote
+        // scan for `"` followed by `hashes` × `#`
+        while j < b.len() {
+            if b[j] == b'\n' {
+                *line += 1;
+                j += 1;
+                continue;
+            }
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut seen = 0usize;
+                while seen < hashes && b.get(k) == Some(&b'#') {
+                    seen += 1;
+                    k += 1;
+                }
+                if seen == hashes {
+                    return k;
+                }
+            }
+            j += 1;
+        }
+        j
+    } else {
+        // plain byte string b"…": same escape rules as a normal string
+        consume_string(b, j, line)
+    }
+}
+
+/// Consume a `"`-delimited string with `\` escapes starting at the quote.
+fn consume_string(b: &[u8], i: usize, line: &mut usize) -> usize {
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn rules_never_see_inside_literals_or_comments() {
+        let src = r###"
+            // unwrap in a comment
+            /* panic! in /* a nested */ block comment */
+            let s = "calls .unwrap() in a string";
+            let r = r#"raw panic!("x") string"#;
+            let c = '"'; // a quote char literal must not open a string
+            real_ident.other();
+        "###;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(!ids.contains(&"panic".to_string()));
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 3);
+        assert!(!lx.comments[0].trailing);
+        assert!(lx.comments[2].trailing, "comment after code is trailing");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'static str { let c = 'x'; x }";
+        let lx = lex(src);
+        let lifetimes: Vec<&str> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a", "'static"]);
+        // 'x' lexed as a literal, not a lifetime + dangling quote
+        assert_eq!(
+            lx.tokens
+                .iter()
+                .filter(|t| t.kind == TokKind::Literal)
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn suffixed_float_method_calls_lex_as_number_then_call() {
+        let src = "let x = 2f64.powf(0.5) + 1_000.max(2);";
+        let ids = idents(src);
+        assert!(ids.contains(&"powf".to_string()));
+        assert!(ids.contains(&"max".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_track_through_multiline_constructs() {
+        let src = "let a = \"x\ny\";\n/* c\nc */\nmarker();";
+        let lx = lex(src);
+        let marker = lx
+            .tokens
+            .iter()
+            .find(|t| t.is_ident("marker"))
+            .map(|t| t.line);
+        assert_eq!(marker, Some(5));
+    }
+
+    #[test]
+    fn raw_strings_with_fences_and_byte_strings() {
+        let src = r####"let a = r##"has "# inside"##; let b = b"bytes \" esc"; tail();"####;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "a", "let", "b", "tail"]);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_without_the_prefix() {
+        let ids = idents("let r#type = 1; use_it(r#type);");
+        assert!(ids.contains(&"type".to_string()));
+        assert!(ids.contains(&"use_it".to_string()));
+    }
+
+    #[test]
+    fn unterminated_string_does_not_loop_or_panic() {
+        let lx = lex("let s = \"never closed");
+        assert!(!lx.tokens.is_empty());
+    }
+}

@@ -164,6 +164,8 @@ impl BoxConfig {
               ]
             }"#,
         )
+        // dpbento-lint: allow(panic-in-lib) — compile-time-constant JSON,
+        // covered by the example_box_parses test
         .expect("fig2 example box is valid")
     }
 }

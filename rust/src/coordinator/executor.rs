@@ -286,6 +286,8 @@ fn run_tests_parallel(
             .collect();
         handles
             .into_iter()
+            // dpbento-lint: allow(panic-in-lib) — propagating a worker panic
+            // is the only sane response; swallowing it would fake results
             .map(|h| h.join().expect("executor worker panicked"))
             .collect()
     });

@@ -99,16 +99,21 @@ impl TaskContext {
     pub fn get<T: Any>(&self, key: &str) -> &T {
         self.state
             .get(key)
+            // dpbento-lint: allow(panic-in-lib) — documented contract above:
+            // a missing key is a task-implementation bug, not user input
             .unwrap_or_else(|| panic!("context missing '{key}' — prepare() not run?"))
             .downcast_ref::<T>()
+            // dpbento-lint: allow(panic-in-lib) — same contract (type bug)
             .unwrap_or_else(|| panic!("context '{key}' has unexpected type"))
     }
 
     pub fn get_mut<T: Any>(&mut self, key: &str) -> &mut T {
         self.state
             .get_mut(key)
+            // dpbento-lint: allow(panic-in-lib) — same contract as get()
             .unwrap_or_else(|| panic!("context missing '{key}' — prepare() not run?"))
             .downcast_mut::<T>()
+            // dpbento-lint: allow(panic-in-lib) — same contract (type bug)
             .unwrap_or_else(|| panic!("context '{key}' has unexpected type"))
     }
 

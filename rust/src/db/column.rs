@@ -114,7 +114,37 @@ impl Table {
     /// this since a missing column is a query-plan bug, not runtime input.
     pub fn col(&self, name: &str) -> &Column {
         self.column(name)
+            // dpbento-lint: allow(panic-in-lib) — missing column = query-plan
+            // bug; the schema is fixed at generation time, not user input
             .unwrap_or_else(|| panic!("table {} has no column {name}", self.name))
+    }
+
+    /// Typed column accessors: the query layer's single panicking funnel
+    /// for "plan says this column is type T". Schemas are built by our
+    /// own generator, so a mismatch is a bug in the plan, never input.
+    pub fn f32s(&self, name: &str) -> &[f32] {
+        self.col(name)
+            .as_f32()
+            // dpbento-lint: allow(panic-in-lib) — plan/schema type bug
+            .unwrap_or_else(|| panic!("column {name} of {} is not f32", self.name))
+    }
+    pub fn i32s(&self, name: &str) -> &[i32] {
+        self.col(name)
+            .as_i32()
+            // dpbento-lint: allow(panic-in-lib) — plan/schema type bug
+            .unwrap_or_else(|| panic!("column {name} of {} is not i32", self.name))
+    }
+    pub fn i64s(&self, name: &str) -> &[i64] {
+        self.col(name)
+            .as_i64()
+            // dpbento-lint: allow(panic-in-lib) — plan/schema type bug
+            .unwrap_or_else(|| panic!("column {name} of {} is not i64", self.name))
+    }
+    pub fn strs(&self, name: &str) -> &[String] {
+        self.col(name)
+            .as_str()
+            // dpbento-lint: allow(panic-in-lib) — plan/schema type bug
+            .unwrap_or_else(|| panic!("column {name} of {} is not str", self.name))
     }
 
     pub fn column_names(&self) -> Vec<&str> {

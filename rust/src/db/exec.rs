@@ -133,7 +133,7 @@ pub fn hash_join_i64(build: &[i64], probe: &[i64]) -> (Vec<(u32, u32)>, Work) {
 /// TopN over (key, value) descending by value (Q3's ORDER BY ... LIMIT).
 pub fn top_n(mut pairs: Vec<(i64, f64)>, n: usize) -> (Vec<(i64, f64)>, Work) {
     let rows = pairs.len() as u64;
-    pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    pairs.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     pairs.truncate(n);
     let w = Work {
         bytes_scanned: 16 * rows,

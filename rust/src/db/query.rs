@@ -93,8 +93,8 @@ pub fn run(q: QueryId, lineitem: &Table, orders: &Table) -> (QueryResult, Work) 
 fn q4(li: &Table, ord: &Table) -> (QueryResult, Work) {
     use std::collections::HashSet;
     let mut work = Work::default();
-    let lkey = li.col("l_orderkey").as_i64().unwrap();
-    let shipdate = li.col("l_shipdate").as_i32().unwrap();
+    let lkey = li.i64s("l_orderkey");
+    let shipdate = li.i32s("l_shipdate");
     // "late" lineitems: shipped in the second half of the date domain
     let late: HashSet<i64> = lkey
         .iter()
@@ -107,8 +107,8 @@ fn q4(li: &Table, ord: &Table) -> (QueryResult, Work) {
         rows_out: late.len() as u64,
         ops: 2 * lkey.len() as u64,
     });
-    let okey = ord.col("o_orderkey").as_i64().unwrap();
-    let odate = ord.col("o_orderdate").as_i32().unwrap();
+    let okey = ord.i64s("o_orderkey");
+    let odate = ord.i32s("o_orderdate");
     let mut in_band = 0u64;
     let mut with_late = 0u64;
     for (&k, &d) in okey.iter().zip(odate) {
@@ -139,9 +139,9 @@ fn q4(li: &Table, ord: &Table) -> (QueryResult, Work) {
 fn q10(li: &Table, ord: &Table) -> (QueryResult, Work) {
     use std::collections::HashMap;
     let mut work = Work::default();
-    let okey = ord.col("o_orderkey").as_i64().unwrap();
-    let ocust = ord.col("o_custkey").as_i64().unwrap();
-    let odate = ord.col("o_orderdate").as_i32().unwrap();
+    let okey = ord.i64s("o_orderkey");
+    let ocust = ord.i64s("o_custkey");
+    let odate = ord.i32s("o_orderdate");
     // orders in a quarter
     let band: Vec<usize> = odate
         .iter()
@@ -155,11 +155,11 @@ fn q10(li: &Table, ord: &Table) -> (QueryResult, Work) {
         ops: okey.len() as u64,
     });
     let band_keys: Vec<i64> = band.iter().map(|&i| okey[i]).collect();
-    let lkey = li.col("l_orderkey").as_i64().unwrap();
+    let lkey = li.i64s("l_orderkey");
     let (pairs, w) = exec::hash_join_i64(&band_keys, lkey);
     work.add(w);
-    let price = li.col("l_extendedprice").as_f32().unwrap();
-    let disc = li.col("l_discount").as_f32().unwrap();
+    let price = li.f32s("l_extendedprice");
+    let disc = li.f32s("l_discount");
     let mut per_cust: HashMap<i64, f64> = HashMap::new();
     for &(bi, pj) in &pairs {
         let cust = ocust[band[bi as usize]];
@@ -187,8 +187,8 @@ fn q10(li: &Table, ord: &Table) -> (QueryResult, Work) {
 fn q18(li: &Table, ord: &Table) -> (QueryResult, Work) {
     use std::collections::HashMap;
     let mut work = Work::default();
-    let lkey = li.col("l_orderkey").as_i64().unwrap();
-    let qty = li.col("l_quantity").as_f32().unwrap();
+    let lkey = li.i64s("l_orderkey");
+    let qty = li.f32s("l_quantity");
     let mut per_order: HashMap<i64, f64> = HashMap::new();
     for (&k, &q) in lkey.iter().zip(qty) {
         *per_order.entry(k).or_default() += q as f64;
@@ -204,8 +204,8 @@ fn q18(li: &Table, ord: &Table) -> (QueryResult, Work) {
         .into_iter()
         .filter(|(_, total)| *total > 120.0)
         .collect();
-    let okey = ord.col("o_orderkey").as_i64().unwrap();
-    let total = ord.col("o_totalprice").as_f32().unwrap();
+    let okey = ord.i64s("o_orderkey");
+    let total = ord.f32s("o_totalprice");
     let mut matched = 0u64;
     let mut price_sum = 0.0f64;
     for (&k, &p) in okey.iter().zip(total) {
@@ -234,7 +234,7 @@ fn q18(li: &Table, ord: &Table) -> (QueryResult, Work) {
 /// aggregate qty/price/discounted price/count over shipped rows.
 fn q1(li: &Table) -> (QueryResult, Work) {
     let mut work = Work::default();
-    let shipdate = li.col("l_shipdate").as_i32().unwrap();
+    let shipdate = li.i32s("l_shipdate");
     // shipdate <= cutoff (≈ 98% of rows, like the real Q1)
     let mask: exec::Mask = shipdate.iter().map(|&d| d <= 2500).collect();
     work.add(Work {
@@ -243,10 +243,10 @@ fn q1(li: &Table) -> (QueryResult, Work) {
         rows_out: exec::mask_count(&mask),
         ops: shipdate.len() as u64,
     });
-    let keys = li.col("l_flagstatus").as_i32().unwrap();
-    let qty = li.col("l_quantity").as_f32().unwrap();
-    let price = li.col("l_extendedprice").as_f32().unwrap();
-    let disc = li.col("l_discount").as_f32().unwrap();
+    let keys = li.i32s("l_flagstatus");
+    let qty = li.f32s("l_quantity");
+    let price = li.f32s("l_extendedprice");
+    let disc = li.f32s("l_discount");
     // apply the selection before aggregating (a vectorized engine's
     // filter→sel-vector→agg pipeline)
     let idx: Vec<usize> = mask
@@ -274,8 +274,8 @@ fn q1(li: &Table) -> (QueryResult, Work) {
 /// orders, rank by revenue, top 10.
 fn q3(li: &Table, ord: &Table) -> (QueryResult, Work) {
     let mut work = Work::default();
-    let odate = ord.col("o_orderdate").as_i32().unwrap();
-    let okey = ord.col("o_orderkey").as_i64().unwrap();
+    let odate = ord.i32s("o_orderdate");
+    let okey = ord.i64s("o_orderkey");
     let recent: Vec<i64> = okey
         .iter()
         .zip(odate)
@@ -287,11 +287,11 @@ fn q3(li: &Table, ord: &Table) -> (QueryResult, Work) {
         rows_out: recent.len() as u64,
         ops: okey.len() as u64,
     });
-    let lkey = li.col("l_orderkey").as_i64().unwrap();
+    let lkey = li.i64s("l_orderkey");
     let (pairs, w) = exec::hash_join_i64(&recent, lkey);
     work.add(w);
-    let price = li.col("l_extendedprice").as_f32().unwrap();
-    let disc = li.col("l_discount").as_f32().unwrap();
+    let price = li.f32s("l_extendedprice");
+    let disc = li.f32s("l_discount");
     use std::collections::HashMap;
     let mut revenue: HashMap<i64, f64> = HashMap::new();
     for &(bi, pj) in &pairs {
@@ -318,9 +318,9 @@ fn q3(li: &Table, ord: &Table) -> (QueryResult, Work) {
 /// Pallas kernel implements (quantity < 24, discount in [0.05, 0.07]).
 fn q6(li: &Table) -> (QueryResult, Work) {
     let mut work = Work::default();
-    let qty = li.col("l_quantity").as_f32().unwrap();
-    let disc = li.col("l_discount").as_f32().unwrap();
-    let price = li.col("l_extendedprice").as_f32().unwrap();
+    let qty = li.f32s("l_quantity");
+    let disc = li.f32s("l_discount");
+    let price = li.f32s("l_extendedprice");
     let (m1, w1) = exec::filter_range_f32(qty, f32::MIN, 24.0);
     let (m2, w2) = exec::filter_range_f32(disc, 0.05, 0.0701);
     work.add(w1);
@@ -335,9 +335,9 @@ fn q6(li: &Table) -> (QueryResult, Work) {
 /// in a date band, count orders per flagstatus class.
 fn q12(li: &Table, ord: &Table) -> (QueryResult, Work) {
     let mut work = Work::default();
-    let shipdate = li.col("l_shipdate").as_i32().unwrap();
-    let lkey = li.col("l_orderkey").as_i64().unwrap();
-    let flag = li.col("l_flagstatus").as_i32().unwrap();
+    let shipdate = li.i32s("l_shipdate");
+    let lkey = li.i64s("l_orderkey");
+    let flag = li.i32s("l_flagstatus");
     let band: Vec<usize> = shipdate
         .iter()
         .enumerate()
@@ -350,7 +350,7 @@ fn q12(li: &Table, ord: &Table) -> (QueryResult, Work) {
         ops: 2 * shipdate.len() as u64,
     });
     let sel_keys: Vec<i64> = band.iter().map(|&i| lkey[i]).collect();
-    let okey = ord.col("o_orderkey").as_i64().unwrap();
+    let okey = ord.i64s("o_orderkey");
     let (pairs, w) = exec::hash_join_i64(okey, &sel_keys);
     work.add(w);
     let mut per_class = [0u64; 4];
@@ -374,7 +374,7 @@ fn q12(li: &Table, ord: &Table) -> (QueryResult, Work) {
 /// Q13-like: customer distribution — count orders whose comment matches
 /// the '%special%requests%' pattern (the paper's RegEx workload source).
 fn q13(ord: &Table) -> (QueryResult, Work) {
-    let comments = ord.col("o_comment").as_str().unwrap();
+    let comments = ord.strs("o_comment");
     let mut hits = 0u64;
     let mut bytes = 0u64;
     for c in comments {
@@ -413,9 +413,9 @@ pub fn matches_special_requests(s: &str) -> bool {
 /// band to total revenue in the band.
 fn q14(li: &Table) -> (QueryResult, Work) {
     let mut work = Work::default();
-    let shipdate = li.col("l_shipdate").as_i32().unwrap();
-    let price = li.col("l_extendedprice").as_f32().unwrap();
-    let disc = li.col("l_discount").as_f32().unwrap();
+    let shipdate = li.i32s("l_shipdate");
+    let price = li.f32s("l_extendedprice");
+    let disc = li.f32s("l_discount");
     let mut promo = 0.0f64;
     let mut total = 0.0f64;
     let mut in_band = 0u64;
@@ -456,9 +456,9 @@ mod tests {
     fn q6_matches_scalar_oracle() {
         let (li, _) = db();
         let (res, work) = run(QueryId::Q6, &li, &Table::new("orders"));
-        let qty = li.col("l_quantity").as_f32().unwrap();
-        let disc = li.col("l_discount").as_f32().unwrap();
-        let price = li.col("l_extendedprice").as_f32().unwrap();
+        let qty = li.f32s("l_quantity");
+        let disc = li.f32s("l_discount");
+        let price = li.f32s("l_extendedprice");
         let mut oracle = 0.0f64;
         for i in 0..qty.len() {
             if qty[i] < 24.0 && disc[i] >= 0.05 && disc[i] < 0.0701 {
@@ -473,7 +473,7 @@ mod tests {
     fn q1_group_counts_sum_to_selected_rows() {
         let (li, _) = db();
         let (res, _) = run(QueryId::Q1, &li, &Table::new("orders"));
-        let shipdate = li.col("l_shipdate").as_i32().unwrap();
+        let shipdate = li.i32s("l_shipdate");
         let selected = shipdate.iter().filter(|&&d| d <= 2500).count() as f64;
         let count_sum: f64 = res
             .iter()
@@ -497,7 +497,7 @@ mod tests {
     fn q13_matches_manual_count() {
         let (_, ord) = db();
         let (res, _) = run(QueryId::Q13, &Table::new("lineitem"), &ord);
-        let comments = ord.col("o_comment").as_str().unwrap();
+        let comments = ord.strs("o_comment");
         let oracle = comments
             .iter()
             .filter(|c| matches_special_requests(c))
@@ -538,15 +538,15 @@ mod tests {
         let (res, _) = run(QueryId::Q4, &li, &ord);
         // scalar oracle
         use std::collections::HashSet;
-        let lkey = li.col("l_orderkey").as_i64().unwrap();
-        let shipdate = li.col("l_shipdate").as_i32().unwrap();
+        let lkey = li.i64s("l_orderkey");
+        let shipdate = li.i32s("l_shipdate");
         let late: HashSet<i64> = lkey
             .iter()
             .zip(shipdate)
             .filter_map(|(&k, &d)| (d > 1800).then_some(k))
             .collect();
-        let okey = ord.col("o_orderkey").as_i64().unwrap();
-        let odate = ord.col("o_orderdate").as_i32().unwrap();
+        let okey = ord.i64s("o_orderkey");
+        let odate = ord.i32s("o_orderdate");
         let with_late = okey
             .iter()
             .zip(odate)
@@ -572,8 +572,8 @@ mod tests {
         let (li, ord) = db();
         let (res, _) = run(QueryId::Q18, &li, &ord);
         use std::collections::HashMap;
-        let lkey = li.col("l_orderkey").as_i64().unwrap();
-        let qty = li.col("l_quantity").as_f32().unwrap();
+        let lkey = li.i64s("l_orderkey");
+        let qty = li.f32s("l_quantity");
         let mut per_order: HashMap<i64, f64> = HashMap::new();
         for (&k, &q) in lkey.iter().zip(qty) {
             *per_order.entry(k).or_default() += q as f64;

@@ -20,11 +20,15 @@
 //! - the **serving layer** (`serve`): an offload *service* built on those
 //!   substrates — open/closed-loop load generation, host/DPU placement
 //!   policies with per-core FIFO queues and admission control, and
-//!   throughput–latency sweeps (the `serving` task / `dpbento serve`).
+//!   throughput–latency sweeps (the `serving` task / `dpbento serve`);
+//! - the **invariant linter** (`analysis`): a first-party token-level
+//!   static-analysis pass (`dpbento lint`) that enforces the determinism,
+//!   panic-freedom, and observability contracts the layers above rely on.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured record of every figure.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod db;
 pub mod index;

@@ -4,6 +4,7 @@
 //! dpbento run <box.json> [--out DIR] [--plugins DIR] [--verbose] [--all-metrics] [--parallel]
 //!             [--trace FILE] [--log-level LVL]
 //! dpbento serve [--platforms LIST] [--policy NAME|all] [--workload MIX] [--loads CSV] ...
+//! dpbento lint [--json] [--rule NAME] [PATH]
 //! dpbento list-tasks
 //! dpbento clean [--platform NAME]
 //! dpbento example-box
@@ -46,6 +47,7 @@ fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
+        "lint" => cmd_lint(rest),
         "list-tasks" => cmd_list_tasks(),
         "clean" => cmd_clean(rest),
         "example-box" => {
@@ -65,9 +67,14 @@ fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
 }
 
 fn print_help() {
-    // the policy list is generated from the scheduler registry, so help
-    // text cannot drift from what `--policy` actually accepts
+    // the policy and rule lists are generated from their registries, so
+    // help text cannot drift from what `--policy` / `--rule` accept
     let policies = dpbento::serve::scheduler::help_names();
+    let rules = dpbento::analysis::REGISTRY
+        .iter()
+        .map(|r| format!("  {:26} {}", r.name(), r.summary()))
+        .collect::<Vec<_>>()
+        .join("\n");
     println!(
         "dpBento: benchmarking DPUs for data processing (paper reproduction)
 
@@ -79,6 +86,7 @@ USAGE:
                 [--closed-loop N,N,...] [--max-batch N] [--linger-us F]
                 [--slo US | --slo class=US,...] [--dpu-fraction F] [--json FILE]
                 [--requests N] [--seed N] [--trace FILE] [--log-level LVL]
+  dpbento lint [--json] [--rule NAME] [PATH]
   dpbento list-tasks
   dpbento clean [--platform host|bf2|bf3|octeon]
   dpbento example-box         print the paper's Fig. 2 box to stdout
@@ -103,6 +111,16 @@ SERVING:
                          default 10x-host-mean headroom per class
   --json FILE            write the sweeps (including per-class SLO
                          accounting) as a JSON document
+
+STATIC ANALYSIS (DESIGN.md §10):
+  `dpbento lint` runs the first-party invariant linter over PATH (default:
+  this crate's src/) and exits non-zero on any finding. `--json` writes
+  the findings document to stdout for CI artifacts; `--rule NAME` runs a
+  single rule (the unused-allow check only runs with the full set).
+  Suppress a finding with a `// dpbento-lint: allow(<rule>)` comment on
+  (or directly above) the offending line; unused allows are themselves
+  findings. Rules:
+{rules}
 
 OBSERVABILITY (DESIGN.md §9):
   --trace FILE      export the run as Chrome trace_event JSON: wall-clock
@@ -416,6 +434,34 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
         finish_trace(&obs, &trace_path)?;
     }
     Ok(ExitCode::SUCCESS)
+}
+
+/// `dpbento lint`: run the invariant linter (DESIGN.md §10) over a source
+/// tree. Exit code is the contract: 0 = clean, 1 = findings (so CI can
+/// gate on it); errors (unreadable path, unknown rule) report via the
+/// normal error path.
+fn cmd_lint(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
+    let json = take_flag(&mut args, "--json");
+    let rule = take_opt(&mut args, "--rule");
+    anyhow::ensure!(
+        args.len() <= 1,
+        "usage: dpbento lint [--json] [--rule NAME] [PATH]"
+    );
+    let root = match args.first() {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src"),
+    };
+    let report = dpbento::analysis::lint_tree(&root, rule.as_deref())?;
+    if json {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    })
 }
 
 fn cmd_list_tasks() -> anyhow::Result<ExitCode> {

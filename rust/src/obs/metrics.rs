@@ -269,7 +269,7 @@ mod tests {
                 h.observe(v);
                 samples.push(v);
             }
-            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            samples.sort_by(f64::total_cmp);
             for pct in [50.0, 90.0, 95.0, 99.0] {
                 let exact = percentile_sorted(&samples, pct);
                 let est = h.percentile(pct);

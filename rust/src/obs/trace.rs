@@ -34,6 +34,8 @@ pub struct Clock {
 impl Clock {
     pub fn new() -> Clock {
         Clock {
+            // dpbento-lint: allow(wallclock-in-sim) — this IS the sanctioned
+            // wall-clock source; everything else reads time through Clock
             epoch: Instant::now(),
         }
     }

@@ -229,6 +229,8 @@ pub fn interp_log(xs: &[usize], ys: &[f64], x: usize) -> f64 {
             return ys[i - 1] + t * (ys[i] - ys[i - 1]);
         }
     }
+    // dpbento-lint: allow(panic-in-lib) — the loop always returns: x was
+    // clamped into [xs[0], xs[last]] before interpolation
     unreachable!()
 }
 

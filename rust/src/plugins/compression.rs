@@ -66,6 +66,8 @@ impl Task for CompressionTask {
         match self.accel {
             AccelTask::Compression => "compression",
             AccelTask::Decompression => "decompression",
+            // dpbento-lint: allow(panic-in-lib) — CompressionTask is only
+            // constructed with the two compression variants
             AccelTask::Regex => unreachable!(),
         }
     }

@@ -61,6 +61,8 @@ impl Task for RegexTask {
         vec!["throughput_mbps", "match_rate"]
     }
     fn prepare(&self, ctx: &mut TaskContext) -> Result<()> {
+        // dpbento-lint: allow(panic-in-lib) — PATTERN is a compile-time
+        // constant, exercised by every regex task test
         let re = Regex::new(PATTERN).expect("pattern compiles");
         // newline-separated comment records
         let mut corpus = Gen::new(ctx.seed, 100).comment_corpus(MEASURE_BYTES);

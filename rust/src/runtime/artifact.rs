@@ -147,6 +147,8 @@ impl Manifest {
                         dtype: "float32".into(),
                     },
                 ],
+                // dpbento-lint: allow(panic-in-lib) — match is over the
+                // REQUIRED_ENTRYPOINTS list enumerated two arms above
                 _ => unreachable!(),
             };
             if ep.inputs != expect {

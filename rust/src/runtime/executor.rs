@@ -109,9 +109,14 @@ impl Runtime {
             .to_literal_sync()?;
         let mut parts = result.to_tuple()?;
         anyhow::ensure!(parts.len() == 3, "pushdown_scan returned {} outputs", parts.len());
-        let revenue = parts.pop().unwrap().to_vec::<f32>()?[0];
-        let count = parts.pop().unwrap().to_vec::<i32>()?[0];
-        let mask = parts.pop().unwrap().to_vec::<i32>()?;
+        let (Some(rev_lit), Some(count_lit), Some(mask_lit)) =
+            (parts.pop(), parts.pop(), parts.pop())
+        else {
+            anyhow::bail!("pushdown_scan tuple lost outputs");
+        };
+        let revenue = rev_lit.to_vec::<f32>()?[0];
+        let count = count_lit.to_vec::<i32>()?[0];
+        let mask = mask_lit.to_vec::<i32>()?;
         Ok(ScanOut { mask, count, revenue })
     }
 

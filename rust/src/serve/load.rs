@@ -46,6 +46,8 @@ impl Arrivals {
                 1.0 / rate_rps
             }
             Arrivals::ClosedLoop { .. } => {
+                // dpbento-lint: allow(panic-in-lib) — API misuse: the sim
+                // never asks a closed-loop source for inter-arrival gaps
                 panic!("closed-loop arrivals are driven by completions, not gaps")
             }
         }

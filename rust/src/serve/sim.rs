@@ -89,6 +89,7 @@ impl ServeConfig {
             assert!(p.is_dpu(), "dpu side of a deployment must be a DPU");
         }
         let info = scheduler::lookup(sched).unwrap_or_else(|| {
+            // dpbento-lint: allow(panic-in-lib) — invariant: ServeConfig::new callers pass registry names; the CLI validates first
             panic!(
                 "unknown scheduler {sched:?} (available: {})",
                 scheduler::help_names()
@@ -146,6 +147,7 @@ impl ServeConfig {
     /// Instantiate this run's scheduler from the registry.
     pub fn build_scheduler(&self) -> Box<dyn Scheduler> {
         scheduler::lookup(self.scheduler)
+            // dpbento-lint: allow(panic-in-lib) — invariant: self.scheduler was resolved by new()/validate()
             .unwrap_or_else(|| panic!("unknown scheduler {:?}", self.scheduler))
             .build(&SchedParams {
                 dpu_fraction: self.dpu_fraction,
@@ -292,6 +294,7 @@ fn admit_batch(
 ) {
     let ci = pool
         .least_loaded_core()
+        // dpbento-lint: allow(panic-in-lib) — validate() rejects workers == 0 at parse time
         .expect("validated config: pools have at least one worker");
     if pool.cores[ci].current.is_none() {
         start_batch(pool, ci, batch, dpu_side, now, eng, tally, obs);
@@ -379,6 +382,7 @@ fn flush_acc(
 /// byte-stable under a fixed seed (DESIGN.md §9).
 pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
     if let Err(e) = cfg.validate() {
+        // dpbento-lint: allow(panic-in-lib) — documented contract: run_serve requires a validated config
         panic!("invalid ServeConfig: {e}");
     }
     let total = cfg.total_requests.max(1);
@@ -478,6 +482,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                 };
                 let dpu_side = sel == PoolSel::Dpu && dpu.is_some();
                 let platform = if dpu_side {
+                    // dpbento-lint: allow(panic-in-lib) — dpu_side is only true when cfg.dpu is Some
                     cfg.dpu.expect("dpu_side implies a DPU pool")
                 } else {
                     PlatformId::HostEpyc
@@ -509,6 +514,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                         flush_acc(
                             &mut accs[class.idx()],
                             class,
+                            // dpbento-lint: allow(panic-in-lib) — dpu_side is only true when the DPU pool exists
                             dpu.as_mut().expect("dpu_side implies a DPU pool"),
                             now,
                             cfg,
@@ -519,6 +525,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                     }
                 } else if dpu_side {
                     admit_batch(
+                        // dpbento-lint: allow(panic-in-lib) — dpu_side is only true when the DPU pool exists
                         dpu.as_mut().expect("dpu_side implies a DPU pool"),
                         true,
                         Batch::single(job),
@@ -557,6 +564,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                     LingerAction::Flush => flush_acc(
                         &mut accs[class_idx],
                         class,
+                        // dpbento-lint: allow(panic-in-lib) — linger timers are only armed on the DPU side
                         dpu.as_mut().expect("linger timers only exist with a DPU"),
                         now,
                         cfg,
@@ -574,6 +582,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                 let side = if dpu_side { PoolSel::Dpu } else { PoolSel::Host };
                 {
                     let pool = if dpu_side {
+                        // dpbento-lint: allow(panic-in-lib) — Depart{dpu_side} events are only scheduled for live pools
                         dpu.as_mut().expect("departure from an absent pool")
                     } else {
                         &mut host
@@ -581,6 +590,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                     let done = pool.cores[ci]
                         .current
                         .take()
+                        // dpbento-lint: allow(panic-in-lib) — a Depart event is scheduled exactly when the core went busy
                         .expect("departure from an idle core");
                     pool.served += done.len() as u64;
                     tally.last_done_s = now;
@@ -670,9 +680,11 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                                 let class = b.class();
                                 let from_p = match vp {
                                     PoolSel::Host => PlatformId::HostEpyc,
+                                    // dpbento-lint: allow(panic-in-lib) — steal victims are enumerated from existing pools
                                     PoolSel::Dpu => cfg.dpu.expect("stole from the DPU"),
                                 };
                                 let to_p = if dpu_side {
+                                    // dpbento-lint: allow(panic-in-lib) — dpu_side is only true when cfg.dpu is Some
                                     cfg.dpu.expect("stealing DPU core")
                                 } else {
                                     PlatformId::HostEpyc
@@ -700,6 +712,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                                 );
                             }
                             let pool = if dpu_side {
+                                // dpbento-lint: allow(panic-in-lib) — dpu_side is only true when the DPU pool exists
                                 dpu.as_mut().expect("stealing DPU core")
                             } else {
                                 &mut host

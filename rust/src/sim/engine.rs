@@ -56,6 +56,10 @@ pub struct Engine<T> {
     seq: u64,
     processed: u64,
     heap_hwm: usize,
+    /// Ids scheduled but not yet delivered or cancelled. Membership here is
+    /// what makes [`Engine::cancel`] a strict no-op for fired/cancelled ids
+    /// and keeps [`Engine::pending`] exact.
+    live: HashSet<EventId>,
     /// Lazily-cancelled event ids: still on the heap, skipped on pop.
     cancelled: HashSet<EventId>,
 }
@@ -74,6 +78,7 @@ impl<T> Engine<T> {
             seq: 0,
             processed: 0,
             heap_hwm: 0,
+            live: HashSet::new(),
             cancelled: HashSet::new(),
         }
     }
@@ -108,19 +113,22 @@ impl<T> Engine<T> {
             payload,
         });
         self.heap_hwm = self.heap_hwm.max(self.heap.len());
+        self.live.insert(self.seq);
         self.seq
     }
 
     /// Cancel a pending event (e.g. a batch-linger timer made moot by a
     /// flush-on-full). Cancellation is lazy: the entry stays on the heap
     /// and is discarded on pop, which keeps cancel O(1) and the pop order
-    /// deterministic. Returns `false` for ids never issued or cancelled
-    /// twice; cancelling an already-delivered id is a silent no-op.
+    /// deterministic. Returns `false` — with no other effect — for ids
+    /// never issued, already delivered, or already cancelled; only a live
+    /// id is cancelled and returns `true`.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if id == 0 || id > self.seq {
+        if !self.live.remove(&id) {
             return false;
         }
-        self.cancelled.insert(id)
+        self.cancelled.insert(id);
+        true
     }
 
     /// Pop the next live event, advancing the clock to it. Cancelled
@@ -133,6 +141,7 @@ impl<T> Engine<T> {
             if self.cancelled.remove(&ev.seq) {
                 continue;
             }
+            self.live.remove(&ev.seq);
             self.now = ev.time;
             self.processed += 1;
             return Some((ev.time, ev.payload));
@@ -142,10 +151,10 @@ impl<T> Engine<T> {
     pub fn is_empty(&self) -> bool {
         self.pending() == 0
     }
-    /// Live (non-cancelled) events still pending. (Saturating: cancelling
-    /// an already-delivered id leaves a stale tombstone.)
+    /// Live (non-cancelled, non-delivered) events still pending. Exact:
+    /// tombstones on the heap are not counted.
     pub fn pending(&self) -> usize {
-        self.heap.len().saturating_sub(self.cancelled.len())
+        self.live.len()
     }
     /// Most events ever simultaneously pending — the queue-dynamics
     /// high-water mark reported through `obs` metrics.
@@ -296,6 +305,70 @@ mod tests {
         let t2 = e.schedule_in(1.0, "new");
         assert_ne!(t1, t2);
         assert_eq!(e.next_event().map(|(_, p)| p), Some("new"));
+    }
+
+    #[test]
+    fn cancel_after_fire_is_a_noop() {
+        let mut e = Engine::new();
+        let a = e.schedule_in(1.0, "a");
+        e.schedule_in(2.0, "b");
+        assert_eq!(e.next_event().map(|(_, p)| p), Some("a"));
+        // the id has been delivered: cancelling it must change nothing
+        assert!(!e.cancel(a), "cancel after fire reports false");
+        assert_eq!(e.pending(), 1, "no stale tombstone may eat a live event");
+        assert_eq!(e.next_event().map(|(_, p)| p), Some("b"));
+        assert_eq!(e.processed(), 2);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn double_cancel_is_a_noop() {
+        let mut e = Engine::new();
+        let a = e.schedule_in(1.0, 0u32);
+        e.schedule_in(2.0, 1u32);
+        assert!(e.cancel(a));
+        assert_eq!(e.pending(), 1);
+        // second cancel of the same id: false, and pending must not dip
+        assert!(!e.cancel(a));
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.next_event().map(|(_, p)| p), Some(1));
+        assert!(e.is_empty());
+        assert_eq!(e.processed(), 1);
+    }
+
+    #[test]
+    fn tombstone_skipping_preserves_order_and_high_water() {
+        let mut e = Engine::new();
+        let mut ids = Vec::new();
+        for i in 0..20u32 {
+            ids.push(e.schedule_at(f64::from(i), i));
+        }
+        assert_eq!(e.heap_high_water(), 20);
+        // cancel every third event; tombstones stay on the heap
+        let mut survivors = Vec::new();
+        for (i, id) in ids.iter().enumerate() {
+            if i % 3 == 0 {
+                assert!(e.cancel(*id));
+            } else {
+                survivors.push(i as u32);
+            }
+        }
+        assert_eq!(e.pending(), survivors.len());
+        // pops skip tombstones without disturbing time order or the clock
+        let mut last = -1.0;
+        let mut popped = Vec::new();
+        while let Some((t, p)) = e.next_event() {
+            assert!(t > last, "clock must stay monotone across tombstones");
+            assert_eq!(e.now(), t);
+            last = t;
+            popped.push(p);
+        }
+        assert_eq!(popped, survivors);
+        assert_eq!(e.processed(), survivors.len() as u64);
+        // the high-water mark reflects peak heap occupancy, tombstones
+        // included, and is unchanged by draining
+        assert_eq!(e.heap_high_water(), 20);
+        assert_eq!(e.pending(), 0);
     }
 
     #[test]

@@ -91,9 +91,9 @@ impl PredPushdownTask {
         let gen = Gen::new(ctx.seed, 100);
         let li = gen.lineitem(sf);
         let data = ScanData {
-            qty: li.col("l_quantity").as_f32().unwrap().to_vec(),
-            price: li.col("l_extendedprice").as_f32().unwrap().to_vec(),
-            disc: li.col("l_discount").as_f32().unwrap().to_vec(),
+            qty: li.f32s("l_quantity").to_vec(),
+            price: li.f32s("l_extendedprice").to_vec(),
+            disc: li.f32s("l_discount").to_vec(),
             sf,
             row_scale_denom: gen.row_scale_denom,
         };
@@ -259,7 +259,8 @@ pub fn scan_pjrt_parallel(
                 let rt = match Runtime::load(&dir) {
                     Ok(rt) => rt,
                     Err(e) => {
-                        *failed.lock().unwrap() = Some(format!("{e:#}"));
+                        *failed.lock().unwrap_or_else(|e| e.into_inner()) =
+                            Some(format!("{e:#}"));
                         barrier.wait(); // release the timer thread
                         barrier.wait();
                         return;
@@ -284,7 +285,10 @@ pub fn scan_pjrt_parallel(
                             }
                         }
                     }
-                    Err(e) => *failed.lock().unwrap() = Some(format!("{e:#}")),
+                    Err(e) => {
+                        *failed.lock().unwrap_or_else(|e| e.into_inner()) =
+                            Some(format!("{e:#}"))
+                    }
                 }
                 barrier.wait(); // end of timed region
             });
@@ -295,7 +299,7 @@ pub fn scan_pjrt_parallel(
         t0.elapsed().as_secs_f64()
     });
 
-    if let Some(e) = failed.lock().unwrap().take() {
+    if let Some(e) = failed.lock().unwrap_or_else(|e| e.into_inner()).take() {
         bail!("parallel scan worker failed: {e}");
     }
     Ok(ScanMeasurement {
@@ -397,6 +401,8 @@ impl Task for PredPushdownTask {
             match engine {
                 Engine::Pjrt => {
                     let rt: &Option<Runtime> = ctx.get("runtime");
+                    // dpbento-lint: allow(panic-in-lib) — Engine::Pjrt is only
+                    // selected after ensure_runtime() returned true
                     let rt = rt.as_ref().expect("runtime ensured above");
                     if return_mask {
                         scan_pjrt(rt, &data.qty, &data.price, &data.disc, lo, hi)?

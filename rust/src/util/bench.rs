@@ -76,9 +76,9 @@ impl BenchTable {
             .rows
             .iter()
             .map(|(l, _)| l.len())
-            .chain([8])
             .max()
-            .unwrap();
+            .unwrap_or(8)
+            .max(8);
         let col_w = 14usize;
         out.push_str(&format!("{:label_w$}", ""));
         for c in &self.columns {

@@ -218,7 +218,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+    fn eat(&mut self, b: u8) -> Result<(), ParseError> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -251,7 +251,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Value, ParseError> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -262,7 +262,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.skip_ws();
             let val = self.value()?;
             map.insert(key, val);
@@ -279,7 +279,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Value, ParseError> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -302,7 +302,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -329,7 +329,7 @@ impl<'a> Parser<'a> {
                             let ch = if (0xD800..0xDC00).contains(&cp) {
                                 if self.peek() == Some(b'\\') {
                                     self.pos += 1;
-                                    self.expect(b'u')?;
+                                    self.eat(b'u')?;
                                     let lo = self.hex4()?;
                                     let c = 0x10000
                                         + ((cp - 0xD800) << 10)
@@ -353,7 +353,9 @@ impl<'a> Parser<'a> {
                     let rest = &self.bytes[self.pos..];
                     let st = std::str::from_utf8(rest)
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = st.chars().next().unwrap();
+                    let Some(c) = st.chars().next() else {
+                        return Err(self.err("unterminated string"));
+                    };
                     if (c as u32) < 0x20 {
                         return Err(self.err("raw control character in string"));
                     }
@@ -398,7 +400,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid number"))?;
         text.parse::<f64>()
             .map(Value::Num)
             .map_err(|_| self.err("invalid number"))

@@ -25,7 +25,7 @@ impl Summary {
     pub fn from_samples(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary over empty sample set");
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        sorted.sort_by(f64::total_cmp);
         let count = sorted.len();
         let sum: f64 = sorted.iter().sum();
         let mean = sum / count as f64;
@@ -154,6 +154,29 @@ mod tests {
         let s = Summary::from_samples(&xs);
         assert!((w.mean() - s.mean).abs() < 1e-12);
         assert!((w.std() - s.std).abs() < 1e-12);
+    }
+
+    /// The `total_cmp` sort (dpbento-lint float-ord rule) must not change
+    /// quantile math on NaN-free samples: on such inputs total order and
+    /// partial order agree, so percentiles match the hand-computed
+    /// nearest-rank values exactly.
+    #[test]
+    fn total_cmp_sort_leaves_quantiles_unchanged_on_nan_free_samples() {
+        // unsorted, with duplicates, negatives, and a signed zero
+        let samples = [5.0, -1.5, 3.25, 3.25, 0.0, -0.0, 7.75, 2.0, 9.5, 4.0];
+        let s = Summary::from_samples(&samples);
+        // nearest-rank over the 10 ascending values:
+        // [-1.5, -0.0, 0.0, 2.0, 3.25, 3.25, 4.0, 5.0, 7.75, 9.5]
+        assert_eq!(s.min, -1.5);
+        assert_eq!(s.max, 9.5);
+        assert_eq!(s.p50, 3.25); // rank ceil(0.5*10)=5
+        assert_eq!(s.p95, 9.5); // rank ceil(0.95*10)=10
+        assert_eq!(s.p99, 9.5);
+        assert_eq!(s.p999, 9.5);
+        // ascending order really holds under total_cmp
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -339,6 +339,34 @@ fn serve_with_trace_records_sim_time_lifecycle() {
 }
 
 #[test]
+fn lint_command_clean_tree_fixtures_and_json() {
+    // default root (the crate's src/) must be clean: exit 0, no findings
+    let clean = dpbento(&["lint"]);
+    assert!(clean.status.success(), "lint found:\n{}", stdout(&clean));
+    assert!(stdout(&clean).contains("0 finding(s)"), "{}", stdout(&clean));
+
+    // the fixture tree must fail the gate, and --json must emit the
+    // machine-readable artifact CI uploads
+    let fixtures = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures");
+    let j = dpbento(&["lint", "--json", fixtures.to_str().unwrap()]);
+    assert!(!j.status.success(), "fixtures must fail lint");
+    let v = dpbento::util::json::parse(&stdout(&j)).expect("lint --json parses");
+    let findings = v.get("findings").unwrap().as_arr().unwrap();
+    assert!(!findings.is_empty());
+    assert!(findings[0].get("rule").is_some() && findings[0].get("line").is_some());
+
+    // --rule filters to one rule; unknown rules error out with the list
+    let r = dpbento(&["lint", "--rule", "float-ord", fixtures.to_str().unwrap()]);
+    assert!(!r.status.success());
+    let rs = stdout(&r);
+    assert!(rs.contains("[float-ord]"), "{rs}");
+    assert!(!rs.contains("[panic-in-lib]"), "{rs}");
+    let bad = dpbento(&["lint", "--rule", "nonesuch"]);
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown rule"));
+}
+
+#[test]
 fn serve_command_rejects_bad_arguments() {
     let o = dpbento(&["serve", "--policy", "warp"]);
     assert!(!o.status.success());

@@ -1,0 +1,82 @@
+//! Tier-1 gate for the invariant linter (DESIGN.md §10): the tree must
+//! lint clean, every registered rule must still fire on its fixture (so
+//! a rule that silently stops matching is caught), and every inline
+//! `dpbento-lint: allow(...)` must be load-bearing.
+
+use std::path::{Path, PathBuf};
+
+use dpbento::analysis::{lint_tree, REGISTRY};
+
+fn repo(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// The enforcement test: any finding anywhere under `rust/src` — from
+/// any rule, including unused-allow — fails tier-1.
+#[test]
+fn the_tree_lints_clean() {
+    let report = lint_tree(&repo("src"), None).unwrap();
+    assert!(report.files_scanned > 40, "suspiciously few sources scanned");
+    assert!(
+        report.clean(),
+        "`dpbento lint` must pass on the tree:\n{}",
+        report.render()
+    );
+}
+
+/// Fixture coverage: each rule in the registry produces at least one
+/// finding on its minimal fixture file.
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    let report = lint_tree(&repo("tests/lint_fixtures"), None).unwrap();
+    for rule in REGISTRY {
+        assert!(
+            report.findings.iter().any(|f| f.rule == rule.name()),
+            "rule '{}' produced no finding on the fixtures:\n{}",
+            rule.name(),
+            report.render()
+        );
+    }
+}
+
+/// `--rule` restricts to exactly one rule; unknown names are an error
+/// that lists the registry.
+#[test]
+fn rule_filter_restricts_findings() {
+    let fixtures = repo("tests/lint_fixtures");
+    let report = lint_tree(&fixtures, Some("float-ord")).unwrap();
+    assert!(!report.findings.is_empty());
+    assert!(report.findings.iter().all(|f| f.rule == "float-ord"));
+
+    let err = lint_tree(&fixtures, Some("nonesuch")).unwrap_err().to_string();
+    assert!(err.contains("unknown rule"), "{err}");
+    assert!(err.contains("float-ord"), "error should list known rules: {err}");
+}
+
+/// Suppressions must pay rent: every allow in the tree silences at
+/// least one real finding (the unused-allow pseudo-rule enforces this;
+/// here we assert the accounting explicitly).
+#[test]
+fn every_allow_in_the_tree_is_load_bearing() {
+    let report = lint_tree(&repo("src"), None).unwrap();
+    assert!(report.allows_total > 0, "the tree documents its exemptions");
+    assert_eq!(
+        report.allows_used, report.allows_total,
+        "unused allow comments:\n{}",
+        report.render()
+    );
+    assert!(report.suppressed >= report.allows_total, "each allow suppressed something");
+}
+
+/// Findings (and therefore the JSON artifact) are sorted by
+/// (file, line, rule) — byte-stable across filesystems.
+#[test]
+fn findings_are_deterministically_ordered() {
+    let a = lint_tree(&repo("tests/lint_fixtures"), None).unwrap();
+    let b = lint_tree(&repo("tests/lint_fixtures"), None).unwrap();
+    assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+    let keys: Vec<_> = a.findings.iter().map(|f| (f.file.clone(), f.line, f.rule.clone())).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+}

@@ -1,0 +1,7 @@
+//! Fixture: `raw-diagnostics` must fire on the direct stdout/stderr
+//! writes below — diagnostics flow through the `obs::log` facade.
+
+pub fn report(n: usize) {
+    println!("finished {n} tasks");
+    eprintln!("warning: {n} stragglers");
+}

@@ -1,0 +1,12 @@
+//! Fixture: `panic-in-lib` must fire on each escape hatch below —
+//! library code returns Result instead of aborting the box run.
+
+pub fn first(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}
+
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("flag must be set");
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: `naked-rng` must fire on the ambient, unseeded randomness
+//! below — stochastic code takes a seeded `util::rng::Pcg`.
+
+pub fn jitter() -> f64 {
+    rand::random::<f64>()
+}

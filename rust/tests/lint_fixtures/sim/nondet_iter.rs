@@ -1,0 +1,16 @@
+//! Fixture: `nondeterministic-iteration` must fire on the hash-map walk
+//! below — the iteration order leaks straight into the returned Vec
+//! with no ordering sink in sight.
+
+use std::collections::HashMap;
+
+pub fn key_list(m: &HashMap<String, u64>) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut seen = 0u64;
+    for k in m.keys() {
+        out.push(k.clone());
+        seen += 1;
+    }
+    let _ = seen;
+    out
+}

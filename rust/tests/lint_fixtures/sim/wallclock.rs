@@ -1,0 +1,6 @@
+//! Fixture: `wallclock-in-sim` must fire on the ambient clock read
+//! below — sim-deterministic code owns a virtual clock instead.
+
+pub fn stamp() -> std::time::Duration {
+    std::time::Instant::now().elapsed()
+}

@@ -1,0 +1,6 @@
+//! Fixture: `float-ord` must fire on the `partial_cmp(..).unwrap()`
+//! comparator below — `f64::total_cmp` is total and panic-free.
+
+pub fn sort_desc(xs: &mut [f64]) {
+    xs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+}

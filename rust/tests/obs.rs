@@ -1,9 +1,9 @@
 //! Observability integration tests (DESIGN.md §9): trace-export
 //! determinism across whole box runs, the metrics snapshot embedded in
-//! report JSON, and the grep-enforced rule that every diagnostic flows
+//! report JSON, and the linter-enforced rule that every diagnostic flows
 //! through the `obs::log` facade.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
@@ -112,58 +112,19 @@ fn report_embeds_executor_metrics() {
     assert_eq!(counters.get("exec.tasks_run").unwrap().as_f64(), Some(2.0));
 }
 
-/// The grep-enforced facade rule: `eprintln!` appears only inside the
-/// facade's own sink, and `println!` only on the two intentional stdout
-/// surfaces (CLI reports and the bench harness table printer).
+/// The facade rule, enforced by the linter's `raw-diagnostics` rule
+/// (DESIGN.md §10): `eprintln!` appears only inside the facade's own
+/// sink, and `println!` only on the two intentional stdout surfaces (CLI
+/// reports and the bench harness table printer). The rule carries the
+/// allowlists; this test just runs it over the tree.
 #[test]
 fn no_raw_diagnostics_outside_the_log_facade() {
-    const EPRINTLN_ALLOWED: &[&str] = &["src/obs/log.rs"];
-    const PRINTLN_ALLOWED: &[&str] = &["src/main.rs", "src/util/bench.rs"];
-
     let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
-    let mut files = Vec::new();
-    collect_rs_files(&src, &mut files);
-    assert!(files.len() > 20, "suspiciously few sources: {files:?}");
-
-    let mut violations = Vec::new();
-    for path in &files {
-        let full = path.to_string_lossy().replace('\\', "/");
-        let rel_key = match full.rfind("/src/") {
-            Some(i) => full[i + 1..].to_string(),
-            None => full.clone(),
-        };
-        let text = std::fs::read_to_string(path).unwrap();
-        for (lineno, line) in text.lines().enumerate() {
-            if line.trim_start().starts_with("//") {
-                continue; // prose may *mention* the macros
-            }
-            let has_eprintln = line.contains("eprintln!");
-            // `println!` not preceded by `e` (which would be eprintln!)
-            let has_println = line.match_indices("println!").any(|(i, _)| {
-                i == 0 || !line[..i].ends_with('e')
-            });
-            if has_eprintln && !EPRINTLN_ALLOWED.contains(&rel_key.as_str()) {
-                violations.push(format!("{rel_key}:{}: eprintln!", lineno + 1));
-            }
-            if has_println && !PRINTLN_ALLOWED.contains(&rel_key.as_str()) {
-                violations.push(format!("{rel_key}:{}: println!", lineno + 1));
-            }
-        }
-    }
+    let report = dpbento::analysis::lint_tree(&src, Some("raw-diagnostics")).unwrap();
+    assert!(report.files_scanned > 20, "suspiciously few sources scanned");
     assert!(
-        violations.is_empty(),
+        report.clean(),
         "raw diagnostics outside the obs::log facade:\n{}",
-        violations.join("\n")
+        report.render()
     );
-}
-
-fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
-    for entry in std::fs::read_dir(dir).unwrap() {
-        let path = entry.unwrap().path();
-        if path.is_dir() {
-            collect_rs_files(&path, out);
-        } else if path.extension().is_some_and(|e| e == "rs") {
-            out.push(path);
-        }
-    }
 }
