@@ -7,10 +7,11 @@
 //! does each deployment stop meeting its SLO, and how much host CPU does
 //! offloading free before that happens?
 
+use dpbento::fault::FaultSpec;
 use dpbento::obs::Obs;
 use dpbento::platform::PlatformId;
 use dpbento::serve::{
-    capacity_rps, host_only_capacity_rps, scheduler, sweep, Mix, ServeConfig,
+    capacity_rps, host_only_capacity_rps, scheduler, sweep, sweep_faulted, Mix, ServeConfig,
 };
 use dpbento::util::bench::BenchTable;
 
@@ -92,6 +93,56 @@ fn main() {
         p99.finish(&format!("fig16b_serving_p99_{dpu}"));
         freed.finish(&format!("fig16c_serving_hostcpu_{dpu}"));
         goodput.finish(&format!("fig16d_serving_goodput_{dpu}"));
+
+        // chaos panel (DESIGN.md §11): the same deployment with every DPU
+        // core fail-stopped 10ms in — resilience-first routing vs a blind
+        // split, by goodput and availability
+        let chaos_scheds = ["static-split", "failover"];
+        let mut chaos_good = BenchTable::new(
+            format!("Fig. 16e — goodput under DPU fail-stop, host+{dpu} (canned chaos)"),
+            "req/s",
+        )
+        .columns(&chaos_scheds);
+        let mut chaos_avail = BenchTable::new(
+            format!("Fig. 16f — availability under DPU fail-stop, host+{dpu}"),
+            "frac",
+        )
+        .columns(&chaos_scheds);
+        let faults = FaultSpec::canned_dpu_failstop();
+        let chaos: Vec<Vec<dpbento::serve::LoadPoint>> = chaos_scheds
+            .iter()
+            .map(|&s| {
+                let mut cfg = ServeConfig::new(Some(dpu), s, mix.clone(), SEED);
+                cfg.total_requests = REQUESTS;
+                cfg.retry.timeout_us = 50_000.0;
+                cfg.retry.budget = 3;
+                let host_cap = host_only_capacity_rps(&cfg);
+                let rates: Vec<f64> = LOADS.iter().map(|l| l * host_cap).collect();
+                sweep_faulted(&cfg, &rates, &faults, &Obs::disabled())
+            })
+            .collect();
+        for (li, load) in LOADS.iter().enumerate() {
+            let label = format!("{:.0}% host cap", load * 100.0);
+            chaos_good.row_f(
+                label.clone(),
+                &chaos.iter().map(|c| c[li].goodput_rps).collect::<Vec<_>>(),
+            );
+            chaos_avail.row_f(
+                label,
+                &chaos.iter().map(|c| c[li].availability).collect::<Vec<_>>(),
+            );
+        }
+        chaos_good.finish(&format!("fig16e_serving_chaos_goodput_{dpu}"));
+        chaos_avail.finish(&format!("fig16f_serving_chaos_avail_{dpu}"));
+        let mid = 1; // 50% host cap: the host survivor can absorb the load
+        assert!(
+            chaos[1][mid].goodput_rps > chaos[0][mid].goodput_rps,
+            "failover must out-serve static-split with the DPU dead"
+        );
+        assert!(
+            chaos[1][mid].availability > chaos[0][mid].availability,
+            "failover must keep more requests alive with the DPU dead"
+        );
 
         // shape checks mirroring the serving integration tests
         let host_only = &curves[0];

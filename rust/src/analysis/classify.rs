@@ -17,9 +17,9 @@ use super::tokenizer::{lex, Comment, Tok};
 /// Which contract regime a file lives under.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PathClass {
-    /// `sim/`, `serve/`, `coordinator/`: byte-identical outputs under a
-    /// fixed seed — no wall clock, no ambient randomness, total float
-    /// ordering.
+    /// `sim/`, `serve/`, `coordinator/`, `fault/`: byte-identical
+    /// outputs under a fixed seed — no wall clock, no ambient
+    /// randomness, total float ordering.
     SimDeterministic,
     /// `tasks/`, `net/`, `plugins/`, `util/bench.rs`: the measurement
     /// side — reading `Instant::now` is the whole point.
@@ -60,7 +60,7 @@ pub fn classify(rel: &str) -> PathClass {
         return PathClass::Measurement;
     }
     match first {
-        "sim" | "serve" | "coordinator" => PathClass::SimDeterministic,
+        "sim" | "serve" | "coordinator" | "fault" => PathClass::SimDeterministic,
         "tasks" | "net" | "plugins" => PathClass::Measurement,
         _ => PathClass::Lib,
     }
@@ -272,6 +272,7 @@ mod tests {
         assert_eq!(classify("sim/engine.rs"), PathClass::SimDeterministic);
         assert_eq!(classify("serve/sim.rs"), PathClass::SimDeterministic);
         assert_eq!(classify("coordinator/task.rs"), PathClass::SimDeterministic);
+        assert_eq!(classify("fault/spec.rs"), PathClass::SimDeterministic);
         assert_eq!(classify("tasks/compute.rs"), PathClass::Measurement);
         assert_eq!(classify("net/loopback.rs"), PathClass::Measurement);
         assert_eq!(classify("plugins/rdma.rs"), PathClass::Measurement);

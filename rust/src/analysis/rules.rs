@@ -35,6 +35,7 @@ pub static REGISTRY: &[&dyn Rule] = &[
     &PanicInLib,
     &RawDiagnostics,
     &NakedRng,
+    &UnboundedRetry,
 ];
 
 pub fn by_name(name: &str) -> Option<&'static dyn Rule> {
@@ -71,6 +72,24 @@ fn close_paren(toks: &[Tok], open: usize) -> usize {
         if toks[j].is_punct('(') {
             depth += 1;
         } else if toks[j].is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Index just past the `}` matching the `{` at `open` (or end of input).
+fn close_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < toks.len() {
+        if toks[j].is_punct('{') {
+            depth += 1;
+        } else if toks[j].is_punct('}') {
             depth -= 1;
             if depth == 0 {
                 return j + 1;
@@ -484,6 +503,85 @@ impl Rule for NakedRng {
     }
 }
 
+// ---- unbounded-retry -------------------------------------------------
+
+/// An infinite loop (`loop { … }` / `while true { … }`) whose body talks
+/// about retrying/resending with no visible budget. The resilience layer
+/// (DESIGN.md §11) requires every retry to be bounded — a retry loop
+/// without an attempt counter or budget check can spin a simulated (or
+/// real) service forever once the fault it is retrying against is
+/// permanent. Heuristic, token-level: the loop body must mention a
+/// retry-ish identifier and none of the budget-ish ones.
+pub struct UnboundedRetry;
+
+/// Identifier substrings that mark a loop as a retry loop.
+const RETRYISH: &[&str] = &["retry", "retries", "resend", "reconnect", "backoff"];
+
+/// Identifier substrings that show the loop is budgeted.
+const BUDGETISH: &[&str] = &[
+    "budget",
+    "attempt",
+    "max_retr",
+    "remaining",
+    "deadline",
+    "give_up",
+];
+
+impl Rule for UnboundedRetry {
+    fn name(&self) -> &'static str {
+        "unbounded-retry"
+    }
+    fn summary(&self) -> &'static str {
+        "infinite retry loop with no visible attempt budget"
+    }
+    fn check(&self, file: &SourceFile) -> Vec<Finding> {
+        if !matches!(file.class, PathClass::SimDeterministic | PathClass::Lib) {
+            return Vec::new();
+        }
+        let toks = &file.tokens;
+        let mut out = Vec::new();
+        for i in 0..toks.len() {
+            let line = toks[i].line;
+            if file.is_test_line(line) {
+                continue;
+            }
+            // `loop {` or `while true {`
+            let open = if toks[i].is_ident("loop") && toks.get(i + 1).is_some_and(|t| t.is_punct('{'))
+            {
+                Some(i + 1)
+            } else if toks[i].is_ident("while")
+                && toks.get(i + 1).is_some_and(|t| t.is_ident("true"))
+                && toks.get(i + 2).is_some_and(|t| t.is_punct('{'))
+            {
+                Some(i + 2)
+            } else {
+                None
+            };
+            let Some(open) = open else { continue };
+            let end = close_brace(toks, open);
+            let body = &toks[open..end];
+            let mentions = |needles: &[&str]| {
+                body.iter().any(|t| {
+                    t.kind == TokKind::Ident
+                        && needles
+                            .iter()
+                            .any(|n| t.text.to_ascii_lowercase().contains(n))
+                })
+            };
+            if mentions(RETRYISH) && !mentions(BUDGETISH) {
+                out.push(Finding {
+                    rule: self.name(),
+                    line,
+                    message: "infinite loop retries with no visible budget; bound it \
+                              with an attempt counter (see fault::RetryPolicy)"
+                        .to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -576,5 +674,32 @@ mod tests {
         let src = "fn f() { let r = rand::thread_rng(); }\n";
         assert_eq!(findings(&NakedRng, "sim/engine.rs", src).len(), 2);
         assert!(findings(&NakedRng, "util/rng.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unbounded_retry_fires_on_budgetless_retry_loops() {
+        let naked = "fn send(link: &mut Link) {\n loop {\n  if link.send().is_ok() { return; }\n  link.retry_wait();\n }\n}\n";
+        let f = findings(&UnboundedRetry, "serve/sim.rs", naked);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+        // `while true` spelled out is the same loop
+        let spelled = "fn send(link: &mut Link) {\n while true {\n  link.resend();\n }\n}\n";
+        assert_eq!(findings(&UnboundedRetry, "fault/spec.rs", spelled).len(), 1);
+    }
+
+    #[test]
+    fn unbounded_retry_accepts_budgeted_loops_and_non_retry_loops() {
+        // an attempt counter in the body is a visible budget
+        let budgeted = "fn send(link: &mut Link) {\n let mut attempt = 0;\n loop {\n  if link.send().is_ok() || attempt >= 3 { return; }\n  attempt += 1;\n  link.retry_wait();\n }\n}\n";
+        assert!(findings(&UnboundedRetry, "serve/sim.rs", budgeted).is_empty());
+        // infinite loops that aren't retry loops are out of scope
+        let engine = "fn drain(q: &mut Heap) {\n loop {\n  let Some(ev) = q.pop() else { break };\n  handle(ev);\n }\n}\n";
+        assert!(findings(&UnboundedRetry, "sim/engine.rs", engine).is_empty());
+        // measurement-side code may spin however it likes
+        let naked = "fn f(l: &mut L) { loop { l.retry_wait(); } }\n";
+        assert!(findings(&UnboundedRetry, "net/loopback.rs", naked).is_empty());
+        // test regions are exempt
+        let test_mod = "#[cfg(test)]\nmod tests {\n fn t(l: &mut L) { loop { l.retry_wait(); } }\n}\n";
+        assert!(findings(&UnboundedRetry, "serve/sim.rs", test_mod).is_empty());
     }
 }

@@ -1,0 +1,201 @@
+//! Retry budgets and exponential backoff with deterministic jitter.
+//!
+//! The serving layer arms one timeout per in-flight attempt; when it
+//! fires (or a fault loses the attempt), the retry policy decides
+//! whether the request gets another attempt and how long it waits.
+//! Everything here is pure math over a caller-supplied seeded
+//! [`Pcg`] stream — no wall clock, no ambient entropy — so a faulted
+//! run replays byte-identically under a fixed seed (DESIGN.md §11).
+
+use crate::util::rng::Pcg;
+
+use super::spec::FaultError;
+
+/// Per-request timeout + bounded-retry policy. `timeout_us == 0`
+/// disables the whole machinery (the default): no timeout events are
+/// scheduled, no retry RNG is drawn, and the serve event sequence is
+/// bit-identical to a build without this module.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempt deadline in microseconds; 0 = timeouts/retries off.
+    pub timeout_us: f64,
+    /// Max retries after the first attempt (attempts = budget + 1).
+    pub budget: u32,
+    /// First backoff delay, doubled per attempt.
+    pub backoff_base_us: f64,
+    /// Ceiling the doubling saturates at.
+    pub backoff_cap_us: f64,
+    /// Symmetric jitter fraction: delay scales by `1 ± jitter_frac·u`,
+    /// `u` uniform in [-1, 1) from the retry RNG stream.
+    pub jitter_frac: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            timeout_us: 0.0,
+            budget: 3,
+            backoff_base_us: 50.0,
+            backoff_cap_us: 2_000.0,
+            jitter_frac: 0.25,
+        }
+    }
+}
+
+/// Largest retry budget the config layer accepts; far above anything a
+/// sweep needs, low enough that a typo cannot melt a run.
+pub const MAX_RETRY_BUDGET: u32 = 64;
+
+impl RetryPolicy {
+    /// Timeouts (and therefore retries) are active.
+    pub fn enabled(&self) -> bool {
+        self.timeout_us > 0.0
+    }
+
+    /// Reject non-finite/negative knobs before they reach `sim::Engine`
+    /// debug-asserts (ISSUE 9 satellite: typed errors at parse time).
+    pub fn validate(&self) -> Result<(), FaultError> {
+        let bad = |what: &str, detail: String| {
+            Err(FaultError::BadValue {
+                what: what.to_string(),
+                detail,
+            })
+        };
+        if !self.timeout_us.is_finite() || self.timeout_us < 0.0 {
+            return bad("timeout_us", format!("must be finite and >= 0, got {}", self.timeout_us));
+        }
+        if !self.enabled() {
+            return Ok(()); // the other knobs are dormant
+        }
+        if self.budget > MAX_RETRY_BUDGET {
+            return bad("retry budget", format!("must be <= {MAX_RETRY_BUDGET}, got {}", self.budget));
+        }
+        if !self.backoff_base_us.is_finite() || self.backoff_base_us <= 0.0 {
+            return bad("backoff_base_us", format!("must be finite and > 0, got {}", self.backoff_base_us));
+        }
+        if !self.backoff_cap_us.is_finite() || self.backoff_cap_us < self.backoff_base_us {
+            return bad(
+                "backoff_cap_us",
+                format!(
+                    "must be finite and >= backoff_base_us ({}), got {}",
+                    self.backoff_base_us, self.backoff_cap_us
+                ),
+            );
+        }
+        if !self.jitter_frac.is_finite() || !(0.0..1.0).contains(&self.jitter_frac) {
+            return bad("jitter_frac", format!("must be in [0, 1), got {}", self.jitter_frac));
+        }
+        Ok(())
+    }
+
+    /// Backoff delay before retry number `attempt` (1-based retry
+    /// count), jittered from the caller's seeded retry stream. Always
+    /// > 0 when the policy validates, so the retry event lands strictly
+    /// after `now`.
+    pub fn delay_us(&self, attempt: u32, rng: &mut Pcg) -> f64 {
+        let base = backoff_us(self.backoff_base_us, self.backoff_cap_us, attempt);
+        let u = 2.0 * rng.f64() - 1.0; // uniform [-1, 1)
+        base * (1.0 + self.jitter_frac * u)
+    }
+}
+
+/// Pure exponential-backoff schedule: `base · 2^(attempt-1)`, saturated
+/// at `cap`. `attempt` is 1-based (first retry waits `base`); exponents
+/// clamp at 60 so the doubling never overflows to infinity before the
+/// cap applies.
+pub fn backoff_us(base_us: f64, cap_us: f64, attempt: u32) -> f64 {
+    let exp = attempt.saturating_sub(1).min(60) as i32;
+    (base_us * 2f64.powi(exp)).min(cap_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn backoff_doubles_then_saturates() {
+        assert_eq!(backoff_us(50.0, 2000.0, 1), 50.0);
+        assert_eq!(backoff_us(50.0, 2000.0, 2), 100.0);
+        assert_eq!(backoff_us(50.0, 2000.0, 3), 200.0);
+        assert_eq!(backoff_us(50.0, 2000.0, 7), 2000.0); // 3200 capped
+        assert_eq!(backoff_us(50.0, 2000.0, 64), 2000.0);
+    }
+
+    #[test]
+    fn backoff_schedule_is_monotone_and_capped() {
+        prop::check(300, |g| {
+            let base = g.f64_in(0.5, 500.0);
+            let cap = base * g.f64_in(1.0, 100.0);
+            let mut prev = 0.0;
+            for attempt in 1..=80u32 {
+                let d = backoff_us(base, cap, attempt);
+                prop::expect(d.is_finite(), format!("non-finite delay at attempt {attempt}"))?;
+                prop::expect(d >= prev, format!("schedule not monotone at attempt {attempt}"))?;
+                prop::expect(d <= cap, format!("delay {d} exceeds cap {cap}"))?;
+                prev = d;
+            }
+            prop::expect((backoff_us(base, cap, 1) - base).abs() < 1e-12, "first retry waits base")
+        });
+    }
+
+    #[test]
+    fn jittered_delay_stays_within_the_jitter_band() {
+        prop::check(300, |g| {
+            let policy = RetryPolicy {
+                timeout_us: 1000.0,
+                budget: 8,
+                backoff_base_us: g.f64_in(1.0, 100.0),
+                backoff_cap_us: 10_000.0,
+                jitter_frac: g.f64_in(0.0, 0.9),
+            };
+            let attempt = 1 + g.u64(10) as u32;
+            let mut rng = Pcg::new(g.u64(1 << 40));
+            let nominal = backoff_us(policy.backoff_base_us, policy.backoff_cap_us, attempt);
+            let d = policy.delay_us(attempt, &mut rng);
+            let lo = nominal * (1.0 - policy.jitter_frac) - 1e-9;
+            let hi = nominal * (1.0 + policy.jitter_frac) + 1e-9;
+            prop::expect(
+                d >= lo && d <= hi,
+                format!("jittered delay {d} outside [{lo}, {hi}]"),
+            )
+        });
+    }
+
+    #[test]
+    fn delays_are_byte_deterministic_under_a_fixed_seed() {
+        let policy = RetryPolicy {
+            timeout_us: 500.0,
+            ..RetryPolicy::default()
+        };
+        let run = |seed: u64| -> Vec<u64> {
+            let mut rng = Pcg::with_stream(seed, 0x5e7_a005);
+            (1..=16).map(|a| policy.delay_us(a, &mut rng).to_bits()).collect()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43), "different seeds must jitter differently");
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let ok = RetryPolicy { timeout_us: 1000.0, ..RetryPolicy::default() };
+        assert!(ok.validate().is_ok());
+        assert!(RetryPolicy::default().validate().is_ok(), "disabled policy is valid");
+
+        for bad in [
+            RetryPolicy { timeout_us: f64::NAN, ..ok },
+            RetryPolicy { timeout_us: -1.0, ..ok },
+            RetryPolicy { budget: MAX_RETRY_BUDGET + 1, ..ok },
+            RetryPolicy { backoff_base_us: 0.0, ..ok },
+            RetryPolicy { backoff_base_us: f64::INFINITY, ..ok },
+            RetryPolicy { backoff_cap_us: 1.0, ..ok }, // below base
+            RetryPolicy { jitter_frac: 1.0, ..ok },
+            RetryPolicy { jitter_frac: -0.1, ..ok },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+        // dormant knobs are not checked while timeouts are off
+        let dormant = RetryPolicy { timeout_us: 0.0, backoff_base_us: -5.0, ..RetryPolicy::default() };
+        assert!(dormant.validate().is_ok());
+    }
+}

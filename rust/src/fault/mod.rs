@@ -1,0 +1,18 @@
+//! Fault injection & resilience (DESIGN.md §11).
+//!
+//! First-party deterministic chaos for the serving layer: a scenario
+//! language ([`FaultSpec`], `dpbento serve --faults SPEC`) whose
+//! injectors — fail-stop/transient core kills, service-rate brownouts,
+//! net-rpc link degradation — are scheduled as ordinary `sim::Engine`
+//! events, plus the timeout/retry policy ([`RetryPolicy`]) the serving
+//! simulator applies to every in-flight attempt. Both halves follow
+//! the repo's determinism contract: sim time only, all randomness from
+//! dedicated seeded `util::rng` streams, so a chaos run is
+//! byte-identical under a fixed seed and `--faults`-free runs are
+//! bit-identical to builds without this module.
+
+pub mod backoff;
+pub mod spec;
+
+pub use backoff::{backoff_us, RetryPolicy, MAX_RETRY_BUDGET};
+pub use spec::{FaultError, FaultEvent, FaultSpec, Injector, InjectorInfo, Side, REGISTRY};

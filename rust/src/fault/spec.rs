@@ -1,0 +1,469 @@
+//! The `FaultSpec` scenario language (DESIGN.md §11).
+//!
+//! A scenario is a `;`-separated list of injections, each
+//! `KIND@SECONDS[:k=v,...]`, parsed into typed [`Injector`]s at config
+//! time and scheduled on `sim::Engine` at serve startup — sim time
+//! only, no wall clock. The injector catalog lives in [`REGISTRY`] so
+//! `dpbento serve` help text and DESIGN.md list the same grammar the
+//! parser accepts. All values are validated here with typed
+//! [`FaultError`]s instead of tripping `debug_assert`s downstream.
+
+use std::fmt;
+
+/// Which worker pool an injector targets. The fault layer keeps its own
+/// side enum so scenarios parse without depending on `serve`; the
+/// serving simulator maps it onto its pool selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Host,
+    Dpu,
+}
+
+impl Side {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Side::Host => "host",
+            Side::Dpu => "dpu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Side> {
+        match s {
+            "host" => Some(Side::Host),
+            "dpu" => Some(Side::Dpu),
+            _ => None,
+        }
+    }
+}
+
+/// One fault to inject. Windowed injectors (`restore_s` / `for_s`)
+/// schedule a matching restore event; a `CoreFail` without `restore_s`
+/// is a permanent fail-stop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Injector {
+    /// Kill `cores` cores (`None` = the whole pool) at the target side.
+    /// In-flight and queued batches on a killed core are evicted and
+    /// fed back through the retry policy.
+    CoreFail {
+        pool: Side,
+        cores: Option<u32>,
+        restore_s: Option<f64>,
+    },
+    /// Service-rate brownout: batches *started* on the side while the
+    /// window is open run `factor`× slower.
+    Brownout { pool: Side, factor: f64, for_s: f64 },
+    /// Net-rpc link degradation: NetRpc attempts placed while the
+    /// window is open lose their response with probability `loss` and
+    /// pay `extra_us` of added latency.
+    LinkDegrade { loss: f64, extra_us: f64, for_s: f64 },
+}
+
+impl Injector {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Injector::CoreFail { .. } => "fail",
+            Injector::Brownout { .. } => "brownout",
+            Injector::LinkDegrade { .. } => "link",
+        }
+    }
+
+    /// Length of the active window, if the injector restores itself.
+    pub fn window_s(&self) -> Option<f64> {
+        match self {
+            Injector::CoreFail { restore_s, .. } => *restore_s,
+            Injector::Brownout { for_s, .. } | Injector::LinkDegrade { for_s, .. } => Some(*for_s),
+        }
+    }
+}
+
+/// One scheduled injection: `injector` fires at sim time `at_s`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub injector: Injector,
+}
+
+/// A parsed, validated chaos scenario. The default (empty) spec injects
+/// nothing and leaves the serve event sequence untouched.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    pub events: Vec<FaultEvent>,
+}
+
+/// Typed scenario/config rejection. Satellite of ISSUE 9: bad specs die
+/// here with a message naming the field, not in an engine debug-assert.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultError {
+    Empty,
+    Malformed { item: String, detail: String },
+    UnknownKind(String),
+    UnknownParam { kind: &'static str, param: String },
+    MissingParam { kind: &'static str, param: &'static str },
+    BadValue { what: String, detail: String },
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::Empty => write!(f, "empty fault spec; expected KIND@SECONDS[:k=v,...]"),
+            FaultError::Malformed { item, detail } => {
+                write!(f, "malformed fault item '{item}': {detail}")
+            }
+            FaultError::UnknownKind(k) => {
+                let known: Vec<&str> = REGISTRY.iter().map(|i| i.kind).collect();
+                write!(f, "unknown fault kind '{k}' (known: {})", known.join(", "))
+            }
+            FaultError::UnknownParam { kind, param } => {
+                write!(f, "unknown parameter '{param}' for fault kind '{kind}'")
+            }
+            FaultError::MissingParam { kind, param } => {
+                write!(f, "fault kind '{kind}' requires parameter '{param}'")
+            }
+            FaultError::BadValue { what, detail } => write!(f, "bad value for {what}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// One injector kind as the help text / DESIGN.md present it.
+pub struct InjectorInfo {
+    pub kind: &'static str,
+    /// Parameter grammar, `[..]` marking optional parts.
+    pub params: &'static str,
+    pub description: &'static str,
+}
+
+/// The injector catalog, in help order. `FaultSpec::parse` accepts
+/// exactly these kinds; the CLI generates its `--faults` section from
+/// this slice so grammar and help cannot drift apart.
+pub static REGISTRY: &[InjectorInfo] = &[
+    InjectorInfo {
+        kind: "fail",
+        params: "pool=host|dpu[,cores=N|all][,for=SECS]",
+        description: "fail-stop core kill; evicts work, transient when for= is given",
+    },
+    InjectorInfo {
+        kind: "brownout",
+        params: "pool=host|dpu,factor=F,for=SECS",
+        description: "service-rate brownout: batches started in the window run F x slower",
+    },
+    InjectorInfo {
+        kind: "link",
+        params: "loss=P,for=SECS[,extra_us=U]",
+        description: "net-rpc link degradation: response loss probability P + U us added latency",
+    },
+];
+
+fn parse_f64(what: &str, raw: &str) -> Result<f64, FaultError> {
+    raw.parse::<f64>().map_err(|_| FaultError::BadValue {
+        what: what.to_string(),
+        detail: format!("'{raw}' is not a number"),
+    })
+}
+
+fn parse_params(item: &str, params: &str) -> Result<Vec<(String, String)>, FaultError> {
+    let mut out = Vec::new();
+    for pair in params.split(',').filter(|p| !p.trim().is_empty()) {
+        let Some((k, v)) = pair.split_once('=') else {
+            return Err(FaultError::Malformed {
+                item: item.to_string(),
+                detail: format!("parameter '{pair}' is not k=v"),
+            });
+        };
+        out.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+impl FaultSpec {
+    /// Parse `KIND@SECONDS[:k=v,...][;ITEM...]`. Whitespace around
+    /// items and parameters is ignored; the result is validated.
+    pub fn parse(spec: &str) -> Result<FaultSpec, FaultError> {
+        let mut events = Vec::new();
+        for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            events.push(parse_item(item)?);
+        }
+        if events.is_empty() {
+            return Err(FaultError::Empty);
+        }
+        let out = FaultSpec { events };
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// No injections scheduled — the deterministic-baseline fast path.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Re-check a (possibly hand-constructed) scenario. `parse` always
+    /// returns validated specs; this is the programmatic entry point
+    /// `ServeConfig::validate` calls.
+    pub fn validate(&self) -> Result<(), FaultError> {
+        let bad = |what: &str, detail: String| {
+            Err(FaultError::BadValue {
+                what: what.to_string(),
+                detail,
+            })
+        };
+        for ev in &self.events {
+            if !ev.at_s.is_finite() || ev.at_s < 0.0 {
+                return bad("fault time", format!("must be finite and >= 0, got {}", ev.at_s));
+            }
+            match &ev.injector {
+                Injector::CoreFail { cores, restore_s, .. } => {
+                    if *cores == Some(0) {
+                        return bad("fail cores", "must be >= 1 (or 'all')".to_string());
+                    }
+                    if let Some(r) = restore_s {
+                        if !r.is_finite() || *r <= 0.0 {
+                            return bad("fail for", format!("must be finite and > 0, got {r}"));
+                        }
+                    }
+                }
+                Injector::Brownout { factor, for_s, .. } => {
+                    if !factor.is_finite() || *factor < 1.0 {
+                        return bad("brownout factor", format!("must be finite and >= 1, got {factor}"));
+                    }
+                    if !for_s.is_finite() || *for_s <= 0.0 {
+                        return bad("brownout for", format!("must be finite and > 0, got {for_s}"));
+                    }
+                }
+                Injector::LinkDegrade { loss, extra_us, for_s } => {
+                    if !loss.is_finite() || !(0.0..=1.0).contains(loss) {
+                        return bad("link loss", format!("must be in [0, 1], got {loss}"));
+                    }
+                    if !extra_us.is_finite() || *extra_us < 0.0 {
+                        return bad("link extra_us", format!("must be finite and >= 0, got {extra_us}"));
+                    }
+                    if !for_s.is_finite() || *for_s <= 0.0 {
+                        return bad("link for", format!("must be finite and > 0, got {for_s}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The canned DPU fail-stop scenario the headline invariant test and
+    /// the CI chaos-smoke step share: the whole DPU pool dies 10 ms in
+    /// and never comes back. Equivalent to `fail@0.01:pool=dpu,cores=all`.
+    pub fn canned_dpu_failstop() -> FaultSpec {
+        FaultSpec {
+            events: vec![FaultEvent {
+                at_s: 0.01,
+                injector: Injector::CoreFail {
+                    pool: Side::Dpu,
+                    cores: None,
+                    restore_s: None,
+                },
+            }],
+        }
+    }
+}
+
+fn parse_item(item: &str) -> Result<FaultEvent, FaultError> {
+    let Some((kind, rest)) = item.split_once('@') else {
+        return Err(FaultError::Malformed {
+            item: item.to_string(),
+            detail: "missing '@SECONDS'".to_string(),
+        });
+    };
+    let kind = kind.trim();
+    let (at_raw, params_raw) = match rest.split_once(':') {
+        Some((a, p)) => (a.trim(), p),
+        None => (rest.trim(), ""),
+    };
+    let at_s = parse_f64("fault time", at_raw)?;
+    let params = parse_params(item, params_raw)?;
+
+    let injector = match kind {
+        "fail" => build_fail(&params)?,
+        "brownout" => build_brownout(&params)?,
+        "link" => build_link(&params)?,
+        other => return Err(FaultError::UnknownKind(other.to_string())),
+    };
+    Ok(FaultEvent { at_s, injector })
+}
+
+fn take<'a>(params: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    params.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn reject_unknown(kind: &'static str, params: &[(String, String)], known: &[&str]) -> Result<(), FaultError> {
+    for (k, _) in params {
+        if !known.contains(&k.as_str()) {
+            return Err(FaultError::UnknownParam {
+                kind,
+                param: k.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn parse_pool(kind: &'static str, params: &[(String, String)]) -> Result<Side, FaultError> {
+    let raw = take(params, "pool").ok_or(FaultError::MissingParam { kind, param: "pool" })?;
+    Side::from_name(raw).ok_or_else(|| FaultError::BadValue {
+        what: format!("{kind} pool"),
+        detail: format!("'{raw}' is not host|dpu"),
+    })
+}
+
+fn build_fail(params: &[(String, String)]) -> Result<Injector, FaultError> {
+    reject_unknown("fail", params, &["pool", "cores", "for"])?;
+    let pool = parse_pool("fail", params)?;
+    let cores = match take(params, "cores") {
+        None | Some("all") => None,
+        Some(raw) => Some(raw.parse::<u32>().map_err(|_| FaultError::BadValue {
+            what: "fail cores".to_string(),
+            detail: format!("'{raw}' is not a core count or 'all'"),
+        })?),
+    };
+    let restore_s = match take(params, "for") {
+        None => None,
+        Some(raw) => Some(parse_f64("fail for", raw)?),
+    };
+    Ok(Injector::CoreFail { pool, cores, restore_s })
+}
+
+fn build_brownout(params: &[(String, String)]) -> Result<Injector, FaultError> {
+    reject_unknown("brownout", params, &["pool", "factor", "for"])?;
+    let pool = parse_pool("brownout", params)?;
+    let factor = parse_f64(
+        "brownout factor",
+        take(params, "factor").ok_or(FaultError::MissingParam { kind: "brownout", param: "factor" })?,
+    )?;
+    let for_s = parse_f64(
+        "brownout for",
+        take(params, "for").ok_or(FaultError::MissingParam { kind: "brownout", param: "for" })?,
+    )?;
+    Ok(Injector::Brownout { pool, factor, for_s })
+}
+
+fn build_link(params: &[(String, String)]) -> Result<Injector, FaultError> {
+    reject_unknown("link", params, &["loss", "extra_us", "for"])?;
+    let loss = parse_f64(
+        "link loss",
+        take(params, "loss").ok_or(FaultError::MissingParam { kind: "link", param: "loss" })?,
+    )?;
+    let extra_us = match take(params, "extra_us") {
+        None => 0.0,
+        Some(raw) => parse_f64("link extra_us", raw)?,
+    };
+    let for_s = parse_f64(
+        "link for",
+        take(params, "for").ok_or(FaultError::MissingParam { kind: "link", param: "for" })?,
+    )?;
+    Ok(Injector::LinkDegrade { loss, extra_us, for_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let spec = FaultSpec::parse(
+            "fail@0.01:pool=dpu,cores=all; brownout@0.2:pool=host,factor=3,for=0.5; \
+             link@1:loss=0.1,for=0.25,extra_us=150; fail@2:pool=host,cores=2,for=0.1",
+        )
+        .unwrap();
+        assert_eq!(spec.events.len(), 4);
+        assert_eq!(
+            spec.events[0].injector,
+            Injector::CoreFail { pool: Side::Dpu, cores: None, restore_s: None }
+        );
+        assert_eq!(
+            spec.events[1].injector,
+            Injector::Brownout { pool: Side::Host, factor: 3.0, for_s: 0.5 }
+        );
+        assert_eq!(
+            spec.events[2].injector,
+            Injector::LinkDegrade { loss: 0.1, extra_us: 150.0, for_s: 0.25 }
+        );
+        assert_eq!(
+            spec.events[3].injector,
+            Injector::CoreFail { pool: Side::Host, cores: Some(2), restore_s: Some(0.1) }
+        );
+    }
+
+    #[test]
+    fn canned_scenario_matches_its_spelled_out_spec() {
+        assert_eq!(
+            FaultSpec::parse("fail@0.01:pool=dpu,cores=all").unwrap(),
+            FaultSpec::canned_dpu_failstop()
+        );
+    }
+
+    #[test]
+    fn defaults_cores_all_and_extra_us_zero() {
+        let spec = FaultSpec::parse("fail@0:pool=dpu;link@0:loss=0.5,for=1").unwrap();
+        assert_eq!(
+            spec.events[0].injector,
+            Injector::CoreFail { pool: Side::Dpu, cores: None, restore_s: None }
+        );
+        assert_eq!(
+            spec.events[1].injector,
+            Injector::LinkDegrade { loss: 0.5, extra_us: 0.0, for_s: 1.0 }
+        );
+    }
+
+    #[test]
+    fn rejections_name_the_offending_field() {
+        let cases: &[(&str, &str)] = &[
+            ("", "empty fault spec"),
+            ("fail", "missing '@SECONDS'"),
+            ("zap@0.1:pool=dpu", "unknown fault kind 'zap'"),
+            ("fail@0.1", "requires parameter 'pool'"),
+            ("fail@0.1:pool=gpu", "not host|dpu"),
+            ("fail@0.1:pool=dpu,cores=0", "fail cores"),
+            ("fail@0.1:pool=dpu,cores=-1", "not a core count"),
+            ("fail@xyz:pool=dpu", "not a number"),
+            ("fail@-1:pool=dpu", "fault time"),
+            ("fail@inf:pool=dpu", "fault time"),
+            ("fail@0.1:pool=dpu,volts=9", "unknown parameter 'volts'"),
+            ("fail@0.1:pool=dpu,for=0", "fail for"),
+            ("brownout@0:pool=host,for=1", "requires parameter 'factor'"),
+            ("brownout@0:pool=host,factor=0.5,for=1", "must be finite and >= 1"),
+            ("brownout@0:pool=host,factor=2,for=-1", "brownout for"),
+            ("link@0:for=1", "requires parameter 'loss'"),
+            ("link@0:loss=1.5,for=1", "must be in [0, 1]"),
+            ("link@0:loss=nan,for=1", "must be in [0, 1]"),
+            ("link@0:loss=0.1,for=1,extra_us=-3", "link extra_us"),
+            ("fail@0.1:pool", "not k=v"),
+        ];
+        for (spec, needle) in cases {
+            let err = FaultSpec::parse(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "spec '{spec}': expected '{needle}' in '{err}'");
+        }
+    }
+
+    #[test]
+    fn unknown_kind_error_lists_the_registry() {
+        let err = FaultSpec::parse("zap@0").unwrap_err().to_string();
+        for info in REGISTRY {
+            assert!(err.contains(info.kind), "{err}");
+        }
+    }
+
+    #[test]
+    fn whitespace_and_trailing_separators_are_tolerated() {
+        let spec = FaultSpec::parse(" fail@0.01 : pool=dpu , cores=all ; ").unwrap();
+        assert_eq!(spec, FaultSpec::canned_dpu_failstop());
+    }
+
+    #[test]
+    fn registry_kinds_are_unique_and_parseable() {
+        for (i, info) in REGISTRY.iter().enumerate() {
+            for other in &REGISTRY[i + 1..] {
+                assert_ne!(info.kind, other.kind);
+            }
+        }
+        // every registry kind appears in the grammar the parser accepts
+        for probe in ["fail@0:pool=dpu", "brownout@0:pool=dpu,factor=2,for=1", "link@0:loss=0,for=1"] {
+            assert!(FaultSpec::parse(probe).is_ok(), "{probe}");
+        }
+    }
+}

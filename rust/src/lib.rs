@@ -21,6 +21,10 @@
 //!   substrates — open/closed-loop load generation, host/DPU placement
 //!   policies with per-core FIFO queues and admission control, and
 //!   throughput–latency sweeps (the `serving` task / `dpbento serve`);
+//! - the **fault layer** (`fault`): deterministic chaos for the serving
+//!   layer — a seed-driven `FaultSpec` scenario language (core failures,
+//!   brownouts, link degradation) plus the timeout/retry policy, all
+//!   scheduled on the simulator (`dpbento serve --faults`);
 //! - the **invariant linter** (`analysis`): a first-party token-level
 //!   static-analysis pass (`dpbento lint`) that enforces the determinism,
 //!   panic-freedom, and observability contracts the layers above rely on.
@@ -31,6 +35,7 @@
 pub mod analysis;
 pub mod coordinator;
 pub mod db;
+pub mod fault;
 pub mod index;
 pub mod net;
 pub mod obs;

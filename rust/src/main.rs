@@ -75,6 +75,11 @@ fn print_help() {
         .map(|r| format!("  {:26} {}", r.name(), r.summary()))
         .collect::<Vec<_>>()
         .join("\n");
+    let injectors = dpbento::fault::REGISTRY
+        .iter()
+        .map(|i| format!("  {:10} {:42} {}", i.kind, i.params, i.description))
+        .collect::<Vec<_>>()
+        .join("\n");
     println!(
         "dpBento: benchmarking DPUs for data processing (paper reproduction)
 
@@ -85,6 +90,7 @@ USAGE:
                 [--workload mixed|analytics|index_get|net_rpc] [--loads 0.2,0.5,0.8,1.0,1.2]
                 [--closed-loop N,N,...] [--max-batch N] [--linger-us F]
                 [--slo US | --slo class=US,...] [--dpu-fraction F] [--json FILE]
+                [--faults SPEC] [--timeout-us F] [--retries N]
                 [--requests N] [--seed N] [--trace FILE] [--log-level LVL]
   dpbento lint [--json] [--rule NAME] [PATH]
   dpbento list-tasks
@@ -111,6 +117,19 @@ SERVING:
                          default 10x-host-mean headroom per class
   --json FILE            write the sweeps (including per-class SLO
                          accounting) as a JSON document
+
+FAULT INJECTION (DESIGN.md §11):
+  --faults SPEC          deterministic chaos scenario injected into every
+                         sweep point: `KIND@SECONDS[:k=v,...][;ITEM...]`,
+                         e.g. 'fail@0.01:pool=dpu,cores=all'. Injector
+                         kinds (generated from the fault registry):
+{injectors}
+  --timeout-us F         per-attempt timeout in microseconds; arms
+                         budgeted retries with capped exponential backoff
+                         + deterministic jitter (0 = timeouts off)
+  --retries N            retry budget after the first attempt (default 3)
+  Chaos runs report availability and per-class timed-out/shed/retry
+  counters; the same seed + spec replays byte-identically.
 
 STATIC ANALYSIS (DESIGN.md §10):
   `dpbento lint` runs the first-party invariant linter over PATH (default:
@@ -274,6 +293,7 @@ fn parse_slos(spec: &str) -> anyhow::Result<dpbento::serve::ClassSlos> {
 /// (platform, scheduler) pair and print throughput–latency tables.
 fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     use dpbento::platform::PlatformId;
+    use dpbento::fault::FaultSpec;
     use dpbento::serve::{
         capacity_rps, host_only_capacity_rps, render_sweep, scheduler, sweep, sweep_closed,
         sweep_to_json, Mix, ServeConfig,
@@ -356,6 +376,16 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
         (0.0..=1.0).contains(&dpu_fraction),
         "--dpu-fraction must be in [0,1]"
     );
+    let faults = take_opt(&mut args, "--faults")
+        .map(|s| FaultSpec::parse(&s).map_err(|e| anyhow::anyhow!("bad --faults: {e}")))
+        .transpose()?;
+    let timeout_us = take_opt(&mut args, "--timeout-us")
+        .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --timeout-us")))
+        .transpose()?
+        .unwrap_or(0.0);
+    let retries = take_opt(&mut args, "--retries")
+        .map(|s| s.parse::<u32>().map_err(|_| anyhow::anyhow!("bad --retries")))
+        .transpose()?;
     let json_path = take_opt(&mut args, "--json");
     let requests = take_opt(&mut args, "--requests")
         .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad --requests")))
@@ -376,10 +406,19 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     );
     match &closed_loop {
         Some(clients) => println!(
-            "closed loop: sweeping client counts {clients:?} (zero think time)\n"
+            "closed loop: sweeping client counts {clients:?} (zero think time)"
         ),
-        None => println!("load factors are fractions of the host-only capacity\n"),
+        None => println!("load factors are fractions of the host-only capacity"),
     }
+    if let Some(f) = &faults {
+        println!(
+            "chaos: injecting {} fault event(s) into every point (timeout {:.0}us, {} retries)",
+            f.events.len(),
+            timeout_us,
+            retries.unwrap_or(3)
+        );
+    }
+    println!();
     let obs = if trace.is_some() {
         Obs::recording()
     } else {
@@ -397,7 +436,16 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
             if let Some(s) = slos {
                 cfg.slos = s;
             }
-            cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+            if let Some(f) = &faults {
+                cfg.faults = f.clone();
+            }
+            if timeout_us > 0.0 {
+                cfg.retry.timeout_us = timeout_us;
+                if let Some(r) = retries {
+                    cfg.retry.budget = r;
+                }
+            }
+            cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
             let host_cap = host_only_capacity_rps(&cfg);
             dpbento::log_debug!("sweeping {} under {}", platform, info.name);
             let points = match &closed_loop {

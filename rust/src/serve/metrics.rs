@@ -20,11 +20,19 @@ pub struct ClassPoint {
     pub arrived: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Retry budgets exhausted (terminal) — chaos accounting.
+    pub timed_out: u64,
+    /// Shed by the scheduler at arrival (terminal) — chaos accounting.
+    pub shed: u64,
+    /// Non-terminal retry attempts consumed.
+    pub retries: u64,
     /// Completions within the class SLO.
     pub slo_met: u64,
-    /// Fraction of the class's arrivals that missed its SLO (late +
-    /// rejected). 0 when the class saw no traffic.
+    /// Fraction of the class's arrivals that missed its SLO (late,
+    /// rejected, timed out, or shed). 0 when the class saw no traffic.
     pub violation_rate: f64,
+    /// completed / arrived for the class (1.0 with no traffic).
+    pub availability: f64,
 }
 
 /// One point on a throughput–latency curve.
@@ -38,10 +46,22 @@ pub struct LoadPoint {
     pub mean_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
-    /// Fraction of requests that missed their class SLO (late + rejected).
+    /// Fraction of requests that missed their class SLO (late, rejected,
+    /// timed out, or shed).
     pub slo_violation_rate: f64,
     /// Fraction of requests shed by admission control.
     pub rejected_frac: f64,
+    /// completed / arrived — the availability headline of a chaos run
+    /// (1.0 fault-free at low load).
+    pub availability: f64,
+    /// Fraction of requests whose retry budget exhausted (terminal).
+    pub timed_out_frac: f64,
+    /// Fraction of requests shed by the scheduler under brownout.
+    pub shed_frac: f64,
+    /// Retry attempts consumed across the run (non-terminal).
+    pub retries: u64,
+    /// Fault-spec injector events that fired during the run.
+    pub faults_injected: u64,
     /// Host pool utilization (busy core-seconds / capacity core-seconds).
     pub host_busy_frac: f64,
     /// DPU pool utilization (0 on host-only deployments).
@@ -59,7 +79,8 @@ pub struct LoadPoint {
 /// Summarize one run into a curve point.
 pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoint {
     let elapsed = out.elapsed_s.max(f64::MIN_POSITIVE);
-    let total = (out.completed + out.rejected).max(1) as f64;
+    // every arrived request has exactly one terminal disposition
+    let total = out.arrived().max(1) as f64;
     let (mean_us, p95_us, p99_us) = if out.latencies_us.is_empty() {
         (0.0, 0.0, 0.0)
     } else {
@@ -77,6 +98,11 @@ pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoi
         p99_us,
         slo_violation_rate: (total - slo_met as f64) / total,
         rejected_frac: out.rejected as f64 / total,
+        availability: out.availability(),
+        timed_out_frac: out.timed_out as f64 / total,
+        shed_frac: out.shed as f64 / total,
+        retries: out.retries,
+        faults_injected: out.faults_injected,
         host_busy_frac: out.host_busy_s / (elapsed * cfg.host_workers.max(1) as f64),
         dpu_busy_frac: if cfg.dpu.is_some() {
             out.dpu_busy_s / dpu_capacity_s
@@ -96,11 +122,19 @@ pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoi
                 arrived: c.arrived,
                 completed: c.completed,
                 rejected: c.rejected,
+                timed_out: c.timed_out,
+                shed: c.shed,
+                retries: c.retries,
                 slo_met: c.slo_met,
                 violation_rate: if c.arrived > 0 {
                     (c.arrived - c.slo_met) as f64 / c.arrived as f64
                 } else {
                     0.0
+                },
+                availability: if c.arrived > 0 {
+                    c.completed as f64 / c.arrived as f64
+                } else {
+                    1.0
                 },
             })
             .collect(),
@@ -152,6 +186,21 @@ pub fn sweep(base: &ServeConfig, offered_rps: &[f64], obs: &Obs) -> Vec<LoadPoin
         .collect()
 }
 
+/// Run an offered-load sweep with a fault scenario injected into every
+/// point (`dpbento serve --faults`): each rate serves the same
+/// deterministic chaos, so the curves compare how schedulers degrade —
+/// availability, timeouts, sheds — not just where their knees sit.
+pub fn sweep_faulted(
+    base: &ServeConfig,
+    offered_rps: &[f64],
+    faults: &crate::fault::FaultSpec,
+    obs: &Obs,
+) -> Vec<LoadPoint> {
+    let mut cfg = base.clone();
+    cfg.faults = faults.clone();
+    sweep(&cfg, offered_rps, obs)
+}
+
 /// Run a closed-loop sweep: one fixed-population run per client count
 /// (think time taken from `base` when it is already closed-loop). The
 /// reported `offered_rps` is the achieved rate — a closed loop offers
@@ -187,7 +236,7 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
     let closed = points.iter().any(|p| p.clients.is_some());
     let mut out = format!("== {title} ==\n");
     out.push_str(&format!(
-        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8}\n",
+        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}\n",
         if closed { "clients" } else { "offered/s" },
         "achieved/s",
         "goodput/s",
@@ -196,6 +245,9 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
         "p99_us",
         "slo_viol",
         "reject",
+        "avail",
+        "t_out",
+        "shed",
         "host_bz",
         "dpu_bz"
     ));
@@ -205,7 +257,7 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
             None => format!("{:.0}", p.offered_rps),
         };
         out.push_str(&format!(
-            "{:>12} {:>12.0} {:>10.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
+            "{:>12} {:>12.0} {:>10.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
             axis,
             p.achieved_rps,
             p.goodput_rps,
@@ -214,6 +266,9 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
             p.p99_us,
             p.slo_violation_rate,
             p.rejected_frac,
+            p.availability,
+            p.timed_out_frac,
+            p.shed_frac,
             p.host_busy_frac,
             p.dpu_busy_frac,
         ));
@@ -242,6 +297,14 @@ pub fn sweep_to_json(title: &str, scheduler: &str, points: &[LoadPoint]) -> Valu
                         Value::num(p.slo_violation_rate),
                     ),
                     ("rejected_frac".to_string(), Value::num(p.rejected_frac)),
+                    ("availability".to_string(), Value::num(p.availability)),
+                    ("timed_out_frac".to_string(), Value::num(p.timed_out_frac)),
+                    ("shed_frac".to_string(), Value::num(p.shed_frac)),
+                    ("retries".to_string(), Value::num(p.retries as f64)),
+                    (
+                        "faults_injected".to_string(),
+                        Value::num(p.faults_injected as f64),
+                    ),
                     (
                         "clients".to_string(),
                         match p.clients {
@@ -257,10 +320,17 @@ pub fn sweep_to_json(title: &str, scheduler: &str, points: &[LoadPoint]) -> Valu
                                 ("arrived".to_string(), Value::num(c.arrived as f64)),
                                 ("completed".to_string(), Value::num(c.completed as f64)),
                                 ("rejected".to_string(), Value::num(c.rejected as f64)),
+                                ("timed_out".to_string(), Value::num(c.timed_out as f64)),
+                                ("shed".to_string(), Value::num(c.shed as f64)),
+                                ("retries".to_string(), Value::num(c.retries as f64)),
                                 ("slo_met".to_string(), Value::num(c.slo_met as f64)),
                                 (
                                     "violation_rate".to_string(),
                                     Value::num(c.violation_rate),
+                                ),
+                                (
+                                    "availability".to_string(),
+                                    Value::num(c.availability),
                                 ),
                             ])
                         })),
@@ -390,6 +460,10 @@ mod tests {
         let out = ServeOutcome {
             completed: 0,
             rejected: 5,
+            timed_out: 0,
+            shed: 0,
+            retries: 0,
+            faults_injected: 0,
             elapsed_s: 1.0,
             latencies_us: vec![],
             waits_us: vec![],
@@ -406,6 +480,9 @@ mod tests {
                     arrived: if *c == RequestClass::NetRpc { 5 } else { 0 },
                     completed: 0,
                     rejected: if *c == RequestClass::NetRpc { 5 } else { 0 },
+                    timed_out: 0,
+                    shed: 0,
+                    retries: 0,
                     slo_met: 0,
                 })
                 .collect(),
@@ -415,7 +492,35 @@ mod tests {
         assert_eq!(p.goodput_rps, 0.0);
         assert_eq!(p.slo_violation_rate, 1.0);
         assert_eq!(p.rejected_frac, 1.0);
+        assert_eq!(p.availability, 0.0);
+        assert_eq!(p.timed_out_frac, 0.0);
         assert_eq!(p.per_class[RequestClass::NetRpc.idx()].violation_rate, 1.0);
+        assert_eq!(p.per_class[RequestClass::NetRpc.idx()].availability, 0.0);
         assert_eq!(p.per_class[RequestClass::Analytics.idx()].violation_rate, 0.0);
+        assert_eq!(p.per_class[RequestClass::Analytics.idx()].availability, 1.0);
+    }
+
+    #[test]
+    fn faulted_sweep_reports_availability() {
+        let mut base = cfg("failover");
+        base.mix = Mix::from_name("mixed").unwrap();
+        base.total_requests = 600;
+        base.retry.timeout_us = 5_000.0;
+        base.retry.budget = 2;
+        let faults = crate::fault::FaultSpec::canned_dpu_failstop();
+        let rate = 0.4 * host_only_capacity_rps(&base);
+        let pts = sweep_faulted(&base, &[rate], &faults, &Obs::disabled());
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert!(p.faults_injected >= 1, "{p:?}");
+        assert!(p.availability > 0.0 && p.availability <= 1.0, "{p:?}");
+        // the sweep's config carries the scenario into every point
+        let json = sweep_to_json("chaos", base.scheduler, &pts).to_compact();
+        for field in ["\"availability\"", "\"timed_out_frac\"", "\"shed_frac\"", "\"retries\""] {
+            assert!(json.contains(field), "{field} missing from {json}");
+        }
+        // the same faulted point is byte-reproducible
+        let again = sweep_faulted(&base, &[rate], &faults, &Obs::disabled());
+        assert_eq!(pts, again);
     }
 }

@@ -31,6 +31,13 @@
 //!    `util::stats::Summary`;
 //!  - [`task`]: the `serving` coordinator task (registered in
 //!    `Registry::builtin`) and therefore the `dpbento serve` CLI surface.
+//!
+//! Resilience (DESIGN.md §11): [`sim`] also executes `crate::fault`
+//! scenarios — fail-stop/transient core kills, brownouts, link
+//! degradation — with per-attempt timeouts and budgeted retries, and the
+//! `failover` scheduler circuit-breaks a broken pool onto the survivor.
+//! Chaos runs report availability and timed-out/shed/retry accounting
+//! per class ([`metrics::sweep_faulted`], `dpbento serve --faults`).
 
 pub mod load;
 pub mod metrics;
@@ -42,9 +49,9 @@ pub mod task;
 pub use load::Arrivals;
 pub use metrics::{
     capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, sweep_closed,
-    sweep_to_json, ClassPoint, LoadPoint,
+    sweep_faulted, sweep_to_json, ClassPoint, LoadPoint,
 };
 pub use request::{ClassSlos, Mix, RequestClass, ServiceJitter};
-pub use scheduler::{Batch, Pool, PoolSel, SchedCtx, Scheduler, SchedulerInfo};
-pub use sim::{run_serve, ClassOutcome, ServeConfig, ServeOutcome};
+pub use scheduler::{Batch, FailAction, Pool, PoolSel, SchedCtx, Scheduler, SchedulerInfo};
+pub use sim::{run_serve, ClassOutcome, ConfigError, ServeConfig, ServeOutcome};
 pub use task::ServingTask;

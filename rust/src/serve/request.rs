@@ -137,6 +137,12 @@ impl ClassSlos {
         self.us[class.idx()]
     }
 
+    /// All targets as a `RequestClass::idx`-indexed array (µs) — the shape
+    /// `SchedCtx` carries so schedulers can rank classes by SLO priority.
+    pub fn to_us_array(&self) -> [f64; RequestClass::COUNT] {
+        self.us
+    }
+
     pub fn set(&mut self, class: RequestClass, us: f64) {
         assert!(us > 0.0 && us.is_finite(), "SLO must be positive, got {us}");
         self.us[class.idx()] = us;

@@ -30,12 +30,20 @@
 //!    the DPU when its ETA (queue wait + class service + batch linger)
 //!    meets the class SLO, fall back to the host when it meets it, else
 //!    minimize ETA. Combined with DPU-side batching this is the policy
-//!    that holds p99-within-SLO goodput at high offered load.
+//!    that holds p99-within-SLO goodput at high offered load;
+//!  - `failover` — resilience-first (DESIGN.md §11): circuit-breaks a
+//!    pool once fewer than half its cores are up (the fault injectors
+//!    flip [`Core::up`]), routes everything to the survivor, asks the
+//!    event loop to drain the broken pool's queues across
+//!    ([`FailAction::DrainTo`], re-priced by the platform service-time
+//!    ratio), and sheds the loosest-SLO class while a brownout window
+//!    is open.
 
 use std::collections::VecDeque;
 use std::sync::OnceLock;
 
 use crate::platform::PlatformId;
+use crate::sim::engine::EventId;
 use crate::util::rng::Pcg;
 
 use super::request::RequestClass;
@@ -53,6 +61,13 @@ pub struct Job {
     /// batched request this is the *unbatched* price; the batch's
     /// amortized cost is computed at flush time.
     pub service_s: f64,
+    /// Which attempt of the logical request this is (0 = first try;
+    /// retries re-enter placement with `attempt + 1`, DESIGN.md §11).
+    pub attempt: u32,
+    /// Marked at placement when a link-degradation window decided this
+    /// attempt's response is lost: it consumes service but fails at
+    /// departure instead of completing.
+    pub lost: bool,
 }
 
 /// The unit of per-core work: one or more same-class requests served as a
@@ -92,10 +107,32 @@ impl Batch {
 }
 
 /// One worker core: the in-service batch plus its FIFO backlog.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Core {
     pub current: Option<Batch>,
     pub queue: VecDeque<Batch>,
+    /// False while a fail-stop injector holds this core down: a down core
+    /// accepts no work and its in-flight/queued batches were evicted at
+    /// kill time (DESIGN.md §11).
+    pub up: bool,
+    /// Engine id of the pending departure event for `current`, so a core
+    /// kill can cancel the completion that will never happen.
+    pub depart: Option<EventId>,
+    /// Sim time `current` entered service — the evicted batch's partial
+    /// busy credit on a kill.
+    pub started_s: f64,
+}
+
+impl Default for Core {
+    fn default() -> Core {
+        Core {
+            current: None,
+            queue: VecDeque::new(),
+            up: true,
+            depart: None,
+            started_s: 0.0,
+        }
+    }
 }
 
 impl Core {
@@ -143,11 +180,20 @@ impl Pool {
         self.cores.len()
     }
 
-    /// Index of the least-loaded core; ties resolve to the lowest index so
-    /// routing is deterministic. `None` for a pool with no cores.
+    /// Cores currently up (not held down by a fail-stop injector).
+    pub fn up_workers(&self) -> usize {
+        self.cores.iter().filter(|c| c.up).count()
+    }
+
+    /// Index of the least-loaded *up* core; ties resolve to the lowest
+    /// index so routing is deterministic. `None` for a pool with no cores
+    /// (or with every core down).
     pub fn least_loaded_core(&self) -> Option<usize> {
         let mut best: Option<usize> = None;
         for i in 0..self.cores.len() {
+            if !self.cores[i].up {
+                continue;
+            }
             match best {
                 None => best = Some(i),
                 Some(b) => {
@@ -160,12 +206,17 @@ impl Pool {
         best
     }
 
-    /// Deepest-queued core holding at least one *queued* batch — the
+    /// Deepest-queued *up* core holding at least one *queued* batch — the
     /// deterministic steal victim (ties resolve to the lowest index).
-    /// `None` when nothing is queued anywhere.
+    /// `None` when nothing is queued anywhere. (Down cores have nothing to
+    /// steal anyway — their queues are evicted at kill time — but the
+    /// filter keeps the invariant local.)
     pub fn deepest_victim(&self) -> Option<usize> {
         let mut best: Option<(usize, usize)> = None; // (queued, core)
         for (i, core) in self.cores.iter().enumerate() {
+            if !core.up {
+                continue;
+            }
             let q = core.queued_requests();
             if q == 0 {
                 continue;
@@ -227,26 +278,49 @@ pub struct SchedCtx<'a> {
     /// Batch linger budget on the DPU side (0 when batching is off) —
     /// part of the DPU's ETA for SLO math.
     pub linger_s: f64,
+    /// Brownout service-rate inflation per side (1.0 when healthy; a
+    /// `brownout` injector window raises it, DESIGN.md §11). Folded into
+    /// the ETA estimates so degradation-aware policies see it.
+    pub host_factor: f64,
+    pub dpu_factor: f64,
+    /// Per-class latency targets (µs, `RequestClass::idx` order) — lets a
+    /// scheduler rank classes by SLO priority (brownout shedding).
+    pub slos_us: [f64; RequestClass::COUNT],
     /// Virtual now (seconds).
     pub now_s: f64,
 }
 
 impl SchedCtx<'_> {
-    /// Estimated completion time of one `class` request joining the host.
+    /// Estimated completion time of one `class` request joining the host,
+    /// inflated by any open brownout window.
     pub fn host_eta_s(&self, class: RequestClass) -> f64 {
-        self.host.est_wait_s(self.host_mean_s) + self.host_class_s[class.idx()]
+        self.host_factor * (self.host.est_wait_s(self.host_mean_s) + self.host_class_s[class.idx()])
     }
 
     /// Estimated completion time of one `class` request joining the DPU
-    /// (infinite on host-only deployments), including the linger budget.
+    /// (infinite on host-only deployments), including the linger budget
+    /// and any open brownout window.
     pub fn dpu_eta_s(&self, class: RequestClass) -> f64 {
         match self.dpu {
             Some(d) => {
-                d.est_wait_s(self.dpu_mean_s) + self.dpu_class_s[class.idx()] + self.linger_s
+                self.dpu_factor * (d.est_wait_s(self.dpu_mean_s) + self.dpu_class_s[class.idx()])
+                    + self.linger_s
             }
             None => f64::INFINITY,
         }
     }
+}
+
+/// What a scheduler tells the event loop to do after a core kill
+/// ([`Scheduler::on_core_down`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailAction {
+    /// Leave queued work where it is (it drains when/if cores return).
+    None,
+    /// Circuit-break: move every batch still queued on the failed core's
+    /// pool to the named pool, re-priced by the platform service-time
+    /// ratio (same pricing as a cross-pool steal).
+    DrainTo(PoolSel),
 }
 
 /// The pluggable scheduling API (the v2 replacement for the `Policy`
@@ -290,6 +364,30 @@ pub trait Scheduler {
     fn on_linger(&mut self, class: RequestClass, ctx: &SchedCtx) -> LingerAction {
         let _ = (class, ctx);
         LingerAction::Flush
+    }
+
+    /// Load-shed hook, consulted once per fresh arrival (never for
+    /// retries) *before* placement. Returning true drops the request with
+    /// a terminal `shed` disposition. Default: admit everything.
+    fn shed_on_arrival(&mut self, class: RequestClass, slo_s: f64, ctx: &SchedCtx) -> bool {
+        let _ = (class, slo_s, ctx);
+        false
+    }
+
+    /// Resilience hook: a fail-stop injector just took `core` on `side`
+    /// down (`ctx` already reflects the kill). The returned action lets a
+    /// policy drain the broken pool's surviving queues to the other side.
+    /// Default: do nothing.
+    fn on_core_down(&mut self, side: PoolSel, core: usize, ctx: &SchedCtx) -> FailAction {
+        let _ = (side, core, ctx);
+        FailAction::None
+    }
+
+    /// Resilience hook: a transient failure window closed and `core` on
+    /// `side` is serving again (`ctx` reflects the restore). Default: do
+    /// nothing.
+    fn on_core_up(&mut self, side: PoolSel, core: usize, ctx: &SchedCtx) {
+        let _ = (side, core, ctx);
     }
 
     /// Analytic service capacity (requests/second) of a deployment under
@@ -464,6 +562,117 @@ impl Scheduler for SloAwareSched {
     }
 }
 
+/// Resilience-first routing (DESIGN.md §11): a per-pool circuit breaker
+/// trips when fewer than half the pool's cores are up; arrivals then pin
+/// to the survivor, and the trip itself asks the event loop to drain the
+/// broken pool's queues across ([`FailAction::DrainTo`]). While a
+/// brownout window is open the loosest-SLO class is shed to protect the
+/// tighter targets. With every breaker closed it behaves like a
+/// brownout-aware `queue-aware` + stealing.
+struct FailoverSched {
+    host_broken: bool,
+    dpu_broken: bool,
+}
+
+impl FailoverSched {
+    fn new() -> FailoverSched {
+        FailoverSched {
+            host_broken: false,
+            dpu_broken: false,
+        }
+    }
+
+    /// Healthy = at least one core up AND at least half the cores up.
+    fn healthy(pool: &Pool) -> bool {
+        let up = pool.up_workers();
+        up > 0 && 2 * up >= pool.workers()
+    }
+
+    /// Re-read both breakers from live pool state.
+    fn refresh(&mut self, ctx: &SchedCtx) {
+        self.host_broken = !Self::healthy(ctx.host);
+        self.dpu_broken = match ctx.dpu {
+            Some(d) => !Self::healthy(d),
+            None => true,
+        };
+    }
+
+    /// Index of the class with the largest (loosest) SLO — the lowest
+    /// priority class, first to shed under a brownout. Ties resolve to
+    /// the lowest class index so shedding is deterministic.
+    fn loosest_class(slos_us: &[f64; RequestClass::COUNT]) -> usize {
+        let mut best = 0usize;
+        for i in 1..slos_us.len() {
+            if slos_us[i].total_cmp(&slos_us[best]) == std::cmp::Ordering::Greater {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl Scheduler for FailoverSched {
+    fn name(&self) -> &'static str {
+        "failover"
+    }
+
+    fn on_arrival(&mut self, class: RequestClass, _slo_s: f64, ctx: &SchedCtx, _: &mut Pcg) -> PoolSel {
+        if ctx.dpu.is_none() {
+            return PoolSel::Host;
+        }
+        match (self.host_broken, self.dpu_broken) {
+            (false, true) => PoolSel::Host,
+            (true, false) => PoolSel::Dpu,
+            // both healthy (or both broken: nothing good to pick, keep
+            // balancing): min brownout-aware ETA, ties to the host
+            _ => {
+                if ctx.dpu_eta_s(class) < ctx.host_eta_s(class) {
+                    PoolSel::Dpu
+                } else {
+                    PoolSel::Host
+                }
+            }
+        }
+    }
+
+    fn on_idle(&mut self, side: PoolSel, _core: usize, ctx: &SchedCtx) -> Option<(PoolSel, usize)> {
+        steal_choice(side, ctx)
+    }
+
+    fn shed_on_arrival(&mut self, class: RequestClass, _slo_s: f64, ctx: &SchedCtx) -> bool {
+        // shed only while a brownout window is open, and then only the
+        // loosest-SLO (lowest-priority) class
+        if ctx.host_factor <= 1.0 && ctx.dpu_factor <= 1.0 {
+            return false;
+        }
+        class.idx() == Self::loosest_class(&ctx.slos_us)
+    }
+
+    fn on_core_down(&mut self, side: PoolSel, _core: usize, ctx: &SchedCtx) -> FailAction {
+        let was_broken = match side {
+            PoolSel::Host => self.host_broken,
+            PoolSel::Dpu => self.dpu_broken,
+        };
+        self.refresh(ctx);
+        let (now_broken, survivor_ok) = match side {
+            PoolSel::Host => (self.host_broken, !self.dpu_broken),
+            PoolSel::Dpu => (self.dpu_broken, !self.host_broken),
+        };
+        if now_broken && !was_broken && survivor_ok {
+            FailAction::DrainTo(match side {
+                PoolSel::Host => PoolSel::Dpu,
+                PoolSel::Dpu => PoolSel::Host,
+            })
+        } else {
+            FailAction::None
+        }
+    }
+
+    fn on_core_up(&mut self, _side: PoolSel, _core: usize, ctx: &SchedCtx) {
+        self.refresh(ctx);
+    }
+}
+
 // ---------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------
@@ -523,6 +732,9 @@ fn build_work_steal(_: &SchedParams) -> Box<dyn Scheduler> {
 fn build_slo_aware(_: &SchedParams) -> Box<dyn Scheduler> {
     Box::new(SloAwareSched)
 }
+fn build_failover(_: &SchedParams) -> Box<dyn Scheduler> {
+    Box::new(FailoverSched::new())
+}
 
 /// The built-in scheduler registry. New policies append here — no match
 /// arms to chase across the codebase.
@@ -563,6 +775,13 @@ pub const REGISTRY: &[SchedulerInfo] = &[
         description: "route per class against its latency SLO; steal on idle",
         builder: build_slo_aware,
     },
+    // appended last so existing registry indices (fig16) stay stable
+    SchedulerInfo {
+        name: "failover",
+        aliases: &["fail_over", "circuit-breaker"],
+        description: "circuit-break an unhealthy pool, drain it to the survivor, shed the loosest-SLO class under brownout",
+        builder: build_failover,
+    },
 ];
 
 /// Look a scheduler up by canonical name or alias.
@@ -594,6 +813,8 @@ mod tests {
             class: IndexGet,
             arrived_s: 0.0,
             service_s: svc,
+            attempt: 0,
+            lost: false,
         }
     }
 
@@ -620,6 +841,9 @@ mod tests {
             host_class_s: [host_mean; RequestClass::COUNT],
             dpu_class_s: [dpu_mean; RequestClass::COUNT],
             linger_s: 0.0,
+            host_factor: 1.0,
+            dpu_factor: 1.0,
+            slos_us: [1e6; RequestClass::COUNT],
             now_s: 0.0,
         }
     }
@@ -779,13 +1003,107 @@ mod tests {
             lookup("static-split").unwrap().build(&p).capacity_rps(host_cap, dpu_cap),
             40.0
         );
-        for dynamic in ["queue-aware", "work-steal", "slo-aware"] {
+        for dynamic in ["queue-aware", "work-steal", "slo-aware", "failover"] {
             assert_eq!(
                 lookup(dynamic).unwrap().build(&p).capacity_rps(host_cap, dpu_cap),
                 120.0,
                 "{dynamic}"
             );
         }
+    }
+
+    #[test]
+    fn down_cores_are_invisible_to_routing_and_stealing() {
+        let mut pool = loaded_pool(HostEpyc, 3, &[0, 3, 3]);
+        assert_eq!(pool.up_workers(), 3);
+        // kill the idle core: routing must fall back to a loaded up core
+        pool.cores[0].up = false;
+        assert_eq!(pool.up_workers(), 2);
+        assert_eq!(pool.least_loaded_core(), Some(1));
+        // kill everything: the pool absorbs nothing
+        pool.cores[1].up = false;
+        pool.cores[2].up = false;
+        assert_eq!(pool.least_loaded_core(), None);
+        assert_eq!(pool.deepest_victim(), None);
+        assert_eq!(pool.est_wait_s(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn failover_breaker_pins_to_the_survivor_and_drains_once() {
+        let host = Pool::new(HostEpyc, 4);
+        let mut dpu = loaded_pool(Bf2, 4, &[2, 2, 2, 2]);
+        let mut s = FailoverSched::new();
+        // healthy deployment: behaves queue-aware (loaded dpu → host)
+        {
+            let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+            let mut rng = Pcg::new(1);
+            assert_eq!(s.on_arrival(IndexGet, 1.0, &c, &mut rng), PoolSel::Host);
+        }
+        // kill 2 of 4 DPU cores: still >= half up, breaker stays closed
+        dpu.cores[3].up = false;
+        dpu.cores[2].up = false;
+        {
+            let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+            assert_eq!(s.on_core_down(PoolSel::Dpu, 3, &c), FailAction::None);
+            assert_eq!(s.on_core_down(PoolSel::Dpu, 2, &c), FailAction::None);
+        }
+        // third kill trips the breaker exactly once, draining to the host
+        dpu.cores[1].up = false;
+        {
+            let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+            assert_eq!(
+                s.on_core_down(PoolSel::Dpu, 1, &c),
+                FailAction::DrainTo(PoolSel::Host)
+            );
+        }
+        dpu.cores[0].up = false;
+        {
+            let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+            // already broken: no second drain
+            assert_eq!(s.on_core_down(PoolSel::Dpu, 0, &c), FailAction::None);
+            // arrivals now pin to the survivor even though the DPU pool
+            // object still exists
+            let mut rng = Pcg::new(1);
+            assert_eq!(s.on_arrival(IndexGet, 1.0, &c, &mut rng), PoolSel::Host);
+        }
+        // restore resets the breaker
+        for i in 0..4 {
+            dpu.cores[i].up = true;
+        }
+        {
+            let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+            s.on_core_up(PoolSel::Dpu, 0, &c);
+            assert!(!s.dpu_broken);
+        }
+    }
+
+    #[test]
+    fn failover_sheds_only_the_loosest_slo_class_during_brownouts() {
+        let host = Pool::new(HostEpyc, 2);
+        let dpu = Pool::new(Bf2, 2);
+        let mut s = FailoverSched::new();
+        let mut c = ctx(&host, Some(&dpu), 1.0, 1.0);
+        c.slos_us = [20_000.0, 400.0, 900.0]; // Analytics loosest
+        // no brownout → nothing sheds
+        assert!(!s.shed_on_arrival(Analytics, 0.02, &c));
+        // brownout on either side → shed exactly the loosest class
+        c.dpu_factor = 2.0;
+        assert!(s.shed_on_arrival(Analytics, 0.02, &c));
+        assert!(!s.shed_on_arrival(IndexGet, 4e-4, &c));
+        assert!(!s.shed_on_arrival(NetRpc, 9e-4, &c));
+        // default schedulers never shed
+        let mut qa = lookup("queue-aware").unwrap().build(&SchedParams::default());
+        assert!(!qa.shed_on_arrival(Analytics, 0.02, &c));
+    }
+
+    #[test]
+    fn core_down_hooks_default_to_noops() {
+        let host = Pool::new(HostEpyc, 2);
+        let dpu = Pool::new(Bf2, 2);
+        let c = ctx(&host, Some(&dpu), 1.0, 1.0);
+        let mut s = lookup("work-steal").unwrap().build(&SchedParams::default());
+        assert_eq!(s.on_core_down(PoolSel::Dpu, 0, &c), FailAction::None);
+        s.on_core_up(PoolSel::Dpu, 0, &c); // must not panic
     }
 
     #[test]

@@ -71,6 +71,17 @@ impl Task for ServingTask {
                 "8",
             ),
             ParamDef::new("linger_us", "batch linger deadline (µs)", "20"),
+            ParamDef::new(
+                "faults",
+                "fault scenario: KIND@SECONDS[:k=v,...][;ITEM...] (see `dpbento serve --help`)",
+                "\"fail@0.01:pool=dpu,cores=all\"",
+            ),
+            ParamDef::new(
+                "timeout_us",
+                "per-attempt timeout (µs); 0 disables timeouts and retries",
+                "2000",
+            ),
+            ParamDef::new("retries", "retry budget after the first attempt", "3"),
         ]
     }
     fn metrics(&self) -> Vec<&'static str> {
@@ -83,6 +94,10 @@ impl Task for ServingTask {
             "p99_lat_us",
             "slo_violation_rate",
             "rejected_frac",
+            "availability",
+            "timed_out_frac",
+            "shed_frac",
+            "retries",
             "host_busy_frac",
             "dpu_busy_frac",
             "host_cpu_us_per_req",
@@ -166,7 +181,18 @@ impl Task for ServingTask {
             },
             m => anyhow::bail!("mode must be open|closed, got '{m}'"),
         };
-        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+
+        // deterministic chaos: scenario + per-attempt timeout/retry policy
+        if let Some(spec) = test.get("faults").and_then(Value::as_str) {
+            cfg.faults =
+                crate::fault::FaultSpec::parse(spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        let timeout_us = test.f64_or("timeout_us", 0.0);
+        if timeout_us > 0.0 {
+            cfg.retry.timeout_us = timeout_us;
+            cfg.retry.budget = test.usize_or("retries", 3) as u32;
+        }
+        cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
 
         let out = run_serve(&cfg, &Obs::disabled());
         let p = point(&cfg, offered, &out);
@@ -192,6 +218,10 @@ impl Task for ServingTask {
             ("p99_lat_us".to_string(), p.p99_us),
             ("slo_violation_rate".to_string(), p.slo_violation_rate),
             ("rejected_frac".to_string(), p.rejected_frac),
+            ("availability".to_string(), p.availability),
+            ("timed_out_frac".to_string(), p.timed_out_frac),
+            ("shed_frac".to_string(), p.shed_frac),
+            ("retries".to_string(), p.retries as f64),
             ("host_busy_frac".to_string(), p.host_busy_frac),
             ("dpu_busy_frac".to_string(), p.dpu_busy_frac),
             ("host_cpu_us_per_req".to_string(), p.host_cpu_us_per_req),
@@ -370,6 +400,42 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("slo-aware"), "{err}");
+    }
+
+    #[test]
+    fn fault_params_reach_the_sim() {
+        let args = [
+            ("policy", Value::str("failover")),
+            ("workload", Value::str("mixed")),
+            ("load", Value::Num(0.4)),
+            ("requests", Value::Num(1500.0)),
+            ("faults", Value::str("fail@0.01:pool=dpu,cores=all")),
+            ("timeout_us", Value::Num(2000.0)),
+            ("retries", Value::Num(2.0)),
+        ];
+        let r = run_one(PlatformId::Bf3, &args);
+        assert!(r["availability"] > 0.0 && r["availability"] <= 1.0, "{r:?}");
+        assert!(r["achieved_rps"] > 0.0);
+        // fault-free baseline reports perfect availability at low load
+        let base = run_one(
+            PlatformId::Bf3,
+            &[
+                ("policy", Value::str("failover")),
+                ("workload", Value::str("mixed")),
+                ("load", Value::Num(0.4)),
+                ("requests", Value::Num(1500.0)),
+            ],
+        );
+        assert_eq!(base["availability"], 1.0, "{base:?}");
+        assert_eq!(base["timed_out_frac"], 0.0);
+        // a malformed scenario is rejected with a typed parse error
+        let t = ServingTask;
+        let mut ctx = TaskContext::new(PlatformId::Bf3, 1);
+        let err = t
+            .run(&mut ctx, &spec(&[("faults", Value::str("zap@0.1"))]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown fault kind"), "{err}");
     }
 
     #[test]

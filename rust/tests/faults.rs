@@ -1,0 +1,289 @@
+//! Integration tests for the fault-injection subsystem (DESIGN.md §11):
+//! the headline resilience ordering (failover beats static-split on
+//! goodput under a DPU fail-stop), the one-terminal-disposition
+//! accounting identity under combined chaos, byte-determinism of faulted
+//! runs, brownout shedding, transient-failure recovery, link-degradation
+//! retry/timeout behaviour, spec/config rejection at the public API, and
+//! cancel-on-completion of engine timers.
+
+use dpbento::fault::{FaultEvent, FaultSpec, Injector, Side, MAX_RETRY_BUDGET};
+use dpbento::obs::Obs;
+use dpbento::platform::PlatformId;
+use dpbento::serve::{
+    host_only_capacity_rps, run_serve, sweep_faulted, Arrivals, Mix, RequestClass, ServeConfig,
+};
+use dpbento::sim::Engine;
+
+fn chaos_cfg(sched: &str, workload: &str, seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::new(
+        Some(PlatformId::Bf3),
+        sched,
+        Mix::from_name(workload).expect("known workload"),
+        seed,
+    );
+    cfg.total_requests = 4000;
+    cfg
+}
+
+/// The acceptance invariant from ISSUE 9: with every DPU core fail-stopped
+/// early in the run, the `failover` policy (circuit-break + drain to the
+/// host survivor) sustains strictly more SLO goodput and availability than
+/// a blind `static-split`, which keeps feeding the dead pool.
+#[test]
+fn failover_beats_static_split_under_canned_dpu_failstop() {
+    let obs = Obs::disabled();
+    let mut fo_cfg = chaos_cfg("failover", "mixed", 42);
+    // generous per-attempt timeout: only genuinely stuck work retries
+    fo_cfg.retry.timeout_us = 50_000.0;
+    fo_cfg.retry.budget = 3;
+    let mut split_cfg = fo_cfg.clone();
+    split_cfg.scheduler = "static-split";
+
+    // the host alone can absorb this load — any shortfall is the policy's
+    let rate = 0.5 * host_only_capacity_rps(&fo_cfg);
+    let faults = FaultSpec::canned_dpu_failstop();
+
+    let fo = sweep_faulted(&fo_cfg, &[rate], &faults, &obs)[0].clone();
+    let split = sweep_faulted(&split_cfg, &[rate], &faults, &obs)[0].clone();
+
+    assert!(fo.faults_injected >= 1, "{fo:?}");
+    assert!(split.faults_injected >= 1, "{split:?}");
+    assert!(
+        fo.goodput_rps > 1.3 * split.goodput_rps,
+        "failover goodput {} must beat static-split {} with the DPU dead",
+        fo.goodput_rps,
+        split.goodput_rps
+    );
+    assert!(
+        fo.availability > split.availability,
+        "availability {} vs {}",
+        fo.availability,
+        split.availability
+    );
+    assert!(
+        fo.availability > 0.9,
+        "failover should keep most requests alive: {fo:?}"
+    );
+    assert!(
+        split.availability < 0.75,
+        "static-split keeps feeding a dead pool: {split:?}"
+    );
+
+    // and the comparison itself is byte-reproducible
+    let again = sweep_faulted(&fo_cfg, &[rate], &faults, &obs)[0].clone();
+    assert_eq!(fo, again);
+}
+
+/// Every logical request gets exactly one terminal disposition even under
+/// combined chaos (partial kill + brownout + lossy link + tight queues):
+/// per class and in total, arrived = completed + rejected + timed_out +
+/// shed, and the whole outcome is identical run to run.
+#[test]
+fn accounting_identity_holds_under_combined_chaos() {
+    let obs = Obs::disabled();
+    let mut cfg = chaos_cfg("failover", "mixed", 7);
+    cfg.queue_cap = 8; // force admission-control rejections too
+    cfg.retry.timeout_us = 2_000.0;
+    cfg.retry.budget = 1; // exhaust budgets quickly → timed_out fills
+    // windows sized to the arrival span (>= ~15ms at this rate): a partial
+    // transient kill, a long brownout, and a lossy link all overlap it
+    cfg.faults = FaultSpec::parse(
+        "fail@0.002:pool=dpu,cores=4,for=0.005;\
+         brownout@0.004:pool=dpu,factor=2.5,for=0.3;\
+         link@0:loss=0.5,extra_us=200,for=0.3",
+    )
+    .unwrap();
+    cfg.arrivals = Arrivals::OpenPoisson {
+        rate_rps: 1.1 * host_only_capacity_rps(&cfg),
+    };
+
+    let out = run_serve(&cfg, &obs);
+    assert_eq!(out.arrived(), cfg.total_requests as u64);
+    assert_eq!(
+        out.completed + out.rejected + out.timed_out + out.shed,
+        out.arrived()
+    );
+    for c in &out.per_class {
+        assert_eq!(
+            c.completed + c.rejected + c.timed_out + c.shed,
+            c.arrived,
+            "{c:?}"
+        );
+        assert!(c.slo_met <= c.completed, "{c:?}");
+    }
+    let sum = |f: fn(&dpbento::serve::ClassOutcome) -> u64| -> u64 {
+        out.per_class.iter().map(f).sum()
+    };
+    assert_eq!(sum(|c| c.arrived), out.arrived());
+    assert_eq!(sum(|c| c.completed), out.completed);
+    assert_eq!(sum(|c| c.rejected), out.rejected);
+    assert_eq!(sum(|c| c.timed_out), out.timed_out);
+    assert_eq!(sum(|c| c.shed), out.shed);
+    assert_eq!(sum(|c| c.retries), out.retries);
+    // all three injector windows opened, and every chaos bucket engaged
+    assert_eq!(out.faults_injected, 3, "{out:?}");
+    assert!(out.timed_out > 0, "{out:?}");
+    assert!(out.retries > 0, "{out:?}");
+    assert!(out.shed > 0, "{out:?}");
+
+    let again = run_serve(&cfg, &obs);
+    assert_eq!(out, again, "faulted runs must be byte-identical");
+}
+
+/// While a brownout window is open, `failover` sheds exactly the
+/// loosest-SLO class (analytics under `default_headroom`) and nothing
+/// else; schedulers without the hook shed nothing.
+#[test]
+fn brownout_sheds_only_the_loosest_slo_class() {
+    let obs = Obs::disabled();
+    let mut cfg = chaos_cfg("failover", "mixed", 11);
+    cfg.faults = FaultSpec::parse("brownout@0:pool=dpu,factor=3,for=60").unwrap();
+    cfg.arrivals = Arrivals::OpenPoisson {
+        rate_rps: 0.5 * host_only_capacity_rps(&cfg),
+    };
+    let out = run_serve(&cfg, &obs);
+    assert!(out.shed > 0, "{out:?}");
+    for c in &out.per_class {
+        if c.class == RequestClass::Analytics {
+            assert_eq!(c.shed, out.shed, "all shedding lands on analytics: {c:?}");
+            assert_eq!(c.completed, 0, "the window covers the whole run: {c:?}");
+        } else {
+            assert_eq!(c.shed, 0, "tighter classes stay admitted: {c:?}");
+        }
+    }
+    assert!(out.availability < 1.0);
+
+    // the same window under a hook-less scheduler sheds nothing
+    let mut qa = cfg.clone();
+    qa.scheduler = "queue-aware";
+    let out = run_serve(&qa, &obs);
+    assert_eq!(out.shed, 0, "{out:?}");
+}
+
+/// A transient fail-stop (`for=` restore) gives the cores back: the DPU
+/// serves again after the window, so a transient run completes more on
+/// the DPU than a permanent kill of the same shape.
+#[test]
+fn transient_failstop_restores_the_pool() {
+    let obs = Obs::disabled();
+    let mut transient = chaos_cfg("failover", "mixed", 21);
+    transient.retry.timeout_us = 50_000.0;
+    transient.retry.budget = 3;
+    transient.arrivals = Arrivals::OpenPoisson {
+        rate_rps: 0.4 * host_only_capacity_rps(&transient),
+    };
+    let mut permanent = transient.clone();
+    transient.faults = FaultSpec::parse("fail@0.01:pool=dpu,cores=all,for=0.02").unwrap();
+    permanent.faults = FaultSpec::parse("fail@0.01:pool=dpu,cores=all").unwrap();
+
+    let t = run_serve(&transient, &obs);
+    let p = run_serve(&permanent, &obs);
+    assert!(
+        t.dpu_served > p.dpu_served,
+        "restored cores must serve again: {} vs {}",
+        t.dpu_served,
+        p.dpu_served
+    );
+    assert!(t.availability() >= p.availability());
+    assert!(t.availability() > 0.9, "{t:?}");
+}
+
+/// A lossy link eats net-rpc responses: with a retry budget the attempts
+/// come back as retries and almost everything still completes; with
+/// retries disabled every lost response is a terminal timeout.
+#[test]
+fn link_loss_is_absorbed_by_retries_and_fatal_without_them() {
+    let obs = Obs::disabled();
+    let mut cfg = chaos_cfg("queue-aware", "net_rpc", 5);
+    cfg.faults = FaultSpec::parse("link@0:loss=0.4,extra_us=150,for=60").unwrap();
+    cfg.arrivals = Arrivals::OpenPoisson {
+        rate_rps: 0.3 * host_only_capacity_rps(&cfg),
+    };
+
+    let mut budgeted = cfg.clone();
+    budgeted.retry.timeout_us = 100_000.0;
+    budgeted.retry.budget = 4;
+    let b = run_serve(&budgeted, &obs);
+    assert!(b.retries > 0, "{b:?}");
+    assert!(
+        b.availability() > 0.9,
+        "a 4-deep budget should absorb 40% loss: {b:?}"
+    );
+
+    // retries disabled: a lost response has nowhere to go but timed_out
+    let n = run_serve(&cfg, &obs);
+    assert_eq!(n.retries, 0, "{n:?}");
+    assert!(n.timed_out > 0, "{n:?}");
+    assert!(
+        n.availability() < 0.8,
+        "40% loss with no retries must show: {n:?}"
+    );
+}
+
+/// Bad scenarios and bad retry knobs fail loudly at the public parse /
+/// validate boundary, never inside the event loop.
+#[test]
+fn bad_specs_and_configs_are_rejected_with_named_errors() {
+    let parse_err = |s: &str| FaultSpec::parse(s).unwrap_err().to_string();
+    assert!(parse_err("").contains("empty"), "{}", parse_err(""));
+    assert!(parse_err("zap@0.1").contains("unknown fault kind"));
+    assert!(parse_err("fail@0.1:pool=dpu,zone=3").contains("zone"));
+    assert!(parse_err("fail@0.1:cores=all").contains("pool"));
+    assert!(parse_err("brownout@0.1:pool=dpu,factor=0.5,for=1").contains("factor"));
+    assert!(parse_err("link@0.1:loss=1.5,for=1").contains("loss"));
+    assert!(parse_err("fail@-1:pool=dpu").contains("fault time"));
+
+    let mut cfg = chaos_cfg("failover", "mixed", 1);
+    cfg.retry.timeout_us = 100.0;
+    cfg.retry.budget = MAX_RETRY_BUDGET + 1;
+    let err = cfg.validate().unwrap_err().to_string();
+    assert!(err.contains("invalid fault/retry config"), "{err}");
+
+    let mut cfg = chaos_cfg("failover", "mixed", 1);
+    cfg.retry.timeout_us = f64::NAN;
+    assert!(cfg.validate().is_err());
+
+    // programmatically-built specs re-validate at the config boundary
+    let mut cfg = chaos_cfg("failover", "mixed", 1);
+    cfg.faults = FaultSpec {
+        events: vec![FaultEvent {
+            at_s: 0.01,
+            injector: Injector::Brownout {
+                pool: Side::Dpu,
+                factor: 0.5,
+                for_s: 0.1,
+            },
+        }],
+    };
+    let err = cfg.validate().unwrap_err().to_string();
+    assert!(err.contains("factor"), "{err}");
+}
+
+/// Cancel-on-completion, at the engine layer the timeout machinery rides
+/// on: a cancelled timer never fires, cancel of a fired (or already
+/// cancelled) timer reports false, and live timers are unaffected.
+#[test]
+fn cancelled_timers_never_fire_and_cancel_is_single_shot() {
+    let mut eng: Engine<u32> = Engine::new();
+    let a = eng.schedule_in(1.0, 1);
+    let b = eng.schedule_in(2.0, 2);
+    let c = eng.schedule_in(3.0, 3);
+    assert!(eng.cancel(b), "first cancel of a live timer");
+    assert!(!eng.cancel(b), "second cancel must report false");
+
+    let mut fired = Vec::new();
+    while let Some((t, payload)) = eng.next_event() {
+        fired.push((t, payload));
+    }
+    assert_eq!(fired, vec![(1.0, 1), (3.0, 3)], "b must never fire");
+    assert!(!eng.cancel(a), "cancel after fire must report false");
+    assert!(!eng.cancel(c), "cancel after fire must report false");
+
+    // a timer cancelled between deliveries stays cancelled
+    let _d = eng.schedule_in(1.0, 4);
+    let e = eng.schedule_in(2.0, 5);
+    let (t, payload) = eng.next_event().expect("d is live");
+    assert_eq!((t, payload), (4.0, 4));
+    assert!(eng.cancel(e), "e is still pending at t=4");
+    assert_eq!(eng.next_event(), None, "e must never fire");
+}

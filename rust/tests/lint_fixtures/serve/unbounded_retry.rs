@@ -1,0 +1,11 @@
+//! Fixture: `unbounded-retry` must fire on the budgetless retry loop
+//! below — retry loops carry a visible attempt budget (`fault::RetryPolicy`).
+
+pub fn send_forever(link: &mut Link) {
+    loop {
+        if link.send().is_ok() {
+            return;
+        }
+        link.retry_wait();
+    }
+}
