@@ -11,13 +11,19 @@ use dpbento::fault::FaultSpec;
 use dpbento::obs::Obs;
 use dpbento::platform::PlatformId;
 use dpbento::serve::{
-    capacity_rps, host_only_capacity_rps, scheduler, sweep, sweep_faulted, Mix, ServeConfig,
+    capacity_rps, host_only_capacity_rps, run_sweep, scheduler, Mix, ServeConfig, SweepSpec,
 };
 use dpbento::util::bench::BenchTable;
 
 const SEED: u64 = 16;
 const REQUESTS: usize = 4000;
 const LOADS: [f64; 5] = [0.2, 0.5, 0.8, 1.0, 1.2];
+
+fn load_spec(cfg: &ServeConfig) -> SweepSpec {
+    let host_cap = host_only_capacity_rps(cfg);
+    let rates: Vec<f64> = LOADS.iter().map(|l| l * host_cap).collect();
+    SweepSpec::open(&rates)
+}
 
 fn run_sched(
     dpu: PlatformId,
@@ -28,9 +34,7 @@ fn run_sched(
     let mut cfg = ServeConfig::new(Some(dpu), sched, mix.clone(), SEED);
     cfg.total_requests = REQUESTS;
     cfg.max_batch = max_batch;
-    let host_cap = host_only_capacity_rps(&cfg);
-    let rates: Vec<f64> = LOADS.iter().map(|l| l * host_cap).collect();
-    sweep(&cfg, &rates, &Obs::disabled())
+    run_sweep(&cfg, &load_spec(&cfg), &Obs::disabled())
 }
 
 fn main() {
@@ -116,9 +120,8 @@ fn main() {
                 cfg.total_requests = REQUESTS;
                 cfg.retry.timeout_us = 50_000.0;
                 cfg.retry.budget = 3;
-                let host_cap = host_only_capacity_rps(&cfg);
-                let rates: Vec<f64> = LOADS.iter().map(|l| l * host_cap).collect();
-                sweep_faulted(&cfg, &rates, &faults, &Obs::disabled())
+                let spec = load_spec(&cfg).with_faults(faults.clone());
+                run_sweep(&cfg, &spec, &Obs::disabled())
             })
             .collect();
         for (li, load) in LOADS.iter().enumerate() {
@@ -142,6 +145,62 @@ fn main() {
         assert!(
             chaos[1][mid].availability > chaos[0][mid].availability,
             "failover must keep more requests alive with the DPU dead"
+        );
+
+        // deadline panel: the same deployment drained fifo vs edf at
+        // fractions of the *full* deployment capacity — past the knee a
+        // backlog forms and EDF reorders it toward urgent work, so
+        // SLO-constrained goodput holds up and the tightest class
+        // misses fewer deadlines
+        let queues = ["fifo", "edf"];
+        let mut dl_good = BenchTable::new(
+            format!("Fig. 16g — goodput by queue discipline, host+{dpu} (slo-aware, max_batch 8)"),
+            "req/s",
+        )
+        .columns(&queues);
+        let mut dl_miss = BenchTable::new(
+            format!("Fig. 16h — deadline-miss rate by queue discipline, host+{dpu}"),
+            "frac",
+        )
+        .columns(&queues);
+        let knee_loads = [0.8, 1.0, 1.25];
+        let dl: Vec<Vec<dpbento::serve::LoadPoint>> = queues
+            .iter()
+            .map(|&q| {
+                let mut cfg = ServeConfig::new(Some(dpu), "slo-aware", mix.clone(), SEED);
+                cfg.total_requests = REQUESTS;
+                cfg.max_batch = 8;
+                cfg.queue = q;
+                let cap = capacity_rps(&cfg);
+                let rates: Vec<f64> = knee_loads.iter().map(|l| l * cap).collect();
+                run_sweep(&cfg, &SweepSpec::open(&rates), &Obs::disabled())
+            })
+            .collect();
+        for (li, load) in knee_loads.iter().enumerate() {
+            let label = format!("{:.0}% capacity", load * 100.0);
+            dl_good.row_f(
+                label.clone(),
+                &dl.iter().map(|c| c[li].goodput_rps).collect::<Vec<_>>(),
+            );
+            dl_miss.row_f(
+                label,
+                &dl.iter()
+                    .map(|c| c[li].deadline_miss_rate())
+                    .collect::<Vec<_>>(),
+            );
+        }
+        dl_good.finish(&format!("fig16g_serving_queue_goodput_{dpu}"));
+        dl_miss.finish(&format!("fig16h_serving_queue_dlmiss_{dpu}"));
+        let over = knee_loads.len() - 1; // 125% of the analytic knee
+        assert!(
+            dl[1][over].goodput_rps >= dl[0][over].goodput_rps,
+            "edf must not lose goodput to fifo past the knee ({} vs {})",
+            dl[1][over].goodput_rps,
+            dl[0][over].goodput_rps
+        );
+        assert!(
+            dl[1][over].deadline_miss_rate() <= dl[0][over].deadline_miss_rate(),
+            "edf must not miss more deadlines than fifo past the knee"
         );
 
         // shape checks mirroring the serving integration tests

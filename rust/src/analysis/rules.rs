@@ -38,8 +38,18 @@ pub static REGISTRY: &[&dyn Rule] = &[
     &UnboundedRetry,
 ];
 
+// Hook the rule catalog into the shared by-name registry helper (the
+// same machinery serve schedulers, queue disciplines, and fault
+// injectors resolve through). Rules have no aliases, so only `name`
+// is provided; `Rule::name(*self)` disambiguates from `Entry::name`.
+impl crate::util::registry::Entry for &'static dyn Rule {
+    fn name(&self) -> &'static str {
+        Rule::name(*self)
+    }
+}
+
 pub fn by_name(name: &str) -> Option<&'static dyn Rule> {
-    REGISTRY.iter().copied().find(|r| r.name() == name)
+    crate::util::registry::lookup(REGISTRY, name).copied()
 }
 
 // ---- token-pattern helpers -------------------------------------------

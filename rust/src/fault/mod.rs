@@ -15,4 +15,6 @@ pub mod backoff;
 pub mod spec;
 
 pub use backoff::{backoff_us, RetryPolicy, MAX_RETRY_BUDGET};
-pub use spec::{FaultError, FaultEvent, FaultSpec, Injector, InjectorInfo, Side, REGISTRY};
+pub use spec::{
+    kind_names, lookup, FaultError, FaultEvent, FaultSpec, Injector, InjectorInfo, Side, REGISTRY,
+};

@@ -110,7 +110,7 @@ impl fmt::Display for FaultError {
                 write!(f, "malformed fault item '{item}': {detail}")
             }
             FaultError::UnknownKind(k) => {
-                let known: Vec<&str> = REGISTRY.iter().map(|i| i.kind).collect();
+                let known = crate::util::registry::names(REGISTRY);
                 write!(f, "unknown fault kind '{k}' (known: {})", known.join(", "))
             }
             FaultError::UnknownParam { kind, param } => {
@@ -154,6 +154,24 @@ pub static REGISTRY: &[InjectorInfo] = &[
         description: "net-rpc link degradation: response loss probability P + U us added latency",
     },
 ];
+
+// The injector catalog resolves by kind through the shared registry
+// helper, like schedulers, queue disciplines, and lint rules.
+impl crate::util::registry::Entry for InjectorInfo {
+    fn name(&self) -> &'static str {
+        self.kind
+    }
+}
+
+/// Look an injector kind up in the catalog.
+pub fn lookup(kind: &str) -> Option<&'static InjectorInfo> {
+    crate::util::registry::lookup(REGISTRY, kind)
+}
+
+/// The known injector kinds, catalog order.
+pub fn kind_names() -> Vec<&'static str> {
+    crate::util::registry::names(REGISTRY)
+}
 
 fn parse_f64(what: &str, raw: &str) -> Result<f64, FaultError> {
     raw.parse::<f64>().map_err(|_| FaultError::BadValue {
@@ -278,11 +296,13 @@ fn parse_item(item: &str) -> Result<FaultEvent, FaultError> {
     let at_s = parse_f64("fault time", at_raw)?;
     let params = parse_params(item, params_raw)?;
 
-    let injector = match kind {
-        "fail" => build_fail(&params)?,
-        "brownout" => build_brownout(&params)?,
-        "link" => build_link(&params)?,
-        other => return Err(FaultError::UnknownKind(other.to_string())),
+    // the catalog gates what parses: an item whose kind is not
+    // registered (or has no builder arm) is rejected the same way
+    let injector = match lookup(kind).map(|i| i.kind) {
+        Some("fail") => build_fail(&params)?,
+        Some("brownout") => build_brownout(&params)?,
+        Some("link") => build_link(&params)?,
+        _ => return Err(FaultError::UnknownKind(kind.to_string())),
     };
     Ok(FaultEvent { at_s, injector })
 }
@@ -460,7 +480,10 @@ mod tests {
             for other in &REGISTRY[i + 1..] {
                 assert_ne!(info.kind, other.kind);
             }
+            assert_eq!(lookup(info.kind).map(|i| i.kind), Some(info.kind));
         }
+        assert!(lookup("zap").is_none());
+        assert_eq!(kind_names(), vec!["fail", "brownout", "link"]);
         // every registry kind appears in the grammar the parser accepts
         for probe in ["fail@0:pool=dpu", "brownout@0:pool=dpu,factor=2,for=1", "link@0:loss=0,for=1"] {
             assert!(FaultSpec::parse(probe).is_ok(), "{probe}");

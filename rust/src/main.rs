@@ -67,9 +67,11 @@ fn run(args: Vec<String>) -> anyhow::Result<ExitCode> {
 }
 
 fn print_help() {
-    // the policy and rule lists are generated from their registries, so
-    // help text cannot drift from what `--policy` / `--rule` accept
+    // the policy, queue, and rule lists are generated from their
+    // registries, so help text cannot drift from what `--policy` /
+    // `--queue` / `--rule` accept
     let policies = dpbento::serve::scheduler::help_names();
+    let queues = dpbento::serve::queue::help_names();
     let rules = dpbento::analysis::REGISTRY
         .iter()
         .map(|r| format!("  {:26} {}", r.name(), r.summary()))
@@ -88,7 +90,8 @@ USAGE:
                 [--trace FILE] [--log-level LVL]
   dpbento serve [--platforms bf2,bf3] [--policy all|{policies}]
                 [--workload mixed|analytics|index_get|net_rpc] [--loads 0.2,0.5,0.8,1.0,1.2]
-                [--closed-loop N,N,...] [--max-batch N] [--linger-us F]
+                [--closed-loop N,N,...] [--queue {queues}] [--max-batch N]
+                [--hetero-batch] [--linger-us F|auto]
                 [--slo US | --slo class=US,...] [--dpu-fraction F] [--json FILE]
                 [--faults SPEC] [--timeout-us F] [--retries N]
                 [--requests N] [--seed N] [--trace FILE] [--log-level LVL]
@@ -108,10 +111,20 @@ SERVING:
   as the `serving` task (see `dpbento list-tasks`).
   --closed-loop N,N,...  sweep closed-loop client counts instead of
                          offered load (fixed population, think time 0)
+  --queue NAME           per-core queue discipline ({queues}): `edf`
+                         drains the earliest absolute deadline
+                         (arrival + class SLO) first, with deterministic
+                         tie-breaks; default fifo
   --max-batch N          DPU-side per-class batch accumulators: flush at
                          N requests; a batch of N costs setup + N*marginal
                          (1 = batching off)
-  --linger-us F          partial-batch linger deadline in microseconds
+  --hetero-batch         share one mixed-class accumulator: a batch costs
+                         the max member-class setup plus summed per-class
+                         marginals
+  --linger-us F|auto     partial-batch linger deadline in microseconds;
+                         `auto` hands the window to a deterministic AIMD
+                         controller driven by flush fullness and
+                         deadline slack
   --slo SPEC             per-class latency SLOs: a single number applies
                          to every class; 'class=US' entries override the
                          default 10x-host-mean headroom per class
@@ -295,8 +308,8 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
     use dpbento::platform::PlatformId;
     use dpbento::fault::FaultSpec;
     use dpbento::serve::{
-        capacity_rps, host_only_capacity_rps, render_sweep, scheduler, sweep, sweep_closed,
-        sweep_to_json, Mix, ServeConfig,
+        capacity_rps, host_only_capacity_rps, queue, render_sweep, run_sweep, scheduler,
+        sweep_to_json, Mix, ServeConfig, SweepSpec,
     };
     use dpbento::util::json::Value;
 
@@ -359,14 +372,29 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
         (1..=4096).contains(&max_batch),
         "--max-batch must be in 1..=4096"
     );
-    let linger_us = take_opt(&mut args, "--linger-us")
-        .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --linger-us")))
-        .transpose()?
-        .unwrap_or(20.0);
+    let (linger_us, auto_linger) = match take_opt(&mut args, "--linger-us").as_deref() {
+        Some("auto") => (0.0, true),
+        Some(s) => (
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad --linger-us (want microseconds or 'auto')"))?,
+            false,
+        ),
+        None => (20.0, false),
+    };
     anyhow::ensure!(
         linger_us >= 0.0 && linger_us.is_finite(),
         "--linger-us must be finite and >= 0"
     );
+    let qinfo = match take_opt(&mut args, "--queue") {
+        Some(s) => queue::lookup(&s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --queue '{s}' (available: {})",
+                queue::help_names()
+            )
+        })?,
+        None => queue::fifo_info(),
+    };
+    let hetero_batch = take_flag(&mut args, "--hetero-batch");
     let slos = take_opt(&mut args, "--slo").map(|s| parse_slos(&s)).transpose()?;
     let dpu_fraction = take_opt(&mut args, "--dpu-fraction")
         .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad --dpu-fraction")))
@@ -432,12 +460,12 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
             cfg.total_requests = requests;
             cfg.max_batch = max_batch;
             cfg.linger_us = linger_us;
+            cfg.auto_linger = auto_linger;
+            cfg.queue = qinfo.name;
+            cfg.hetero_batch = hetero_batch;
             cfg.dpu_fraction = dpu_fraction;
             if let Some(s) = slos {
                 cfg.slos = s;
-            }
-            if let Some(f) = &faults {
-                cfg.faults = f.clone();
             }
             if timeout_us > 0.0 {
                 cfg.retry.timeout_us = timeout_us;
@@ -448,17 +476,22 @@ fn cmd_serve(mut args: Vec<String>) -> anyhow::Result<ExitCode> {
             cfg.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
             let host_cap = host_only_capacity_rps(&cfg);
             dpbento::log_debug!("sweeping {} under {}", platform, info.name);
-            let points = match &closed_loop {
-                Some(clients) => sweep_closed(&cfg, clients, &obs),
+            let mut spec = match &closed_loop {
+                Some(clients) => SweepSpec::closed(clients),
                 None => {
                     let rates: Vec<f64> = loads.iter().map(|l| l * host_cap).collect();
-                    sweep(&cfg, &rates, &obs)
+                    SweepSpec::open(&rates)
                 }
             };
+            if let Some(f) = &faults {
+                spec = spec.with_faults(f.clone());
+            }
+            let points = run_sweep(&cfg, &spec, &obs);
             let title = format!(
-                "{} · {} (capacity {:.0}/s, host-only {:.0}/s)",
+                "{} · {} · {} (capacity {:.0}/s, host-only {:.0}/s)",
                 platform,
                 info.name,
+                qinfo.name,
                 capacity_rps(&cfg),
                 host_cap
             );

@@ -1,9 +1,12 @@
 //! Throughput–latency reporting: turn raw [`ServeOutcome`]s into the
 //! curves the serving question is actually about — offered load vs
 //! achieved throughput, SLO-constrained *goodput*, avg/p95/p99 latency,
-//! per-class violation rates, and how much host CPU the placement
-//! scheduler freed.
+//! per-class violation and deadline-miss rates, batch flush fullness,
+//! and how much host CPU the placement scheduler freed. Every sweep —
+//! open-loop, closed-loop, faulted or not — routes through one entry
+//! point, [`run_sweep`], driven by a declarative [`SweepSpec`].
 
+use crate::fault::FaultSpec;
 use crate::obs::Obs;
 use crate::platform::PlatformId;
 use crate::util::json::Value;
@@ -31,6 +34,12 @@ pub struct ClassPoint {
     /// Fraction of the class's arrivals that missed its SLO (late,
     /// rejected, timed out, or shed). 0 when the class saw no traffic.
     pub violation_rate: f64,
+    /// Fraction of the class's *completions* that finished past their
+    /// absolute deadline (`arrival + class SLO`, the `edf` drain key).
+    /// Denominator is completions — unlike `violation_rate` this isolates
+    /// queue-discipline quality from admission/shed effects. 0 when the
+    /// class completed nothing.
+    pub deadline_miss_rate: f64,
     /// completed / arrived for the class (1.0 with no traffic).
     pub availability: f64,
 }
@@ -69,11 +78,29 @@ pub struct LoadPoint {
     /// Host CPU spent per completed request (µs) — the "host CPU freed"
     /// axis: compare against the host-only scheduler's value.
     pub host_cpu_us_per_req: f64,
+    /// Mean batch-flush fill fraction, `flushed_jobs / (batches_flushed
+    /// * max_batch)` — the signal the `--linger-us auto` controller
+    /// chases (0 when no batches flushed).
+    pub flush_fullness: f64,
     /// Closed-loop client count, when this point came from a closed-loop
     /// run (`None` on open-loop sweeps).
     pub clients: Option<u32>,
     /// One entry per [`RequestClass::ALL`] member, in that order.
     pub per_class: Vec<ClassPoint>,
+}
+
+impl LoadPoint {
+    /// Aggregate deadline-miss rate across classes: completions past
+    /// their absolute deadline / completions (0 when nothing completed).
+    pub fn deadline_miss_rate(&self) -> f64 {
+        let completed: u64 = self.per_class.iter().map(|c| c.completed).sum();
+        let slo_met: u64 = self.per_class.iter().map(|c| c.slo_met).sum();
+        if completed > 0 {
+            (completed - slo_met) as f64 / completed as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Summarize one run into a curve point.
@@ -110,6 +137,11 @@ pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoi
             0.0
         },
         host_cpu_us_per_req: out.host_busy_s * 1e6 / out.completed.max(1) as f64,
+        flush_fullness: if out.batches_flushed > 0 {
+            out.flushed_jobs as f64 / (out.batches_flushed * cfg.max_batch.max(1) as u64) as f64
+        } else {
+            0.0
+        },
         clients: match cfg.arrivals {
             Arrivals::ClosedLoop { clients, .. } => Some(clients),
             _ => None,
@@ -128,6 +160,13 @@ pub fn point(cfg: &ServeConfig, offered_rps: f64, out: &ServeOutcome) -> LoadPoi
                 slo_met: c.slo_met,
                 violation_rate: if c.arrived > 0 {
                     (c.arrived - c.slo_met) as f64 / c.arrived as f64
+                } else {
+                    0.0
+                },
+                // a completion past its deadline is exactly a completion
+                // past its SLO: deadline_s = arrival + SLO by construction
+                deadline_miss_rate: if c.completed > 0 {
+                    (c.completed - c.slo_met) as f64 / c.completed as f64
                 } else {
                     0.0
                 },
@@ -166,67 +205,104 @@ pub fn host_only_capacity_rps(cfg: &ServeConfig) -> f64 {
     capacity_rps(&c)
 }
 
-/// Run an offered-load sweep: one open-loop Poisson run per rate. Each
-/// rate runs under a wall-clock span (how long the sweep point took to
-/// simulate) while the per-request lifecycle spans and serving metrics
-/// land on `obs` in sim-time; pass [`Obs::disabled`] for a plain sweep.
-pub fn sweep(base: &ServeConfig, offered_rps: &[f64], obs: &Obs) -> Vec<LoadPoint> {
-    offered_rps
-        .iter()
-        .map(|&rate| {
-            let mut cfg = base.clone();
-            cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
-            let span = obs.tracer.span("sweep", format!("offered {rate:.0} rps"));
-            let out = run_serve(&cfg, obs);
-            span.attr_num("completed", out.completed as f64);
-            span.attr_num("rejected", out.rejected as f64);
-            drop(span);
-            point(&cfg, rate, &out)
-        })
-        .collect()
+/// The swept axis of a serving sweep: offered open-loop Poisson rates, or
+/// closed-loop client populations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepAxis {
+    /// One open-loop run per offered rate (requests/second).
+    OpenLoop(Vec<f64>),
+    /// One fixed-population run per client count (think time taken from
+    /// the base config when it is already closed-loop).
+    ClosedLoop(Vec<u32>),
 }
 
-/// Run an offered-load sweep with a fault scenario injected into every
-/// point (`dpbento serve --faults`): each rate serves the same
-/// deterministic chaos, so the curves compare how schedulers degrade —
-/// availability, timeouts, sheds — not just where their knees sit.
-pub fn sweep_faulted(
-    base: &ServeConfig,
-    offered_rps: &[f64],
-    faults: &crate::fault::FaultSpec,
-    obs: &Obs,
-) -> Vec<LoadPoint> {
-    let mut cfg = base.clone();
-    cfg.faults = faults.clone();
-    sweep(&cfg, offered_rps, obs)
+/// Declarative description of a serving sweep — axis plus optional fault
+/// scenario — consumed by [`run_sweep`], the single entry point that
+/// replaced the `sweep` / `sweep_faulted` / `sweep_closed` triplet (the
+/// three shared everything but the axis iteration, and CLI/task/bench
+/// callers had started re-wrapping them inconsistently).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub axis: SweepAxis,
+    /// Deterministic fault scenario injected into every point, so the
+    /// curves compare how schedulers degrade — availability, timeouts,
+    /// sheds — not just where their knees sit. `None` = fault-free.
+    pub faults: Option<FaultSpec>,
 }
 
-/// Run a closed-loop sweep: one fixed-population run per client count
-/// (think time taken from `base` when it is already closed-loop). The
-/// reported `offered_rps` is the achieved rate — a closed loop offers
-/// exactly what it completes — and `clients` carries the swept value.
-pub fn sweep_closed(base: &ServeConfig, clients: &[u32], obs: &Obs) -> Vec<LoadPoint> {
-    let think_s = match base.arrivals {
-        Arrivals::ClosedLoop { think_s, .. } => think_s,
-        _ => 0.0,
+impl SweepSpec {
+    /// An open-loop offered-load sweep.
+    pub fn open(offered_rps: &[f64]) -> SweepSpec {
+        SweepSpec {
+            axis: SweepAxis::OpenLoop(offered_rps.to_vec()),
+            faults: None,
+        }
+    }
+
+    /// A closed-loop client-population sweep.
+    pub fn closed(clients: &[u32]) -> SweepSpec {
+        SweepSpec {
+            axis: SweepAxis::ClosedLoop(clients.to_vec()),
+            faults: None,
+        }
+    }
+
+    /// Inject `faults` into every point of the sweep.
+    pub fn with_faults(mut self, faults: FaultSpec) -> SweepSpec {
+        self.faults = Some(faults);
+        self
+    }
+}
+
+/// Run a sweep described by `spec`: one serving run per axis value. Each
+/// point runs under a wall-clock span (how long it took to simulate)
+/// while the per-request lifecycle spans and serving metrics land on
+/// `obs` in sim-time; pass [`Obs::disabled`] for a plain sweep. For
+/// closed-loop points the reported `offered_rps` is the achieved rate —
+/// a closed loop offers exactly what it completes — and `clients`
+/// carries the swept value.
+pub fn run_sweep(base: &ServeConfig, spec: &SweepSpec, obs: &Obs) -> Vec<LoadPoint> {
+    let mut base = base.clone();
+    if let Some(f) = &spec.faults {
+        base.faults = f.clone();
+    }
+    let one = |cfg: &ServeConfig, label: String| {
+        let span = obs.tracer.span("sweep", label);
+        let out = run_serve(cfg, obs);
+        span.attr_num("completed", out.completed as f64);
+        span.attr_num("rejected", out.rejected as f64);
+        out
     };
-    clients
-        .iter()
-        .map(|&k| {
-            let mut cfg = base.clone();
-            cfg.arrivals = Arrivals::ClosedLoop {
-                clients: k.max(1),
-                think_s,
+    match &spec.axis {
+        SweepAxis::OpenLoop(rates) => rates
+            .iter()
+            .map(|&rate| {
+                let mut cfg = base.clone();
+                cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
+                let out = one(&cfg, format!("offered {rate:.0} rps"));
+                point(&cfg, rate, &out)
+            })
+            .collect(),
+        SweepAxis::ClosedLoop(clients) => {
+            let think_s = match base.arrivals {
+                Arrivals::ClosedLoop { think_s, .. } => think_s,
+                _ => 0.0,
             };
-            let span = obs.tracer.span("sweep", format!("clients {k}"));
-            let out = run_serve(&cfg, obs);
-            span.attr_num("completed", out.completed as f64);
-            span.attr_num("rejected", out.rejected as f64);
-            drop(span);
-            let achieved = out.completed as f64 / out.elapsed_s.max(f64::MIN_POSITIVE);
-            point(&cfg, achieved, &out)
-        })
-        .collect()
+            clients
+                .iter()
+                .map(|&k| {
+                    let mut cfg = base.clone();
+                    cfg.arrivals = Arrivals::ClosedLoop {
+                        clients: k.max(1),
+                        think_s,
+                    };
+                    let out = one(&cfg, format!("clients {k}"));
+                    let achieved = out.completed as f64 / out.elapsed_s.max(f64::MIN_POSITIVE);
+                    point(&cfg, achieved, &out)
+                })
+                .collect()
+        }
+    }
 }
 
 /// Render a sweep as an aligned text table (the CLI/report surface). The
@@ -236,7 +312,7 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
     let closed = points.iter().any(|p| p.clients.is_some());
     let mut out = format!("== {title} ==\n");
     out.push_str(&format!(
-        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}\n",
+        "{:>12} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}\n",
         if closed { "clients" } else { "offered/s" },
         "achieved/s",
         "goodput/s",
@@ -244,12 +320,14 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
         "p95_us",
         "p99_us",
         "slo_viol",
+        "dl_miss",
         "reject",
         "avail",
         "t_out",
         "shed",
         "host_bz",
-        "dpu_bz"
+        "dpu_bz",
+        "flush"
     ));
     for p in points {
         let axis = match p.clients {
@@ -257,7 +335,7 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
             None => format!("{:.0}", p.offered_rps),
         };
         out.push_str(&format!(
-            "{:>12} {:>12.0} {:>10.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
+            "{:>12} {:>12.0} {:>10.0} {:>10.1} {:>10.1} {:>10.1} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}\n",
             axis,
             p.achieved_rps,
             p.goodput_rps,
@@ -265,12 +343,14 @@ pub fn render_sweep(title: &str, points: &[LoadPoint]) -> String {
             p.p95_us,
             p.p99_us,
             p.slo_violation_rate,
+            p.deadline_miss_rate(),
             p.rejected_frac,
             p.availability,
             p.timed_out_frac,
             p.shed_frac,
             p.host_busy_frac,
             p.dpu_busy_frac,
+            p.flush_fullness,
         ));
     }
     out
@@ -295,6 +375,14 @@ pub fn sweep_to_json(title: &str, scheduler: &str, points: &[LoadPoint]) -> Valu
                     (
                         "slo_violation_rate".to_string(),
                         Value::num(p.slo_violation_rate),
+                    ),
+                    (
+                        "deadline_miss_rate".to_string(),
+                        Value::num(p.deadline_miss_rate()),
+                    ),
+                    (
+                        "flush_fullness".to_string(),
+                        Value::num(p.flush_fullness),
                     ),
                     ("rejected_frac".to_string(), Value::num(p.rejected_frac)),
                     ("availability".to_string(), Value::num(p.availability)),
@@ -327,6 +415,10 @@ pub fn sweep_to_json(title: &str, scheduler: &str, points: &[LoadPoint]) -> Valu
                                 (
                                     "violation_rate".to_string(),
                                     Value::num(c.violation_rate),
+                                ),
+                                (
+                                    "deadline_miss_rate".to_string(),
+                                    Value::num(c.deadline_miss_rate),
                                 ),
                                 (
                                     "availability".to_string(),
@@ -411,7 +503,7 @@ mod tests {
         let mut base = cfg("host-only");
         base.total_requests = 800;
         let rates = [1000.0, 2000.0];
-        let pts = sweep(&base, &rates, &Obs::disabled());
+        let pts = run_sweep(&base, &SweepSpec::open(&rates), &Obs::disabled());
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].offered_rps, 1000.0);
         assert_eq!(pts[1].offered_rps, 2000.0);
@@ -430,6 +522,8 @@ mod tests {
         let rendered = render_sweep("t", &pts);
         assert!(rendered.contains("offered/s"));
         assert!(rendered.contains("goodput/s"));
+        assert!(rendered.contains("dl_miss"));
+        assert!(rendered.contains("flush"));
         assert!(rendered.lines().count() == 4);
     }
 
@@ -437,7 +531,7 @@ mod tests {
     fn closed_sweep_reports_clients() {
         let mut base = cfg("queue-aware");
         base.total_requests = 600;
-        let pts = sweep_closed(&base, &[4, 16], &Obs::disabled());
+        let pts = run_sweep(&base, &SweepSpec::closed(&[4, 16]), &Obs::disabled());
         assert_eq!(pts.len(), 2);
         assert_eq!(pts[0].clients, Some(4));
         assert_eq!(pts[1].clients, Some(16));
@@ -452,6 +546,8 @@ mod tests {
         assert!(json.contains("\"per_class\""));
         assert!(json.contains("\"slo_met\""));
         assert!(json.contains("\"violation_rate\""));
+        assert!(json.contains("\"deadline_miss_rate\""));
+        assert!(json.contains("\"flush_fullness\""));
         assert!(json.contains("\"clients\":4"));
     }
 
@@ -473,6 +569,7 @@ mod tests {
             dpu_served: 0,
             steals: 0,
             batches_flushed: 0,
+            flushed_jobs: 0,
             per_class: RequestClass::ALL
                 .iter()
                 .map(|c| ClassOutcome {
@@ -494,6 +591,13 @@ mod tests {
         assert_eq!(p.rejected_frac, 1.0);
         assert_eq!(p.availability, 0.0);
         assert_eq!(p.timed_out_frac, 0.0);
+        // nothing completed: deadline-miss and flush-fullness are defined 0
+        assert_eq!(p.deadline_miss_rate(), 0.0);
+        assert_eq!(p.flush_fullness, 0.0);
+        assert_eq!(
+            p.per_class[RequestClass::NetRpc.idx()].deadline_miss_rate,
+            0.0
+        );
         assert_eq!(p.per_class[RequestClass::NetRpc.idx()].violation_rate, 1.0);
         assert_eq!(p.per_class[RequestClass::NetRpc.idx()].availability, 0.0);
         assert_eq!(p.per_class[RequestClass::Analytics.idx()].violation_rate, 0.0);
@@ -509,7 +613,8 @@ mod tests {
         base.retry.budget = 2;
         let faults = crate::fault::FaultSpec::canned_dpu_failstop();
         let rate = 0.4 * host_only_capacity_rps(&base);
-        let pts = sweep_faulted(&base, &[rate], &faults, &Obs::disabled());
+        let spec = SweepSpec::open(&[rate]).with_faults(faults);
+        let pts = run_sweep(&base, &spec, &Obs::disabled());
         assert_eq!(pts.len(), 1);
         let p = &pts[0];
         assert!(p.faults_injected >= 1, "{p:?}");
@@ -520,7 +625,7 @@ mod tests {
             assert!(json.contains(field), "{field} missing from {json}");
         }
         // the same faulted point is byte-reproducible
-        let again = sweep_faulted(&base, &[rate], &faults, &Obs::disabled());
+        let again = run_sweep(&base, &spec, &Obs::disabled());
         assert_eq!(pts, again);
     }
 }

@@ -15,20 +15,29 @@
 //!    (`net::tcp`'s per-message stack cost);
 //!  - [`load`]: open-loop (Poisson / paced) and closed-loop
 //!    (fixed-concurrency) arrival generation, seeded via `util::rng::Pcg`;
-//!  - [`scheduler`]: host and DPU worker pools with per-core FIFO queues
-//!    of request batches, and the pluggable [`scheduler::Scheduler`] API —
+//!  - [`scheduler`]: host and DPU worker pools whose per-core backlogs
+//!    drain under a pluggable [`queue::QueueDiscipline`] (`fifo` | `edf`,
+//!    `--queue`), and the pluggable [`scheduler::Scheduler`] API —
 //!    decide-on-arrival, steal-on-idle, and batch-linger hooks — with the
 //!    built-in policies (host-only, dpu-only, static-split, queue-aware,
-//!    work-steal, slo-aware) registered by name in
+//!    work-steal, slo-aware, failover) registered by name in
 //!    [`scheduler::REGISTRY`];
+//!  - [`queue`]: the queue-discipline registry. `edf` drains each core's
+//!    earliest absolute deadline (arrival + class SLO) first with
+//!    deterministic tie-breaks;
 //!  - [`sim`]: the event loop driving everything through `sim::Engine`,
-//!    including DPU-side per-class batch accumulators (flush on full or
-//!    on linger-timer expiry) and deterministic work stealing — fully
-//!    deterministic under a fixed seed;
-//!  - [`metrics`]: throughput–latency curves (offered-load or closed-loop
-//!    client sweep → achieved throughput, SLO-constrained goodput,
-//!    avg/p95/p99 latency, per-class violation rates, host-CPU freed) via
-//!    `util::stats::Summary`;
+//!    including DPU-side batch accumulators (per class, or one shared
+//!    mixed-class accumulator under `--hetero-batch`; flush on full or on
+//!    linger-timer expiry, the window optionally walked by a
+//!    deterministic AIMD controller, `--linger-us auto`) and
+//!    deterministic work stealing — fully deterministic under a fixed
+//!    seed;
+//!  - [`metrics`]: throughput–latency curves via the single
+//!    [`metrics::run_sweep`] entry point ([`metrics::SweepSpec`]:
+//!    open-loop rates or closed-loop clients, optional fault scenario) —
+//!    achieved throughput, SLO-constrained goodput, avg/p95/p99 latency,
+//!    per-class violation and deadline-miss rates, flush fullness,
+//!    host-CPU freed — via `util::stats::Summary`;
 //!  - [`task`]: the `serving` coordinator task (registered in
 //!    `Registry::builtin`) and therefore the `dpbento serve` CLI surface.
 //!
@@ -37,10 +46,11 @@
 //! degradation — with per-attempt timeouts and budgeted retries, and the
 //! `failover` scheduler circuit-breaks a broken pool onto the survivor.
 //! Chaos runs report availability and timed-out/shed/retry accounting
-//! per class ([`metrics::sweep_faulted`], `dpbento serve --faults`).
+//! per class ([`SweepSpec::with_faults`], `dpbento serve --faults`).
 
 pub mod load;
 pub mod metrics;
+pub mod queue;
 pub mod request;
 pub mod scheduler;
 pub mod sim;
@@ -48,9 +58,10 @@ pub mod task;
 
 pub use load::Arrivals;
 pub use metrics::{
-    capacity_rps, host_only_capacity_rps, point, render_sweep, sweep, sweep_closed,
-    sweep_faulted, sweep_to_json, ClassPoint, LoadPoint,
+    capacity_rps, host_only_capacity_rps, point, render_sweep, run_sweep, sweep_to_json,
+    ClassPoint, LoadPoint, SweepAxis, SweepSpec,
 };
+pub use queue::{QueueDiscipline, QueueInfo};
 pub use request::{ClassSlos, Mix, RequestClass, ServiceJitter};
 pub use scheduler::{Batch, FailAction, Pool, PoolSel, SchedCtx, Scheduler, SchedulerInfo};
 pub use sim::{run_serve, ClassOutcome, ConfigError, ServeConfig, ServeOutcome};

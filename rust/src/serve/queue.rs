@@ -1,0 +1,320 @@
+//! Pluggable per-core queue discipline (DESIGN.md §7): the order a
+//! core's backlog of [`Batch`]es drains in, factored out of `Core` so
+//! deadline-aware draining is a config axis (`--queue`) instead of a
+//! hardcoded `VecDeque`. Two built-ins register by name:
+//!
+//!  - `fifo` — arrival order, v2's behavior and still the default;
+//!  - `edf` — earliest-deadline-first: pop the batch whose earliest
+//!    member deadline (`Job::deadline_s` = logical arrival + class SLO)
+//!    is smallest. Ties break deterministically on (class index of the
+//!    earliest-deadline member, push sequence number), so reruns are
+//!    byte-identical and equal-deadline batches still drain in arrival
+//!    order. Under overload this drains tight-SLO work first, which is
+//!    what moves SLO-constrained goodput past the capacity knee.
+//!
+//! Depth accounting ([`QueueDiscipline::peek_depth`]) counts batch
+//! *members*, matching admission control and steal-victim selection —
+//! those stay discipline-independent; only the drain order varies.
+
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+
+use crate::util::registry::{self, Entry};
+
+use super::scheduler::Batch;
+
+/// The drain-order contract for one core's backlog. Implementations must
+/// be deterministic: same push sequence, same pop sequence — no clocks,
+/// no RNG (the lint rules enforce the primitives).
+pub trait QueueDiscipline: std::fmt::Debug {
+    /// Registry name of this discipline (trace/debug labels).
+    fn name(&self) -> &'static str;
+
+    /// Enqueue one batch.
+    fn push(&mut self, batch: Batch);
+
+    /// Dequeue the next batch in discipline order.
+    fn pop(&mut self) -> Option<Batch>;
+
+    /// Queued requests (batch members, not batches) — the unit admission
+    /// control and steal-victim selection price in.
+    fn peek_depth(&self) -> usize;
+
+    /// Queued batches.
+    fn batch_count(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.batch_count() == 0
+    }
+}
+
+/// Arrival-order draining (the default; v2's hardcoded behavior).
+#[derive(Debug, Default)]
+struct Fifo {
+    items: VecDeque<Batch>,
+}
+
+impl QueueDiscipline for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn push(&mut self, batch: Batch) {
+        self.items.push_back(batch);
+    }
+    fn pop(&mut self) -> Option<Batch> {
+        self.items.pop_front()
+    }
+    fn peek_depth(&self) -> usize {
+        self.items.iter().map(Batch::len).sum()
+    }
+    fn batch_count(&self) -> usize {
+        self.items.len()
+    }
+}
+
+/// Earliest-deadline-first draining. O(n) scan per pop — backlogs are
+/// bounded by `queue_cap`, and a scan keeps the tie-break transparent
+/// (a binary heap would need a total wrapper ordering to stay stable).
+#[derive(Debug, Default)]
+struct Edf {
+    /// `(push sequence, batch)` — the sequence is the final tie-break,
+    /// so equal (deadline, class) batches drain in arrival order.
+    items: Vec<(u64, Batch)>,
+    seq: u64,
+}
+
+impl Edf {
+    /// Strict "drains before" order: (earliest deadline, class index of
+    /// the earliest-deadline member, push sequence).
+    fn drains_before(a: &(u64, Batch), b: &(u64, Batch)) -> bool {
+        use std::cmp::Ordering;
+        match a.1.earliest_deadline_s().total_cmp(&b.1.earliest_deadline_s()) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => match a.1.tie_class_idx().cmp(&b.1.tie_class_idx()) {
+                Ordering::Less => true,
+                Ordering::Greater => false,
+                Ordering::Equal => a.0 < b.0,
+            },
+        }
+    }
+}
+
+impl QueueDiscipline for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+    fn push(&mut self, batch: Batch) {
+        self.items.push((self.seq, batch));
+        self.seq += 1;
+    }
+    fn pop(&mut self) -> Option<Batch> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for i in 1..self.items.len() {
+            if Self::drains_before(&self.items[i], &self.items[best]) {
+                best = i;
+            }
+        }
+        Some(self.items.remove(best).1)
+    }
+    fn peek_depth(&self) -> usize {
+        self.items.iter().map(|(_, b)| b.len()).sum()
+    }
+    fn batch_count(&self) -> usize {
+        self.items.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// One registry entry: canonical name, accepted aliases, one-line doc,
+/// and the builder (one fresh instance per core).
+pub struct QueueInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub description: &'static str,
+    builder: fn() -> Box<dyn QueueDiscipline>,
+}
+
+impl QueueInfo {
+    /// Instantiate this discipline for one core.
+    pub fn build(&self) -> Box<dyn QueueDiscipline> {
+        (self.builder)()
+    }
+}
+
+impl Entry for QueueInfo {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        self.aliases
+    }
+}
+
+fn build_fifo() -> Box<dyn QueueDiscipline> {
+    Box::new(Fifo::default())
+}
+fn build_edf() -> Box<dyn QueueDiscipline> {
+    Box::new(Edf::default())
+}
+
+/// The built-in queue disciplines. `fifo` first: it is the default and
+/// [`fifo_info`] leans on the position.
+pub static REGISTRY: &[QueueInfo] = &[
+    QueueInfo {
+        name: "fifo",
+        aliases: &["fcfs"],
+        description: "drain each core's backlog in arrival order (default)",
+        builder: build_fifo,
+    },
+    QueueInfo {
+        name: "edf",
+        aliases: &["deadline", "earliest-deadline-first"],
+        description: "drain earliest absolute deadline (arrival + class SLO) first",
+        builder: build_edf,
+    },
+];
+
+/// Look a discipline up by canonical name or alias.
+pub fn lookup(name: &str) -> Option<&'static QueueInfo> {
+    registry::lookup(REGISTRY, name)
+}
+
+/// Canonical names, registry order.
+pub fn names() -> Vec<&'static str> {
+    registry::names(REGISTRY)
+}
+
+/// `fifo|edf|…` — generated help text for `--queue`.
+pub fn help_names() -> &'static str {
+    static HELP: OnceLock<String> = OnceLock::new();
+    HELP.get_or_init(|| registry::help_names(REGISTRY))
+}
+
+/// The default (FIFO) registry entry.
+pub fn fifo_info() -> &'static QueueInfo {
+    &REGISTRY[0]
+}
+
+/// A fresh default (FIFO) queue — `Core::default()`'s backlog.
+pub fn fifo() -> Box<dyn QueueDiscipline> {
+    fifo_info().build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::request::RequestClass;
+    use super::super::scheduler::Job;
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn job(id: u64, class: RequestClass, deadline_s: f64) -> Job {
+        Job {
+            id,
+            class,
+            arrived_s: 0.0,
+            service_s: 1.0,
+            attempt: 0,
+            lost: false,
+            deadline_s,
+        }
+    }
+
+    fn first_id(b: &Batch) -> u64 {
+        b.jobs()[0].id
+    }
+
+    #[test]
+    fn fifo_preserves_push_order() {
+        let mut q = build_fifo();
+        for i in 0..5u64 {
+            q.push(Batch::single(job(i, RequestClass::IndexGet, 5.0 - i as f64)));
+        }
+        assert_eq!(q.batch_count(), 5);
+        assert_eq!(q.peek_depth(), 5);
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop().map(|b| first_id(&b))).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "fifo ignores deadlines");
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn edf_pops_are_deadline_sorted_with_deterministic_tie_breaks() {
+        // shuffled deadlines, duplicate deadlines across classes, and
+        // duplicate (deadline, class) pairs — the full tie-break ladder
+        let mut rng = Pcg::new(42);
+        let mut q = build_edf();
+        let mut expect: Vec<(u64, usize, u64)> = Vec::new(); // sort key per push
+        for i in 0..64u64 {
+            let class = RequestClass::ALL[(rng.f64() * 3.0) as usize % RequestClass::COUNT];
+            // coarse deadlines force plenty of exact ties
+            let deadline = (rng.f64() * 8.0).floor();
+            q.push(Batch::single(job(i, class, deadline)));
+            expect.push((deadline as u64, class.idx(), i));
+        }
+        expect.sort();
+        let popped: Vec<u64> = std::iter::from_fn(|| q.pop().map(|b| first_id(&b))).collect();
+        let want: Vec<u64> = expect.iter().map(|&(_, _, seq)| seq).collect();
+        assert_eq!(popped, want, "(deadline, class_idx, push seq) order");
+    }
+
+    #[test]
+    fn edf_uses_the_earliest_member_deadline_of_a_batch() {
+        let mut q = build_edf();
+        // a flushed batch whose *second* member is the urgent one
+        q.push(Batch::new(
+            vec![
+                job(0, RequestClass::Analytics, 9.0),
+                job(1, RequestClass::IndexGet, 1.0),
+            ],
+            2.0,
+        ));
+        q.push(Batch::single(job(2, RequestClass::NetRpc, 3.0)));
+        assert_eq!(q.peek_depth(), 3, "members, not batches");
+        assert_eq!(q.batch_count(), 2);
+        let first = q.pop().expect("two batches queued");
+        assert_eq!(first_id(&first), 0, "batch with the 1.0 deadline member wins");
+        assert_eq!(first.earliest_deadline_s(), 1.0);
+        assert_eq!(first.tie_class_idx(), RequestClass::IndexGet.idx());
+    }
+
+    #[test]
+    fn edf_is_byte_deterministic_across_reruns() {
+        let run = || {
+            let mut rng = Pcg::new(7);
+            let mut q = build_edf();
+            for i in 0..40u64 {
+                let class = RequestClass::ALL[(i % 3) as usize];
+                q.push(Batch::single(job(i, class, (rng.f64() * 4.0).floor())));
+            }
+            std::iter::from_fn(|| q.pop().map(|b| first_id(&b))).collect::<Vec<u64>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn registry_names_roundtrip_with_aliases() {
+        for info in REGISTRY {
+            let built = info.build();
+            assert_eq!(built.name(), info.name, "builder/name agreement");
+            assert_eq!(lookup(info.name).map(|i| i.name), Some(info.name));
+            for alias in info.aliases {
+                assert_eq!(lookup(alias).map(|i| i.name), Some(info.name), "{alias}");
+            }
+            assert!(!info.description.is_empty());
+        }
+        assert!(lookup("lifo").is_none());
+        assert_eq!(names(), vec!["fifo", "edf"]);
+        for n in names() {
+            assert!(help_names().contains(n), "{n} missing from {}", help_names());
+        }
+        assert_eq!(fifo_info().name, "fifo");
+        assert_eq!(fifo().name(), "fifo");
+    }
+}

@@ -137,6 +137,28 @@ impl ClassSlos {
         self.us[class.idx()]
     }
 
+    /// Absolute deadline (seconds on the sim clock) of a request of
+    /// `class` that arrived at `arrived_s`. This is *the* deadline
+    /// definition in the serving layer — the EDF queue discipline drains
+    /// by it, deadline-miss accounting checks against it, and it is fixed
+    /// at first arrival (retries do not extend it).
+    pub fn deadline_s(&self, class: RequestClass, arrived_s: f64) -> f64 {
+        arrived_s + self.get(class) * 1e-6
+    }
+
+    /// The tightest (smallest) target across all classes (µs) — the bound
+    /// the auto-linger controller caps its window against, since any
+    /// lingered request of the tightest class pays the window in full.
+    pub fn tightest_us(&self) -> f64 {
+        let mut min = self.us[0];
+        for &us in &self.us[1..] {
+            if us < min {
+                min = us;
+            }
+        }
+        min
+    }
+
     /// All targets as a `RequestClass::idx`-indexed array (µs) — the shape
     /// `SchedCtx` carries so schedulers can rank classes by SLO priority.
     pub fn to_us_array(&self) -> [f64; RequestClass::COUNT] {
@@ -398,6 +420,10 @@ mod tests {
         u.set(RequestClass::NetRpc, 50.0);
         assert_eq!(u.get(RequestClass::NetRpc), 50.0);
         assert_eq!(u.get(RequestClass::IndexGet), 250.0);
+        assert_eq!(u.tightest_us(), 50.0);
+        // deadline = arrival + SLO (µs -> s), per class
+        assert!((u.deadline_s(RequestClass::NetRpc, 2.0) - 2.000_05).abs() < 1e-12);
+        assert!((u.deadline_s(RequestClass::Analytics, 0.0) - 250.0e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Placement scheduling: worker pools, per-core FIFO queues of request
-//! batches, and the pluggable [`Scheduler`] API that decides host vs DPU.
+//! Placement scheduling: worker pools, per-core queues of request
+//! batches drained under a pluggable [`QueueDiscipline`], and the
+//! pluggable [`Scheduler`] API that decides host vs DPU.
 //!
 //! v2 replaces the closed `Policy` enum + free `route()` function with a
 //! trait + registry: a scheduler is an object with three lifecycle hooks —
@@ -39,13 +40,14 @@
 //!    ratio), and sheds the loosest-SLO class while a brownout window
 //!    is open.
 
-use std::collections::VecDeque;
 use std::sync::OnceLock;
 
 use crate::platform::PlatformId;
 use crate::sim::engine::EventId;
+use crate::util::registry::{self, Entry};
 use crate::util::rng::Pcg;
 
+use super::queue::{self, QueueDiscipline, QueueInfo};
 use super::request::RequestClass;
 
 /// One admitted request.
@@ -68,18 +70,29 @@ pub struct Job {
     /// attempt's response is lost: it consumes service but fails at
     /// departure instead of completing.
     pub lost: bool,
+    /// Absolute latency deadline (virtual seconds): the *logical* arrival
+    /// plus the class SLO, fixed across retry attempts. The `edf` queue
+    /// discipline drains by this key; metrics count a completion past it
+    /// as a deadline miss.
+    pub deadline_s: f64,
 }
 
-/// The unit of per-core work: one or more same-class requests served as a
-/// single dispatch. Unbatched requests are batches of one, so the core
-/// and queue machinery has exactly one shape.
+/// The unit of per-core work: one or more requests served as a single
+/// dispatch. Unbatched requests are batches of one, so the core and
+/// queue machinery has exactly one shape. Fields are private behind a
+/// non-empty constructor: every accessor (`label`, `tie_class_idx`,
+/// `earliest_deadline_s`) may assume at least one job, which v2's
+/// `class()` silently didn't — it indexed `jobs[0]` and panicked on an
+/// empty batch. Batches are class-homogeneous per-class accumulators by
+/// default; the opt-in heterogeneous mode (`--hetero-batch`) mixes
+/// classes, so the class accessor is a histogram, not a scalar.
 #[derive(Debug, Clone)]
 pub struct Batch {
-    pub jobs: Vec<Job>,
+    jobs: Vec<Job>,
     /// Total service time of the batch on the pool that holds it
-    /// (`setup + Σ marginal` for flushed batches; the job's own sample
-    /// for singletons).
-    pub service_s: f64,
+    /// (`max setup + Σ marginal` for flushed batches; the job's own
+    /// sample for singletons).
+    service_s: f64,
 }
 
 impl Batch {
@@ -92,6 +105,14 @@ impl Batch {
         }
     }
 
+    /// A flushed accumulator's batch. The non-empty invariant lives here
+    /// — flush paths never construct batches from zero jobs, and every
+    /// downstream accessor relies on it.
+    pub fn new(jobs: Vec<Job>, service_s: f64) -> Batch {
+        assert!(!jobs.is_empty(), "a Batch carries at least one job");
+        Batch { jobs, service_s }
+    }
+
     pub fn len(&self) -> usize {
         self.jobs.len()
     }
@@ -100,17 +121,87 @@ impl Batch {
         self.jobs.is_empty()
     }
 
-    /// Class of the batch (batches are class-homogeneous).
-    pub fn class(&self) -> RequestClass {
-        self.jobs[0].class
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Mutable member access for re-pricing. A slice, not the `Vec`: the
+    /// non-empty invariant survives arbitrary element mutation.
+    pub fn jobs_mut(&mut self) -> &mut [Job] {
+        &mut self.jobs
+    }
+
+    /// Consume the batch at departure.
+    pub fn into_jobs(self) -> Vec<Job> {
+        self.jobs
+    }
+
+    pub fn service_s(&self) -> f64 {
+        self.service_s
+    }
+
+    pub fn set_service_s(&mut self, s: f64) {
+        self.service_s = s;
+    }
+
+    /// Scale the batch's total service (brownout inflation, re-pricing).
+    pub fn scale_service(&mut self, factor: f64) {
+        self.service_s *= factor;
+    }
+
+    /// Member count per request class (`RequestClass::idx` order) — the
+    /// generalization of v2's scalar `class()` now that heterogeneous
+    /// batches exist.
+    pub fn class_hist(&self) -> [u32; RequestClass::COUNT] {
+        let mut h = [0u32; RequestClass::COUNT];
+        for j in &self.jobs {
+            h[j.class.idx()] += 1;
+        }
+        h
+    }
+
+    /// Trace/span label: the class name for a homogeneous batch, `mixed`
+    /// for a heterogeneous one.
+    pub fn label(&self) -> &'static str {
+        let first = self.jobs[0].class;
+        if self.jobs.iter().all(|j| j.class == first) {
+            first.name()
+        } else {
+            "mixed"
+        }
+    }
+
+    /// Earliest absolute deadline across members — the EDF sort key.
+    pub fn earliest_deadline_s(&self) -> f64 {
+        self.jobs
+            .iter()
+            .map(|j| j.deadline_s)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Class index of the earliest-deadline member (first in insertion
+    /// order on exact ties) — the deterministic EDF tie-break between
+    /// batches with equal deadlines.
+    pub fn tie_class_idx(&self) -> usize {
+        let mut best = 0;
+        for i in 1..self.jobs.len() {
+            if self.jobs[i].deadline_s.total_cmp(&self.jobs[best].deadline_s)
+                == std::cmp::Ordering::Less
+            {
+                best = i;
+            }
+        }
+        self.jobs[best].class.idx()
     }
 }
 
-/// One worker core: the in-service batch plus its FIFO backlog.
+/// One worker core: the in-service batch plus its backlog, drained in
+/// whatever order the configured [`QueueDiscipline`] dictates (`fifo` by
+/// default, `edf` for deadline-ordered draining).
 #[derive(Debug)]
 pub struct Core {
     pub current: Option<Batch>,
-    pub queue: VecDeque<Batch>,
+    pub queue: Box<dyn QueueDiscipline>,
     /// False while a fail-stop injector holds this core down: a down core
     /// accepts no work and its in-flight/queued batches were evicted at
     /// kill time (DESIGN.md §11).
@@ -125,25 +216,32 @@ pub struct Core {
 
 impl Default for Core {
     fn default() -> Core {
+        Core::with_queue(queue::fifo())
+    }
+}
+
+impl Core {
+    /// A fresh core draining its backlog under `queue`.
+    pub fn with_queue(queue: Box<dyn QueueDiscipline>) -> Core {
         Core {
             current: None,
-            queue: VecDeque::new(),
+            queue,
             up: true,
             depart: None,
             started_s: 0.0,
         }
     }
-}
 
-impl Core {
     /// Requests on this core (in service + queued), counting batch members.
     pub fn depth(&self) -> usize {
         self.queued_requests() + self.current.as_ref().map_or(0, Batch::len)
     }
 
-    /// Requests waiting in this core's FIFO (batch members, not batches).
+    /// Requests waiting in this core's backlog (batch members, not
+    /// batches) — the unit admission control and victim selection price
+    /// in, whatever the drain order.
     pub fn queued_requests(&self) -> usize {
-        self.queue.iter().map(Batch::len).sum()
+        self.queue.peek_depth()
     }
 }
 
@@ -159,13 +257,19 @@ pub struct Pool {
 }
 
 impl Pool {
-    /// A pool with exactly `workers` cores. Zero workers is representable
-    /// (accessors are total) but rejected by `ServeConfig::validate` —
-    /// the config parse surfaces are where the error belongs.
+    /// A pool with exactly `workers` cores draining FIFO. Zero workers is
+    /// representable (accessors are total) but rejected by
+    /// `ServeConfig::validate` — the config parse surfaces are where the
+    /// error belongs.
     pub fn new(platform: PlatformId, workers: u32) -> Pool {
+        Pool::with_queue(platform, workers, queue::fifo_info())
+    }
+
+    /// A pool whose cores drain under the named queue discipline.
+    pub fn with_queue(platform: PlatformId, workers: u32, q: &QueueInfo) -> Pool {
         Pool {
             platform,
-            cores: (0..workers).map(|_| Core::default()).collect(),
+            cores: (0..workers).map(|_| Core::with_queue(q.build())).collect(),
             busy_s: 0.0,
             served: 0,
         }
@@ -275,9 +379,11 @@ pub struct SchedCtx<'a> {
     /// (SLO-aware routing needs the class price, not the mix average).
     pub host_class_s: [f64; RequestClass::COUNT],
     pub dpu_class_s: [f64; RequestClass::COUNT],
-    /// Batch linger budget on the DPU side (0 when batching is off) —
-    /// part of the DPU's ETA for SLO math.
-    pub linger_s: f64,
+    /// Per-class batch linger budget on the DPU side (`RequestClass::idx`
+    /// order, all 0 when batching is off) — part of the DPU's ETA for SLO
+    /// math. Per class because the `--linger-us auto` AIMD controller
+    /// walks each accumulator's window independently.
+    pub linger_class_s: [f64; RequestClass::COUNT],
     /// Brownout service-rate inflation per side (1.0 when healthy; a
     /// `brownout` injector window raises it, DESIGN.md §11). Folded into
     /// the ETA estimates so degradation-aware policies see it.
@@ -304,7 +410,7 @@ impl SchedCtx<'_> {
         match self.dpu {
             Some(d) => {
                 self.dpu_factor * (d.est_wait_s(self.dpu_mean_s) + self.dpu_class_s[class.idx()])
-                    + self.linger_s
+                    + self.linger_class_s[class.idx()]
             }
             None => f64::INFINITY,
         }
@@ -705,10 +811,14 @@ impl SchedulerInfo {
     pub fn build(&self, params: &SchedParams) -> Box<dyn Scheduler> {
         (self.builder)(params)
     }
+}
 
-    /// Does `s` name this scheduler (canonical or alias)?
-    pub fn matches(&self, s: &str) -> bool {
-        self.name == s || self.aliases.contains(&s)
+impl Entry for SchedulerInfo {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        self.aliases
     }
 }
 
@@ -786,19 +896,19 @@ pub const REGISTRY: &[SchedulerInfo] = &[
 
 /// Look a scheduler up by canonical name or alias.
 pub fn lookup(name: &str) -> Option<&'static SchedulerInfo> {
-    REGISTRY.iter().find(|i| i.matches(name))
+    registry::lookup(REGISTRY, name)
 }
 
 /// Canonical names, registry order.
 pub fn names() -> Vec<&'static str> {
-    REGISTRY.iter().map(|i| i.name).collect()
+    registry::names(REGISTRY)
 }
 
 /// `name1|name2|…` — generated (not hand-maintained) help text for
 /// `--policy` and the `serving` task's parameter docs.
 pub fn help_names() -> &'static str {
     static HELP: OnceLock<String> = OnceLock::new();
-    HELP.get_or_init(|| names().join("|"))
+    HELP.get_or_init(|| registry::help_names(REGISTRY))
 }
 
 #[cfg(test)]
@@ -815,6 +925,7 @@ mod tests {
             service_s: svc,
             attempt: 0,
             lost: false,
+            deadline_s: 1.0,
         }
     }
 
@@ -825,7 +936,7 @@ mod tests {
                 if k == 0 {
                     pool.cores[i].current = Some(Batch::single(job(1.0)));
                 } else {
-                    pool.cores[i].queue.push_back(Batch::single(job(1.0)));
+                    pool.cores[i].queue.push(Batch::single(job(1.0)));
                 }
             }
         }
@@ -840,7 +951,7 @@ mod tests {
             dpu_mean_s: dpu_mean,
             host_class_s: [host_mean; RequestClass::COUNT],
             dpu_class_s: [dpu_mean; RequestClass::COUNT],
-            linger_s: 0.0,
+            linger_class_s: [0.0; RequestClass::COUNT],
             host_factor: 1.0,
             dpu_factor: 1.0,
             slos_us: [1e6; RequestClass::COUNT],
@@ -948,7 +1059,7 @@ mod tests {
         // neither meets an impossible SLO → minimize ETA (host at 1.0)
         assert_eq!(s.on_arrival(IndexGet, 0.1, &c, &mut rng), PoolSel::Host);
         // linger budget counts against the DPU's ETA
-        c.linger_s = 1.5;
+        c.linger_class_s = [1.5; RequestClass::COUNT];
         assert_eq!(s.on_arrival(IndexGet, 3.0, &c, &mut rng), PoolSel::Host);
     }
 

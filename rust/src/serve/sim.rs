@@ -1,6 +1,7 @@
-//! The serving event loop: arrivals → scheduler placement → per-core FIFO
-//! service, with DPU-side batch accumulation and work stealing, driven
-//! through [`crate::sim::Engine`].
+//! The serving event loop: arrivals → scheduler placement → per-core
+//! queued service under a pluggable discipline (`fifo` | `edf`), with
+//! DPU-side batch accumulation and work stealing, driven through
+//! [`crate::sim::Engine`].
 //!
 //! Request lifecycle (DESIGN.md §7):
 //!
@@ -12,7 +13,7 @@
 //!        │                                   flush on full / on linger │
 //!        │                                             ▼               ▼
 //!        │                              pool.least_loaded_core(): idle → start,
-//!        │                              room → FIFO, over queue_cap → reject
+//!        │                              room → queue (fifo|edf), over cap → reject
 //!   Depart ◀── engine fires at start + service ◀───────┘
 //!        └─▶ own queue empty → scheduler.on_idle() may steal the
 //!            deepest queue (host may raid the DPU; re-priced by class)
@@ -48,6 +49,7 @@ use crate::util::json::Value;
 use crate::util::rng::Pcg;
 
 use super::load::Arrivals;
+use super::queue;
 use super::request::{
     mean_service_s, sample_service_s, service_split_s, ClassSlos, Mix, RequestClass, ServiceJitter,
 };
@@ -94,7 +96,22 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Batch linger deadline (µs): a partial batch flushes this long
     /// after its first member arrived (unless the scheduler extends it).
+    /// With [`Self::auto_linger`] this is only the walk's starting point.
     pub linger_us: f64,
+    /// Canonical queue-discipline name (see [`queue::REGISTRY`]): the
+    /// order each core's backlog drains in — `fifo` (default) or `edf`
+    /// (earliest member deadline first).
+    pub queue: &'static str,
+    /// One shared accumulator admitting mixed classes instead of the
+    /// default per-class accumulators. A heterogeneous batch is priced
+    /// as the largest member-class setup plus every member's marginal
+    /// over its own class setup. Opt-in (`--hetero-batch`).
+    pub hetero_batch: bool,
+    /// Feedback-controlled linger (`--linger-us auto`): each accumulator
+    /// walks its window with a deterministic AIMD loop — additive raise
+    /// on an under-full flush with deadline slack, halve the moment a
+    /// flush observes a member at/past its deadline.
+    pub auto_linger: bool,
     /// Per-attempt timeout + budgeted retry with capped exponential
     /// backoff (default: disabled — attempts never time out).
     pub retry: RetryPolicy,
@@ -137,6 +154,9 @@ impl ServeConfig {
             slos: ClassSlos::default_headroom(),
             max_batch: 1,
             linger_us: 20.0,
+            queue: queue::fifo_info().name,
+            hetero_batch: false,
+            auto_linger: false,
             retry: RetryPolicy::default(),
             faults: FaultSpec::default(),
             seed,
@@ -151,6 +171,9 @@ impl ServeConfig {
         let bad = |field: &'static str, detail: String| ConfigError::BadField { field, detail };
         if scheduler::lookup(self.scheduler).is_none() {
             return Err(ConfigError::UnknownScheduler(self.scheduler.to_string()));
+        }
+        if queue::lookup(self.queue).is_none() {
+            return Err(ConfigError::UnknownQueue(self.queue.to_string()));
         }
         if self.host_workers == 0 {
             return Err(bad("host_workers", "must be >= 1".into()));
@@ -223,6 +246,7 @@ impl ServeConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ConfigError {
     UnknownScheduler(String),
+    UnknownQueue(String),
     /// A knob is out of range; `field` names it, `detail` says why.
     BadField { field: &'static str, detail: String },
     /// The retry policy or fault spec failed its own validation.
@@ -236,6 +260,11 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "unknown scheduler {name:?} (available: {})",
                 scheduler::help_names()
+            ),
+            ConfigError::UnknownQueue(name) => write!(
+                f,
+                "unknown queue discipline {name:?} (available: {})",
+                queue::help_names()
             ),
             ConfigError::BadField { field, detail } => write!(f, "{field} {detail}"),
             ConfigError::Fault(e) => write!(f, "invalid fault/retry config: {e}"),
@@ -292,6 +321,9 @@ pub struct ServeOutcome {
     pub steals: u64,
     /// DPU batch-accumulator flushes (full + linger-expired).
     pub batches_flushed: u64,
+    /// Jobs carried by those flushes — `flushed_jobs / (batches_flushed
+    /// * max_batch)` is the flush-fullness the linger controller chases.
+    pub flushed_jobs: u64,
     /// One entry per [`RequestClass::ALL`] member, in that order.
     pub per_class: Vec<ClassOutcome>,
 }
@@ -323,9 +355,10 @@ impl ServeOutcome {
 enum Ev {
     Arrive,
     Depart { dpu_side: bool, core: usize },
-    /// Batch-linger deadline for `RequestClass::ALL[class_idx]`'s
-    /// accumulator; `gen` guards against a timer outliving its batch.
-    Linger { class_idx: usize, gen: u64 },
+    /// Batch-linger deadline for accumulator `acc_idx` (the class index,
+    /// or 0 — the shared accumulator — under `hetero_batch`); `gen`
+    /// guards against a timer outliving its batch.
+    Linger { acc_idx: usize, gen: u64 },
     /// Budgeted re-entry of a failed attempt after backoff: the logical
     /// request (original `arrived_s`) re-enters placement as `attempt`.
     Retry {
@@ -346,7 +379,8 @@ enum Ev {
     FaultEnd { idx: usize },
 }
 
-/// One per-class DPU-side batch accumulator.
+/// One DPU-side batch accumulator (per class, or one shared mixed-class
+/// accumulator under `hetero_batch`).
 #[derive(Default)]
 struct Acc {
     jobs: Vec<Job>,
@@ -372,6 +406,7 @@ struct Tally {
     class_slo_met: [u64; RequestClass::COUNT],
     steals: u64,
     batches_flushed: u64,
+    flushed_jobs: u64,
     timed_out: u64,
     shed: u64,
     retries: u64,
@@ -436,18 +471,25 @@ fn reissue(cfg: &ServeConfig, eng: &mut Engine<Ev>, tally: &mut Tally) {
     }
 }
 
-/// Cross-pool re-pricing: deterministic class-mean ratio instead of
-/// resampling — the same rule for work steals and failover drains.
+/// Cross-pool re-pricing: deterministic class-mean ratios instead of
+/// resampling — the same rule for work steals and failover drains. Each
+/// member re-prices by its own class's mean ratio; the batch total scales
+/// by the ratio of summed member-class means, which reduces to the single
+/// class ratio for a homogeneous batch.
 fn reprice_batch(b: &mut Batch, from_p: PlatformId, to_p: PlatformId) {
     if from_p == to_p {
         return;
     }
-    let class = b.class();
-    let ratio = mean_service_s(class, to_p) / mean_service_s(class, from_p);
-    b.service_s *= ratio;
-    for j in &mut b.jobs {
-        j.service_s *= ratio;
+    let mut sum_from = 0.0;
+    let mut sum_to = 0.0;
+    for j in b.jobs() {
+        sum_from += mean_service_s(j.class, from_p);
+        sum_to += mean_service_s(j.class, to_p);
     }
+    for j in b.jobs_mut() {
+        j.service_s *= mean_service_s(j.class, to_p) / mean_service_s(j.class, from_p);
+    }
+    b.scale_service(sum_to / sum_from);
 }
 
 /// Put `batch` in service on an idle core. `factor` is the side's open
@@ -467,8 +509,8 @@ fn start_batch(
 ) {
     debug_assert!(pool.cores[ci].current.is_none(), "start on a busy core");
     debug_assert!(pool.cores[ci].up, "start on a downed core");
-    batch.service_s *= factor;
-    for j in &batch.jobs {
+    batch.scale_service(factor);
+    for j in batch.jobs() {
         let wait_us = (now - j.arrived_s).max(0.0) * 1e6;
         tally.waits_us.push(wait_us);
         obs.metrics.observe("serve.wait_us", wait_us);
@@ -478,15 +520,15 @@ fn start_batch(
         if obs.tracer.is_enabled() {
             obs.tracer.span_sim(
                 "batch",
-                format!("batch:{}x{}", batch.class().name(), batch.len()),
+                format!("batch:{}x{}", batch.label(), batch.len()),
                 tid_of(dpu_side, ci),
                 now,
-                batch.service_s,
+                batch.service_s(),
                 &[("size", Value::Num(batch.len() as f64))],
             );
         }
     }
-    let svc = batch.service_s;
+    let svc = batch.service_s();
     pool.cores[ci].started_s = now;
     pool.cores[ci].current = Some(batch);
     let depart = eng.schedule_in(svc, Ev::Depart { dpu_side, core: ci });
@@ -523,13 +565,13 @@ fn admit_batch(
                 let factor = fstate.factor(dpu_side);
                 start_batch(pool, ci, batch, dpu_side, factor, now, eng, tally, obs);
             } else {
-                pool.cores[ci].queue.push_back(batch);
+                pool.cores[ci].queue.push(batch);
             }
         }
         _ => {
             // admission control: shed rather than queue unboundedly
             let mark_core = ci.unwrap_or(0);
-            for j in &batch.jobs {
+            for j in batch.jobs() {
                 if fstate.timed_out.remove(&j.id) {
                     continue; // already dispositioned at its timeout
                 }
@@ -564,12 +606,75 @@ fn admit_batch(
     );
 }
 
-/// Flush a batch accumulator onto the DPU pool: the batch costs
-/// `setup + Σ marginal_i`, amortizing the per-dispatch setup across the
-/// members ([`service_split_s`]).
+/// Amortized price of a flushed batch on `p`: the largest member-class
+/// dispatch setup plus every member's marginal over its *own* class's
+/// setup ([`service_split_s`]). For a class-homogeneous batch this is
+/// exactly the v2 rule, `setup + Σ (service − setup).max(0)`; a
+/// heterogeneous batch pays the worst setup once and class marginals on
+/// top.
+pub(crate) fn batch_service_s(jobs: &[Job], p: PlatformId) -> f64 {
+    let mut max_setup = 0.0f64;
+    let mut marginals = 0.0;
+    for j in jobs {
+        let (setup, _) = service_split_s(j.class, p);
+        max_setup = max_setup.max(setup);
+        marginals += (j.service_s - setup).max(0.0);
+    }
+    max_setup + marginals
+}
+
+/// Deterministic AIMD controller for one accumulator's linger window
+/// (`--linger-us auto`). Feedback is taken at each flush: halve the
+/// window the moment a flush observes a member at/past its deadline
+/// (the window itself is burning SLO budget), additively raise it while
+/// flushes leave the accumulator under-full with slack to spare (a
+/// longer wait would have amortized more setup), hold on a full flush.
+/// Pure sim-time arithmetic — no wall clock, no RNG — so reruns stay
+/// byte-identical.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LingerCtl {
+    cur_s: f64,
+    /// Additive raise per under-full flush: `max_s / 16`.
+    step_s: f64,
+    /// Walk ceiling — a quarter of the tightest admissible class SLO, so
+    /// the window alone can never burn most of a deadline budget.
+    max_s: f64,
+}
+
+impl LingerCtl {
+    pub(crate) fn new(init_s: f64, max_s: f64) -> LingerCtl {
+        let max_s = max_s.max(0.0);
+        LingerCtl {
+            cur_s: init_s.clamp(0.0, max_s),
+            step_s: (max_s / 16.0).max(1e-7),
+            max_s,
+        }
+    }
+
+    /// The window to arm the next linger timer with (seconds).
+    pub(crate) fn window_s(&self) -> f64 {
+        self.cur_s
+    }
+
+    /// One flush observation: `fullness` = members / max_batch at flush
+    /// time, `min_slack_s` = smallest `deadline_s - now` among the
+    /// flushed members.
+    pub(crate) fn observe_flush(&mut self, fullness: f64, min_slack_s: f64) {
+        if min_slack_s <= 0.0 {
+            self.cur_s *= 0.5;
+        } else if fullness < 1.0 {
+            self.cur_s = (self.cur_s + self.step_s).min(self.max_s);
+        }
+        // full flush with slack: the window is not binding — hold
+    }
+}
+
+/// Flush a batch accumulator onto the DPU pool, priced by
+/// [`batch_service_s`]. With `auto_linger` the flush also feeds the
+/// accumulator's [`LingerCtl`] its (fullness, slack) observation.
 fn flush_acc(
     acc: &mut Acc,
-    class: RequestClass,
+    ctl: &mut LingerCtl,
     dpu_pool: &mut Pool,
     now: f64,
     cfg: &ServeConfig,
@@ -586,18 +691,22 @@ fn flush_acc(
     }
     acc.gen += 1;
     let jobs = std::mem::take(&mut acc.jobs);
-    let (setup, _) = service_split_s(class, dpu_pool.platform);
-    let service_s = setup
-        + jobs
+    let service_s = batch_service_s(&jobs, dpu_pool.platform);
+    if cfg.auto_linger {
+        let fullness = jobs.len() as f64 / cfg.max_batch.max(1) as f64;
+        let min_slack_s = jobs
             .iter()
-            .map(|j| (j.service_s - setup).max(0.0))
-            .sum::<f64>();
+            .map(|j| j.deadline_s - now)
+            .fold(f64::INFINITY, f64::min);
+        ctl.observe_flush(fullness, min_slack_s);
+    }
     tally.batches_flushed += 1;
+    tally.flushed_jobs += jobs.len() as u64;
     obs.metrics.inc("serve.batches");
     admit_batch(
         dpu_pool,
         true,
-        Batch { jobs, service_s },
+        Batch::new(jobs, service_s),
         now,
         cfg,
         eng,
@@ -628,8 +737,11 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
     let mut rng_fault = Pcg::with_stream(cfg.seed, 0x5e7_a006);
 
     let mut sched = cfg.build_scheduler();
-    let mut host = Pool::new(PlatformId::HostEpyc, cfg.host_workers);
-    let mut dpu = cfg.dpu.map(|p| Pool::new(p, cfg.dpu_workers));
+    let qinfo = queue::lookup(cfg.queue)
+        // dpbento-lint: allow(panic-in-lib) — invariant: cfg.queue was resolved by validate() above
+        .unwrap_or_else(|| panic!("unknown queue discipline {:?}", cfg.queue));
+    let mut host = Pool::with_queue(PlatformId::HostEpyc, cfg.host_workers, qinfo);
+    let mut dpu = cfg.dpu.map(|p| Pool::with_queue(p, cfg.dpu_workers, qinfo));
 
     let host_mean = cfg.mix.mean_service_s(PlatformId::HostEpyc);
     let dpu_mean = cfg
@@ -645,8 +757,22 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
         }
     }
     let batching = cfg.max_batch > 1 && dpu.is_some();
-    let linger_s = if batching { cfg.linger_us * 1e-6 } else { 0.0 };
+    let fixed_linger_s = if batching { cfg.linger_us * 1e-6 } else { 0.0 };
     let slos_us = cfg.slos.to_us_array();
+    // One AIMD controller per accumulator, aligned with `accs` below.
+    // Consulted only under auto_linger; the per-accumulator ceiling is a
+    // quarter of the tightest class SLO that accumulator can admit (the
+    // shared hetero accumulator admits every class).
+    let tightest_slo_s = cfg.slos.tightest_us() * 1e-6;
+    let mut lingers = [LingerCtl::new(0.0, 0.0); RequestClass::COUNT];
+    for i in 0..RequestClass::COUNT {
+        let cap_s = if cfg.hetero_batch {
+            0.25 * tightest_slo_s
+        } else {
+            0.25 * slos_us[i] * 1e-6
+        };
+        lingers[i] = LingerCtl::new(fixed_linger_s, cap_s);
+    }
     let mut fstate = FaultState::new();
 
     // scheduler view of the deployment, rebuilt wherever a decision is
@@ -660,7 +786,20 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                 dpu_mean_s: dpu_mean,
                 host_class_s: host_class,
                 dpu_class_s: dpu_class,
-                linger_s,
+                linger_class_s: {
+                    let mut l = [0.0; RequestClass::COUNT];
+                    if batching {
+                        for (i, slot) in l.iter_mut().enumerate() {
+                            let ai = if cfg.hetero_batch { 0 } else { i };
+                            *slot = if cfg.auto_linger {
+                                lingers[ai].window_s()
+                            } else {
+                                fixed_linger_s
+                            };
+                        }
+                    }
+                    l
+                },
                 host_factor: fstate.host_factor,
                 dpu_factor: fstate.dpu_factor,
                 slos_us,
@@ -683,6 +822,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
         class_slo_met: [0; RequestClass::COUNT],
         steals: 0,
         batches_flushed: 0,
+        flushed_jobs: 0,
         timed_out: 0,
         shed: 0,
         retries: 0,
@@ -787,28 +927,33 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                 service_s,
                 attempt: $attempt,
                 lost,
+                // fixed across retries: the logical arrival plus the SLO
+                deadline_s: cfg.slos.deadline_s(class, $arrived_s),
             };
 
             if dpu_side && batching {
                 // accumulate; flush on full, else arm the linger timer
+                let ai = if cfg.hetero_batch { 0 } else { class.idx() };
                 {
-                    let acc = &mut accs[class.idx()];
+                    let acc = &mut accs[ai];
                     acc.jobs.push(job);
                     if acc.jobs.len() == 1 {
                         let gen = acc.gen;
+                        let window_s = if cfg.auto_linger {
+                            lingers[ai].window_s()
+                        } else {
+                            fixed_linger_s
+                        };
                         acc.timer = Some(eng.schedule_in(
-                            linger_s,
-                            Ev::Linger {
-                                class_idx: class.idx(),
-                                gen,
-                            },
+                            window_s,
+                            Ev::Linger { acc_idx: ai, gen },
                         ));
                     }
                 }
-                if accs[class.idx()].jobs.len() >= cfg.max_batch {
+                if accs[ai].jobs.len() >= cfg.max_batch {
                     flush_acc(
-                        &mut accs[class.idx()],
-                        class,
+                        &mut accs[ai],
+                        &mut lingers[ai],
                         // dpbento-lint: allow(panic-in-lib) — dpu_side is only true when the DPU pool exists
                         dpu.as_mut().expect("dpu_side implies a DPU pool"),
                         now,
@@ -900,22 +1045,26 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                 obs.metrics.inc("serve.timeouts");
                 fail_attempt!(class_idx, arrived_s, attempt);
             }
-            Ev::Linger { class_idx, gen } => {
-                let class = RequestClass::ALL[class_idx];
+            Ev::Linger { acc_idx, gen } => {
                 // stale timer (accumulator flushed since): ignore. Flushes
                 // cancel their timer, so this is purely defensive.
-                if accs[class_idx].gen != gen || accs[class_idx].jobs.is_empty() {
+                if accs[acc_idx].gen != gen || accs[acc_idx].jobs.is_empty() {
                     continue;
                 }
-                accs[class_idx].timer = None;
+                accs[acc_idx].timer = None;
+                // report the accumulator's first member's class to the
+                // hook: for a per-class accumulator that is *the* class,
+                // and the shared hetero accumulator mixes classes so the
+                // oldest (deterministic) member stands in
+                let class = accs[acc_idx].jobs[0].class;
                 let action = {
                     let c = ctx!(now);
                     sched.on_linger(class, &c)
                 };
                 match action {
                     LingerAction::Flush => flush_acc(
-                        &mut accs[class_idx],
-                        class,
+                        &mut accs[acc_idx],
+                        &mut lingers[acc_idx],
                         // dpbento-lint: allow(panic-in-lib) — linger timers are only armed on the DPU side
                         dpu.as_mut().expect("linger timers only exist with a DPU"),
                         now,
@@ -926,8 +1075,13 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                         obs,
                     ),
                     LingerAction::Extend => {
-                        accs[class_idx].timer =
-                            Some(eng.schedule_in(linger_s, Ev::Linger { class_idx, gen }));
+                        let window_s = if cfg.auto_linger {
+                            lingers[acc_idx].window_s()
+                        } else {
+                            fixed_linger_s
+                        };
+                        accs[acc_idx].timer =
+                            Some(eng.schedule_in(window_s, Ev::Linger { acc_idx, gen }));
                     }
                 }
             }
@@ -946,10 +1100,10 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                         // dpbento-lint: allow(panic-in-lib) — a Depart event is scheduled exactly when the core went busy
                         .expect("departure from an idle core");
                     pool.cores[ci].depart = None;
-                    pool.busy_s += done.service_s;
-                    let svc_start_s = now - done.service_s;
+                    pool.busy_s += done.service_s();
+                    let svc_start_s = now - done.service_s();
                     let mut finished = 0u64;
-                    for j in &done.jobs {
+                    for j in done.jobs() {
                         if fstate.timed_out.remove(&j.id) {
                             // zombie: its timeout already dispositioned the
                             // logical request — the service was wasted work
@@ -1010,7 +1164,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                                 format!("req:{} service", j.id),
                                 tid,
                                 svc_start_s,
-                                done.service_s,
+                                done.service_s(),
                                 &[],
                             );
                         }
@@ -1019,7 +1173,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                     if finished > 0 {
                         tally.last_done_s = now;
                     }
-                    if let Some(next) = pool.cores[ci].queue.pop_front() {
+                    if let Some(next) = pool.cores[ci].queue.pop() {
                         let factor = fstate.factor(dpu_side);
                         start_batch(
                             pool, ci, next, dpu_side, factor, now, &mut eng, &mut tally, obs,
@@ -1042,14 +1196,13 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                     };
                     if let Some((vp, vc)) = choice {
                         let stolen = match vp {
-                            PoolSel::Host => host
-                                .cores
-                                .get_mut(vc)
-                                .and_then(|c| c.queue.pop_front()),
+                            PoolSel::Host => {
+                                host.cores.get_mut(vc).and_then(|c| c.queue.pop())
+                            }
                             PoolSel::Dpu => dpu
                                 .as_mut()
                                 .and_then(|d| d.cores.get_mut(vc))
-                                .and_then(|c| c.queue.pop_front()),
+                                .and_then(|c| c.queue.pop()),
                         };
                         if let Some(mut b) = stolen {
                             if vp != side {
@@ -1073,7 +1226,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                             if obs.tracer.is_enabled() {
                                 obs.tracer.span_sim(
                                     "steal",
-                                    format!("steal:{}x{}", b.class().name(), b.len()),
+                                    format!("steal:{}x{}", b.label(), b.len()),
                                     tid_of(dpu_side, ci),
                                     now,
                                     0.0,
@@ -1149,7 +1302,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                                     p.busy_s += (now - p.cores[ci].started_s).max(0.0);
                                     evicted.push(cur);
                                 }
-                                while let Some(b) = p.cores[ci].queue.pop_front() {
+                                while let Some(b) = p.cores[ci].queue.pop() {
                                     evicted.push(b);
                                 }
                             }
@@ -1164,7 +1317,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                         // evicted attempts fail over to retry / terminal
                         let mut killed = 0u64;
                         for b in evicted {
-                            for j in b.jobs {
+                            for j in b.into_jobs() {
                                 killed += 1;
                                 if fstate.timed_out.remove(&j.id) {
                                     continue; // already dispositioned
@@ -1188,7 +1341,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
                                     &mut host
                                 };
                                 for core in p.cores.iter_mut() {
-                                    while let Some(b) = core.queue.pop_front() {
+                                    while let Some(b) = core.queue.pop() {
                                         drained.push(b);
                                     }
                                 }
@@ -1389,6 +1542,7 @@ pub fn run_serve(cfg: &ServeConfig, obs: &Obs) -> ServeOutcome {
         dpu_served: dpu.as_ref().map(|d| d.served).unwrap_or(0),
         steals: tally.steals,
         batches_flushed: tally.batches_flushed,
+        flushed_jobs: tally.flushed_jobs,
         per_class: RequestClass::ALL
             .iter()
             .map(|c| ClassOutcome {
@@ -1812,11 +1966,122 @@ mod tests {
         cfg.faults = FaultSpec::default();
         cfg.scheduler = "warp-speed";
         assert!(err(&cfg).contains("unknown scheduler"));
+        cfg.scheduler = "queue-aware";
+        cfg.queue = "lifo";
+        let msg = err(&cfg);
+        assert!(msg.contains("unknown queue discipline"), "{msg}");
+        assert!(msg.contains("fifo") && msg.contains("edf"), "{msg}");
     }
 
     #[test]
     #[should_panic(expected = "unknown scheduler")]
     fn unknown_scheduler_panics_at_construction() {
         let _ = ServeConfig::new(None, "warp-speed", Mix::single(RequestClass::NetRpc), 1);
+    }
+
+    #[test]
+    fn hetero_pricing_is_max_setup_plus_class_marginals() {
+        // identity check on the generalized amortization rule
+        let p = PlatformId::Bf2;
+        let mk = |id, class| {
+            let (setup, marginal) = service_split_s(class, p);
+            Job {
+                id,
+                class,
+                arrived_s: 0.0,
+                service_s: setup + marginal,
+                attempt: 0,
+                lost: false,
+                deadline_s: 1.0,
+            }
+        };
+        // homogeneous: exactly the v2 rule, setup + n * marginal
+        let homo: Vec<Job> = (0..4).map(|i| mk(i, RequestClass::IndexGet)).collect();
+        let (setup, marginal) = service_split_s(RequestClass::IndexGet, p);
+        let got = batch_service_s(&homo, p);
+        assert!((got - (setup + 4.0 * marginal)).abs() < 1e-12, "{got}");
+        // heterogeneous: worst setup paid once, class marginals on top
+        let mixed: Vec<Job> = vec![
+            mk(0, RequestClass::Analytics),
+            mk(1, RequestClass::IndexGet),
+            mk(2, RequestClass::NetRpc),
+        ];
+        let mut max_setup = 0.0f64;
+        let mut marginals = 0.0;
+        for j in &mixed {
+            let (s, m) = service_split_s(j.class, p);
+            max_setup = max_setup.max(s);
+            marginals += m;
+        }
+        let got = batch_service_s(&mixed, p);
+        assert!((got - (max_setup + marginals)).abs() < 1e-12, "{got}");
+        // mixing never prices above the sum of singleton dispatches
+        let singles: f64 = mixed.iter().map(|j| j.service_s).sum();
+        assert!(got < singles, "{got} vs {singles}");
+    }
+
+    #[test]
+    fn aimd_linger_converges_on_a_steady_workload() {
+        let max_s = 100e-6;
+        let mut ctl = LingerCtl::new(20e-6, max_s);
+        // steady under-full flushes with slack: additive walk up, capped
+        for _ in 0..200 {
+            ctl.observe_flush(0.5, 1e-3);
+        }
+        assert!((ctl.window_s() - max_s).abs() < 1e-12, "{}", ctl.window_s());
+        for _ in 0..10 {
+            ctl.observe_flush(0.5, 1e-3);
+        }
+        assert!(ctl.window_s() <= max_s, "never exceeds the ceiling");
+        // a deadline miss halves the window immediately
+        let before = ctl.window_s();
+        ctl.observe_flush(1.0, -1e-6);
+        assert!((ctl.window_s() - before * 0.5).abs() < 1e-12);
+        // full flushes with slack hold steady: converged
+        let held = ctl.window_s();
+        for _ in 0..50 {
+            ctl.observe_flush(1.0, 1e-3);
+        }
+        assert_eq!(ctl.window_s(), held, "full flush with slack holds");
+        // init clamps into [0, max]
+        assert_eq!(LingerCtl::new(1.0, max_s).window_s(), max_s);
+        assert_eq!(LingerCtl::new(-1.0, max_s).window_s(), 0.0);
+    }
+
+    #[test]
+    fn edf_hetero_auto_linger_paths_are_deterministic() {
+        // the three new axes together still produce byte-identical reruns
+        let mut cfg = ServeConfig::new(
+            Some(PlatformId::Bf2),
+            "slo-aware",
+            Mix::from_name("mixed").unwrap(),
+            23,
+        );
+        cfg.total_requests = 3000;
+        cfg.max_batch = 8;
+        cfg.queue_cap = 256;
+        cfg.queue = "edf";
+        cfg.hetero_batch = true;
+        cfg.auto_linger = true;
+        let rate = 1.2 * crate::serve::metrics::host_only_capacity_rps(&cfg);
+        cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
+        let a = plain(&cfg);
+        let b = plain(&cfg);
+        assert_eq!(a, b);
+        assert!(a.completed > 0, "{a:?}");
+        assert!(a.batches_flushed > 0, "{a:?}");
+        assert!(a.flushed_jobs >= a.batches_flushed, "{a:?}");
+        // hetero accumulator really mixes: with three classes arriving and
+        // one shared accumulator, flushes average more members than the
+        // per-class layout at the same linger/load
+        cfg.hetero_batch = false;
+        let per_class = plain(&cfg);
+        assert!(per_class.batches_flushed > 0, "{per_class:?}");
+        let mixed_fill = a.flushed_jobs as f64 / a.batches_flushed as f64;
+        let split_fill = per_class.flushed_jobs as f64 / per_class.batches_flushed as f64;
+        assert!(
+            mixed_fill >= split_fill,
+            "shared accumulator fills at least as fast: {mixed_fill} vs {split_fill}"
+        );
     }
 }

@@ -20,6 +20,7 @@ use crate::util::json::Value;
 
 use super::load::Arrivals;
 use super::metrics::{host_only_capacity_rps, point};
+use super::queue;
 use super::request::{ClassSlos, Mix};
 use super::scheduler;
 use super::sim::{run_serve, ServeConfig};
@@ -29,6 +30,12 @@ use super::sim::{run_serve, ServeConfig};
 fn policy_doc() -> &'static str {
     static DOC: OnceLock<String> = OnceLock::new();
     DOC.get_or_init(|| format!("placement scheduler: {}", scheduler::help_names()))
+}
+
+/// `queue` parameter doc, generated from the discipline registry.
+fn queue_doc() -> &'static str {
+    static DOC: OnceLock<String> = OnceLock::new();
+    DOC.get_or_init(|| format!("per-core queue discipline: {}", queue::help_names()))
 }
 
 pub struct ServingTask;
@@ -70,7 +77,17 @@ impl Task for ServingTask {
                 "DPU-side batch accumulator size (1 disables batching)",
                 "8",
             ),
-            ParamDef::new("linger_us", "batch linger deadline (µs)", "20"),
+            ParamDef::new(
+                "linger_us",
+                "batch linger deadline (µs), or \"auto\" for the AIMD controller",
+                "20",
+            ),
+            ParamDef::new("queue", queue_doc(), "\"edf\""),
+            ParamDef::new(
+                "hetero_batch",
+                "share one mixed-class DPU batch accumulator",
+                "true",
+            ),
             ParamDef::new(
                 "faults",
                 "fault scenario: KIND@SECONDS[:k=v,...][;ITEM...] (see `dpbento serve --help`)",
@@ -93,6 +110,8 @@ impl Task for ServingTask {
             "p95_lat_us",
             "p99_lat_us",
             "slo_violation_rate",
+            "deadline_miss_rate",
+            "flush_fullness",
             "rejected_frac",
             "availability",
             "timed_out_frac",
@@ -152,12 +171,28 @@ impl Task for ServingTask {
             "max_batch must be in 1..=4096"
         );
         cfg.max_batch = max_batch;
-        let linger = test.f64_or("linger_us", 20.0);
-        anyhow::ensure!(
-            linger >= 0.0 && linger.is_finite(),
-            "linger_us must be finite and >= 0"
-        );
-        cfg.linger_us = linger;
+        match test.get("linger_us") {
+            Some(v) if v.as_str() == Some("auto") => cfg.auto_linger = true,
+            other => {
+                let linger = other.and_then(Value::as_f64).unwrap_or(20.0);
+                anyhow::ensure!(
+                    linger >= 0.0 && linger.is_finite(),
+                    "linger_us must be finite and >= 0, or \"auto\""
+                );
+                cfg.linger_us = linger;
+            }
+        }
+        let queue_name = test.str_or("queue", cfg.queue);
+        let qinfo = queue::lookup(queue_name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown queue discipline '{queue_name}' (available: {})",
+                queue::help_names()
+            )
+        })?;
+        cfg.queue = qinfo.name;
+        if let Some(h) = test.get("hetero_batch").and_then(Value::as_bool) {
+            cfg.hetero_batch = h;
+        }
 
         // offered load: absolute, or relative to the host-only capacity so
         // boxes stay meaningful across workloads
@@ -217,6 +252,8 @@ impl Task for ServingTask {
             ("p95_lat_us".to_string(), p.p95_us),
             ("p99_lat_us".to_string(), p.p99_us),
             ("slo_violation_rate".to_string(), p.slo_violation_rate),
+            ("deadline_miss_rate".to_string(), p.deadline_miss_rate()),
+            ("flush_fullness".to_string(), p.flush_fullness),
             ("rejected_frac".to_string(), p.rejected_frac),
             ("availability".to_string(), p.availability),
             ("timed_out_frac".to_string(), p.timed_out_frac),
@@ -392,6 +429,15 @@ mod tests {
             .run(&mut ctx, &spec(&[("linger_us", Value::Num(-3.0))]))
             .is_err());
         assert!(t
+            .run(&mut ctx, &spec(&[("linger_us", Value::str("whenever"))]))
+            .is_err());
+        // the unknown-queue error lists the registered disciplines
+        let qerr = t
+            .run(&mut ctx, &spec(&[("queue", Value::str("lifo"))]))
+            .unwrap_err()
+            .to_string();
+        assert!(qerr.contains("edf") && qerr.contains("fifo"), "{qerr}");
+        assert!(t
             .run(&mut ctx, &spec(&[("slo_us", Value::Num(-1.0))]))
             .is_err());
         // the unknown-policy error lists what *is* available
@@ -436,6 +482,30 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("unknown fault kind"), "{err}");
+    }
+
+    #[test]
+    fn deadline_serving_params_reach_the_sim() {
+        let args = [
+            ("policy", Value::str("slo-aware")),
+            ("workload", Value::str("mixed")),
+            ("load", Value::Num(0.8)),
+            ("requests", Value::Num(2000.0)),
+            ("max_batch", Value::Num(8.0)),
+            ("queue", Value::str("edf")),
+            ("hetero_batch", Value::Bool(true)),
+            ("linger_us", Value::str("auto")),
+        ];
+        let a = run_one(PlatformId::Bf2, &args);
+        let b = run_one(PlatformId::Bf2, &args);
+        assert_eq!(a, b, "edf + hetero + auto-linger stays deterministic");
+        assert!(a["achieved_rps"] > 0.0);
+        assert!((0.0..=1.0).contains(&a["deadline_miss_rate"]), "{a:?}");
+        assert!((0.0..=1.0).contains(&a["flush_fullness"]), "{a:?}");
+        // the queue alias resolves to the same canonical run
+        let mut alias = args.to_vec();
+        alias[5] = ("queue", Value::str("deadline"));
+        assert_eq!(run_one(PlatformId::Bf2, &alias), a);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod json;
 pub mod prop;
+pub mod registry;
 pub mod rng;
 pub mod stats;
 

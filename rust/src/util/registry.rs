@@ -1,0 +1,104 @@
+//! The shared by-name registry idiom (DESIGN.md §3): several subsystems
+//! keep a `static REGISTRY: &[EntryType]` of built-ins that CLI surfaces
+//! and tasks resolve by canonical name or alias — serve schedulers,
+//! analysis lint rules, fault injectors, and serve queue disciplines.
+//! Before this module each of them re-implemented `matches`/`lookup`/
+//! `names`/`help_names` by hand (and they had started to drift: rules had
+//! no aliases, injectors spelled the key `kind`). The [`Entry`] trait is
+//! the one definition of "resolvable by name"; the free functions work
+//! over any `&[E: Entry]` slice so a registry keeps its own element type
+//! and ordering.
+
+/// One named registry entry. `name` is canonical; `aliases` are accepted
+/// on every lookup surface but never printed in generated help.
+pub trait Entry {
+    /// Canonical name (stable: printed in help text and JSON).
+    fn name(&self) -> &'static str;
+
+    /// Accepted alternate spellings. Default: none.
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// Does `s` name this entry (canonical or alias)?
+    fn matches(&self, s: &str) -> bool {
+        self.name() == s || self.aliases().contains(&s)
+    }
+}
+
+/// Resolve `name` against a registry slice (canonical or alias; first
+/// match wins, and registries keep names unique).
+pub fn lookup<'a, E: Entry>(items: &'a [E], name: &str) -> Option<&'a E> {
+    items.iter().find(|e| e.matches(name))
+}
+
+/// Canonical names in registry order.
+pub fn names<E: Entry>(items: &[E]) -> Vec<&'static str> {
+    items.iter().map(Entry::name).collect()
+}
+
+/// `name1|name2|…` — the generated usage-string form. Callers that need
+/// `&'static str` help text cache this in a `OnceLock<String>`.
+pub fn help_names<E: Entry>(items: &[E]) -> String {
+    names(items).join("|")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fake {
+        name: &'static str,
+        aliases: &'static [&'static str],
+    }
+
+    impl Entry for Fake {
+        fn name(&self) -> &'static str {
+            self.name
+        }
+        fn aliases(&self) -> &'static [&'static str] {
+            self.aliases
+        }
+    }
+
+    const REG: &[Fake] = &[
+        Fake {
+            name: "alpha",
+            aliases: &["a", "first"],
+        },
+        Fake {
+            name: "beta",
+            aliases: &[],
+        },
+    ];
+
+    #[test]
+    fn lookup_resolves_names_and_aliases() {
+        assert_eq!(lookup(REG, "alpha").map(Entry::name), Some("alpha"));
+        assert_eq!(lookup(REG, "first").map(Entry::name), Some("alpha"));
+        assert_eq!(lookup(REG, "beta").map(Entry::name), Some("beta"));
+        assert!(lookup(REG, "gamma").is_none());
+        assert!(lookup(REG, "").is_none());
+    }
+
+    #[test]
+    fn names_and_help_keep_registry_order() {
+        assert_eq!(names(REG), vec!["alpha", "beta"]);
+        assert_eq!(help_names(REG), "alpha|beta");
+        // aliases never leak into generated help
+        assert!(!help_names(REG).contains("first"));
+    }
+
+    #[test]
+    fn default_aliases_are_empty() {
+        struct Bare;
+        impl Entry for Bare {
+            fn name(&self) -> &'static str {
+                "bare"
+            }
+        }
+        assert!(Bare.aliases().is_empty());
+        assert!(Bare.matches("bare"));
+        assert!(!Bare.matches("other"));
+    }
+}

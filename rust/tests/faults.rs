@@ -10,7 +10,8 @@ use dpbento::fault::{FaultEvent, FaultSpec, Injector, Side, MAX_RETRY_BUDGET};
 use dpbento::obs::Obs;
 use dpbento::platform::PlatformId;
 use dpbento::serve::{
-    host_only_capacity_rps, run_serve, sweep_faulted, Arrivals, Mix, RequestClass, ServeConfig,
+    host_only_capacity_rps, run_serve, run_sweep, Arrivals, Mix, RequestClass, ServeConfig,
+    SweepSpec,
 };
 use dpbento::sim::Engine;
 
@@ -43,8 +44,9 @@ fn failover_beats_static_split_under_canned_dpu_failstop() {
     let rate = 0.5 * host_only_capacity_rps(&fo_cfg);
     let faults = FaultSpec::canned_dpu_failstop();
 
-    let fo = sweep_faulted(&fo_cfg, &[rate], &faults, &obs)[0].clone();
-    let split = sweep_faulted(&split_cfg, &[rate], &faults, &obs)[0].clone();
+    let spec = SweepSpec::open(&[rate]).with_faults(faults.clone());
+    let fo = run_sweep(&fo_cfg, &spec, &obs)[0].clone();
+    let split = run_sweep(&split_cfg, &spec, &obs)[0].clone();
 
     assert!(fo.faults_injected >= 1, "{fo:?}");
     assert!(split.faults_injected >= 1, "{split:?}");
@@ -70,7 +72,7 @@ fn failover_beats_static_split_under_canned_dpu_failstop() {
     );
 
     // and the comparison itself is byte-reproducible
-    let again = sweep_faulted(&fo_cfg, &[rate], &faults, &obs)[0].clone();
+    let again = run_sweep(&fo_cfg, &spec, &obs)[0].clone();
     assert_eq!(fo, again);
 }
 

@@ -3,15 +3,16 @@
 //! behaviour (latency monotone in offered load), the headline saturation
 //! ordering (dpu-only saturates before host-only), the batching
 //! throughput/latency tradeoff, per-class SLO accounting, closed-loop
-//! convergence, the scheduler-vs-scheduler goodput acceptance check, and
-//! the coordinator surface (`serving` task boxes).
+//! convergence, the scheduler-vs-scheduler goodput acceptance check, the
+//! EDF-vs-FIFO deadline acceptance check, and the coordinator surface
+//! (`serving` task boxes, including the deadline-aware knobs).
 
 use dpbento::coordinator::{run_box, BoxConfig, ExecOptions, Registry};
 use dpbento::obs::Obs;
 use dpbento::platform::PlatformId;
 use dpbento::serve::{
-    capacity_rps, host_only_capacity_rps, run_serve, scheduler, sweep, sweep_closed, Arrivals,
-    Mix, ServeConfig,
+    capacity_rps, host_only_capacity_rps, run_serve, run_sweep, scheduler, Arrivals, LoadPoint,
+    Mix, ServeConfig, SweepSpec,
 };
 
 fn base_cfg(dpu: PlatformId, sched: &str, workload: &str, seed: u64) -> ServeConfig {
@@ -23,6 +24,10 @@ fn base_cfg(dpu: PlatformId, sched: &str, workload: &str, seed: u64) -> ServeCon
     );
     cfg.total_requests = 4000;
     cfg
+}
+
+fn open_sweep(cfg: &ServeConfig, rates: &[f64], obs: &Obs) -> Vec<LoadPoint> {
+    run_sweep(cfg, &SweepSpec::open(rates), obs)
 }
 
 fn p50_us(latencies: &[f64]) -> f64 {
@@ -40,8 +45,8 @@ fn sweep_is_deterministic_under_fixed_seed_for_every_scheduler() {
         cfg.max_batch = 8;
         let host_cap = host_only_capacity_rps(&cfg);
         let rates = [0.3 * host_cap, 0.9 * host_cap];
-        let a = sweep(&cfg, &rates, &obs);
-        let b = sweep(&cfg, &rates, &obs);
+        let a = open_sweep(&cfg, &rates, &obs);
+        let b = open_sweep(&cfg, &rates, &obs);
         assert_eq!(a, b, "{} sweep must be bit-stable", info.name);
     }
 }
@@ -75,7 +80,7 @@ fn latency_monotone_nondecreasing_in_offered_load() {
         .iter()
         .map(|l| l * cap)
         .collect();
-    let points = sweep(&cfg, &rates, &obs);
+    let points = open_sweep(&cfg, &rates, &obs);
     for w in points.windows(2) {
         assert!(
             w[1].mean_us >= w[0].mean_us * 0.98,
@@ -110,8 +115,8 @@ fn dpu_only_saturates_at_lower_offered_load_than_host_only() {
         // empirically: at a load several times the DPU knee but well below
         // the host knee, dpu-only collapses while host-only keeps up
         let rate = (3.0 * dpu_cap).min(0.5 * host_cap);
-        let dpu_pt = sweep(&dpu_cfg, &[rate], &obs)[0].clone();
-        let host_pt = sweep(&host_cfg, &[rate], &obs)[0].clone();
+        let dpu_pt = open_sweep(&dpu_cfg, &[rate], &obs)[0].clone();
+        let host_pt = open_sweep(&host_cfg, &[rate], &obs)[0].clone();
         assert!(
             host_pt.achieved_rps > 1.5 * dpu_pt.achieved_rps,
             "{dpu}: host {} vs dpu {}",
@@ -137,8 +142,8 @@ fn queue_aware_frees_host_cpu_without_collapsing() {
     let qa = base_cfg(PlatformId::Bf3, "queue-aware", "index_get", 9);
     let host_only = base_cfg(PlatformId::Bf3, "host-only", "index_get", 9);
     let rate = 0.5 * capacity_rps(&host_only);
-    let qa_pt = sweep(&qa, &[rate], &obs)[0].clone();
-    let host_pt = sweep(&host_only, &[rate], &obs)[0].clone();
+    let qa_pt = open_sweep(&qa, &[rate], &obs)[0].clone();
+    let host_pt = open_sweep(&host_only, &[rate], &obs)[0].clone();
     assert_eq!(qa_pt.rejected_frac, 0.0);
     assert!(qa_pt.dpu_busy_frac > 0.0, "{qa_pt:?}");
     assert!(
@@ -228,7 +233,7 @@ fn closed_loop_throughput_scales_with_clients_until_saturation() {
         clients: 1,
         think_s: 0.0,
     };
-    let points = sweep_closed(&cfg, &[1, 4, 8, 32], &obs);
+    let points = run_sweep(&cfg, &SweepSpec::closed(&[1, 4, 8, 32]), &obs);
     assert_eq!(points.len(), 4);
     for (pt, clients) in points.iter().zip([1u32, 4, 8, 32]) {
         assert_eq!(pt.clients, Some(clients), "{pt:?}");
@@ -267,8 +272,8 @@ fn slo_aware_batching_beats_static_split_on_goodput_at_high_load() {
     slo_cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
     split_cfg.arrivals = Arrivals::OpenPoisson { rate_rps: rate };
 
-    let slo_pt = sweep(&slo_cfg, &[rate], &obs)[0].clone();
-    let split_pt = sweep(&split_cfg, &[rate], &obs)[0].clone();
+    let slo_pt = open_sweep(&slo_cfg, &[rate], &obs)[0].clone();
+    let split_pt = open_sweep(&split_cfg, &[rate], &obs)[0].clone();
     assert!(
         slo_pt.goodput_rps > 1.2 * split_pt.goodput_rps,
         "slo-aware goodput {} must beat static-split {} at {rate}/s",
@@ -282,8 +287,121 @@ fn slo_aware_batching_beats_static_split_on_goodput_at_high_load() {
         split_pt.slo_violation_rate
     );
     // and the comparison itself is reproducible
-    let again = sweep(&slo_cfg, &[rate], &obs)[0].clone();
+    let again = open_sweep(&slo_cfg, &[rate], &obs)[0].clone();
     assert_eq!(slo_pt, again);
+}
+
+#[test]
+fn edf_beats_fifo_on_goodput_and_tightest_class_misses_past_the_knee() {
+    // The acceptance check for the deadline-aware redesign. Past the
+    // analytic capacity knee a backlog forms on every core; FIFO burns
+    // it in arrival order, so tight-SLO requests age out behind loose
+    // ones, while EDF drains the earliest absolute deadline first. With
+    // SLOs chosen so the tight classes have real slack relative to one
+    // service time (reordering, not preemption, is the available lever),
+    // EDF must deliver strictly more SLO-constrained goodput and a
+    // strictly lower deadline-miss rate for the tightest class.
+    let obs = Obs::disabled();
+    let mut fifo_cfg = base_cfg(PlatformId::Bf3, "host-only", "mixed", 42);
+    fifo_cfg.total_requests = 6000;
+    // analytics gets a loose deadline (its slack absorbs the reordering);
+    // gets and RPCs are the urgent tenants EDF protects
+    fifo_cfg
+        .slos
+        .set(dpbento::serve::RequestClass::Analytics, 100_000.0);
+    fifo_cfg
+        .slos
+        .set(dpbento::serve::RequestClass::IndexGet, 2_000.0);
+    fifo_cfg
+        .slos
+        .set(dpbento::serve::RequestClass::NetRpc, 5_000.0);
+    let mut edf_cfg = fifo_cfg.clone();
+    edf_cfg.queue = "edf";
+
+    let rate = 1.3 * capacity_rps(&fifo_cfg);
+    let fifo_pt = open_sweep(&fifo_cfg, &[rate], &obs)[0].clone();
+    let edf_pt = open_sweep(&edf_cfg, &[rate], &obs)[0].clone();
+
+    assert!(
+        edf_pt.goodput_rps > fifo_pt.goodput_rps,
+        "edf goodput {} must beat fifo {} past the knee ({rate}/s)",
+        edf_pt.goodput_rps,
+        fifo_pt.goodput_rps
+    );
+    // the class with the tightest SLO is the one EDF exists to protect
+    let slos = fifo_cfg.slos.to_us_array();
+    let tight = (0..slos.len())
+        .min_by(|&a, &b| slos[a].total_cmp(&slos[b]))
+        .unwrap();
+    let f = &fifo_pt.per_class[tight];
+    let e = &edf_pt.per_class[tight];
+    assert!(
+        e.deadline_miss_rate < f.deadline_miss_rate,
+        "tightest class must miss strictly fewer deadlines under edf: {} vs {}",
+        e.deadline_miss_rate,
+        f.deadline_miss_rate
+    );
+    // and the comparison itself is byte-reproducible
+    assert_eq!(open_sweep(&edf_cfg, &[rate], &obs)[0], edf_pt);
+}
+
+#[test]
+fn edf_hetero_auto_linger_box_is_deterministic_under_the_parallel_executor() {
+    // the deadline-aware paths (EDF queue, shared mixed-class
+    // accumulator, AIMD linger) through the coordinator cross-product,
+    // with work stealing in the policy list — serial and parallel
+    // executors must produce identical records
+    let box_json = r#"{
+      "name": "deadline_matrix",
+      "platforms": ["bf2", "bf3"],
+      "seed": 77,
+      "tasks": [{
+        "task": "serving",
+        "params": {
+          "policy": ["work-steal", "slo-aware"],
+          "workload": ["mixed"],
+          "load": [1.1],
+          "max_batch": [8],
+          "queue": ["edf"],
+          "hetero_batch": [true],
+          "linger_us": ["auto"],
+          "requests": [1200]
+        },
+        "metrics": ["achieved_rps", "goodput_rps", "deadline_miss_rate",
+                     "flush_fullness"]
+      }]
+    }"#;
+    let cfg = BoxConfig::parse(box_json).unwrap();
+    let registry = Registry::builtin();
+    let a = run_box(&registry, &cfg, &ExecOptions::default()).unwrap();
+    assert_eq!(a.failure_count(), 0, "{}", a.render());
+    for t in &a.tasks {
+        assert_eq!(t.records.len(), 2, "{}", t.platform);
+        for rec in &t.records {
+            assert!(rec.result["achieved_rps"] > 0.0);
+            let miss = rec.result["deadline_miss_rate"];
+            assert!((0.0..=1.0).contains(&miss), "{rec:?}");
+            let fill = rec.result["flush_fullness"];
+            assert!((0.0..=1.0).contains(&fill), "{rec:?}");
+        }
+    }
+    let par = run_box(
+        &registry,
+        &cfg,
+        &ExecOptions {
+            parallel: true,
+            ..ExecOptions::default()
+        },
+    )
+    .unwrap();
+    let strip_logs = |r: &dpbento::coordinator::BoxReport| {
+        r.tasks
+            .iter()
+            .flat_map(|t| t.records.iter())
+            .map(|rec| format!("{:?}{:?}", rec.spec, rec.result))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(strip_logs(&a), strip_logs(&par));
 }
 
 #[test]
